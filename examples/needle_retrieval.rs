@@ -1,0 +1,74 @@
+//! Needle retrieval: the information-loss demonstration from the
+//! paper's introduction. A key/value binding is planted deep in the
+//! context; the probe at the end repeats the binding prefix
+//! (`<<k17=`) and we measure the teacher-forced log-likelihood of the
+//! correct value bytes. StreamingLLM evicts the binding once the
+//! depth exceeds its window (likelihood collapses to the ~uniform
+//! digit prior); Radar's segment search retrieves it.
+//!
+//!   cargo run --release --offline --example needle_retrieval
+
+use radar_serve::config::{ArtifactPaths, PolicyKind, ServingConfig};
+use radar_serve::engine::{Engine, GenRequest};
+use radar_serve::model::tokenizer;
+use radar_serve::runtime::Runtime;
+use radar_serve::workload::make_needle;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let paths = ArtifactPaths::new("artifacts", "sm");
+    let rt = Arc::new(Runtime::load(paths.clone())?);
+    // Clean filler (drill-style words, no competing <<k=v>> bindings).
+    let mut filler = Vec::new();
+    let words = ["so ", "then ", "and ", "yet ", "while ", "for "];
+    let mut i = 0usize;
+    while filler.len() < 8192 {
+        filler.extend_from_slice(words[i % words.len()].as_bytes());
+        i = i.wrapping_mul(31).wrapping_add(7);
+    }
+    let total_len = 448usize; // inside the native context
+    let depths = [64usize, 128, 192, 256, 320];
+    let policies =
+        [PolicyKind::Streaming, PolicyKind::H2O, PolicyKind::Radar, PolicyKind::Vanilla];
+    let trials = 6;
+
+    println!(
+        "needle answer log-likelihood (nats/byte; higher = retrieved).\n\
+         context {total_len} bytes, {trials} trials; uniform-digit floor ~ -5.5\n"
+    );
+    print!("{:<12}", "depth-back");
+    for p in policies {
+        print!(" {:>10}", p.name());
+    }
+    println!();
+
+    for depth in depths {
+        print!("{:<12}", depth);
+        for policy in policies {
+            let mut lp_sum = 0.0;
+            let mut lp_n = 0usize;
+            for trial in 0..trials {
+                let needle = make_needle(&filler, total_len, depth, 100 + trial);
+                let mut cfg = ServingConfig::default();
+                cfg.policy = policy;
+                cfg.window = 32; // small window: the needle falls outside
+                cfg.budget = 32;
+                let mut engine = Engine::new(rt.clone(), cfg)?;
+                let prompt = tokenizer::encode_bytes(&needle.prompt);
+                let answer = tokenizer::encode(&needle.answer);
+                let id = engine.add(GenRequest::teacher_forced(prompt, answer))?;
+                let results = engine.run_to_completion()?;
+                let res = results.into_iter().find(|r| r.id == id).unwrap();
+                lp_sum += res.logprobs.iter().sum::<f64>();
+                lp_n += res.logprobs.len();
+            }
+            print!(" {:>10.2}", lp_sum / lp_n as f64);
+        }
+        println!();
+    }
+    println!(
+        "\nexpected shape: radar tracks vanilla at every depth; streaming\n\
+         collapses once depth-back exceeds window+budget (~64); h2o between."
+    );
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Quickstart: load a model, serve one request with Radar, print the
+//! completion and timing. Run after `make artifacts`:
+//!
+//!   cargo run --release --offline --example quickstart
+
+use radar_serve::config::{ArtifactPaths, PolicyKind, ServingConfig};
+use radar_serve::engine::{Engine, GenRequest};
+use radar_serve::model::tokenizer;
+use radar_serve::runtime::Runtime;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT artifact set (HLO text + weights) onto PJRT CPU.
+    let rt = Arc::new(Runtime::load(ArtifactPaths::new("artifacts", "sm"))?);
+
+    // 2. Configure serving with the paper's method.
+    let mut cfg = ServingConfig::default();
+    cfg.policy = PolicyKind::Radar; // top-k segment retrieval (Alg. 1)
+    cfg.radar_k = 8;                // segments per query
+    let mut engine = Engine::new(rt, cfg)?;
+
+    // 3. Serve a request.
+    let prompt = "the stream carries old light towards dawn. ";
+    let id = engine.add(GenRequest::new(tokenizer::encode(prompt), 48))?;
+    let results = engine.run_to_completion()?;
+    let res = results.into_iter().find(|r| r.id == id).unwrap();
+
+    println!("prompt: {prompt}");
+    println!("completion: {}", tokenizer::decode(&res.tokens));
+    println!(
+        "{} tokens | prefill {:.1} ms | decode {:.1} ms | {:.0} tok/s",
+        res.logprobs.len(),
+        res.prefill_ms,
+        res.decode_ms,
+        res.logprobs.len() as f64 / (res.decode_ms / 1e3).max(1e-9),
+    );
+    Ok(())
+}

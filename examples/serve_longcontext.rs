@@ -1,0 +1,133 @@
+//! End-to-end serving driver (the DESIGN.md §6 "e2e validation" run):
+//! starts the HTTP server with the Radar policy, fires a batch of
+//! concurrent long-context requests at it over real sockets, and
+//! reports latency percentiles + throughput.
+//!
+//!   cargo run --release --offline --example serve_longcontext
+
+use radar_serve::config::{ArtifactPaths, PolicyKind, ServingConfig};
+use radar_serve::engine::Engine;
+use radar_serve::runtime::Runtime;
+use radar_serve::util::json::Json;
+use radar_serve::util::stats::Series;
+use radar_serve::workload::load_corpus;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const ADDR: &str = "127.0.0.1:18477";
+
+fn post_generate(prompt: &str, max_new: usize) -> anyhow::Result<Json> {
+    let body = Json::obj()
+        .with("prompt", prompt)
+        .with("max_new_tokens", max_new)
+        .to_string();
+    let mut stream = TcpStream::connect(ADDR)?;
+    write!(
+        stream,
+        "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let json_start = resp.find("\r\n\r\n").map(|i| i + 4).unwrap_or(0);
+    Ok(Json::parse(&resp[json_start..])?)
+}
+
+fn main() -> anyhow::Result<()> {
+    // PJRT handles are !Send, so the engine + server loop stay on the
+    // MAIN thread; the client load generator runs on spawned threads
+    // and flips `stop` when done (the standard leader/worker shape).
+    let rt = Arc::new(Runtime::load(ArtifactPaths::new("artifacts", "sm"))?);
+    let corpus = load_corpus(&ArtifactPaths::new("artifacts", "sm"), "book_eval.bin")?;
+    let mut cfg = ServingConfig::default();
+    cfg.policy = PolicyKind::Radar;
+    let engine = Engine::new(rt, cfg)?;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let stop_driver = stop.clone();
+    let driver = std::thread::spawn(move || -> anyhow::Result<()> {
+        // Wait for the listener.
+        for _ in 0..100 {
+            if TcpStream::connect(ADDR).is_ok() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        // Health check.
+        let mut s = TcpStream::connect(ADDR)?;
+        write!(s, "GET /health HTTP/1.1\r\n\r\n")?;
+        let mut health = String::new();
+        s.read_to_string(&mut health)?;
+        anyhow::ensure!(health.contains("\"status\":\"ok\""), "health: {health}");
+        println!("server healthy at {ADDR}");
+
+        // Fire concurrent long-context requests from client threads.
+        let n_clients = 4;
+        let reqs_per_client = 3;
+        let prompt_len = 640usize;
+        let max_new = 32usize;
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let corpus = corpus.clone();
+                std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                    let mut lat = Vec::new();
+                    for r in 0..reqs_per_client {
+                        let off = (c * 7919 + r * 104729) % (corpus.len() - prompt_len);
+                        let prompt = String::from_utf8_lossy(&corpus[off..off + prompt_len])
+                            .into_owned();
+                        let t = std::time::Instant::now();
+                        let resp = post_generate(&prompt, max_new)?;
+                        let el = t.elapsed().as_secs_f64();
+                        anyhow::ensure!(
+                            resp.get("tokens").and_then(Json::as_usize) == Some(max_new),
+                            "bad response: {resp}"
+                        );
+                        lat.push(el);
+                    }
+                    Ok(lat)
+                })
+            })
+            .collect();
+        let mut lat = Series::new();
+        let mut n_ok = 0;
+        for h in handles {
+            for l in h.join().unwrap()? {
+                lat.push(l * 1e3);
+                n_ok += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{n_ok} requests ({prompt_len} prompt bytes, {max_new} new tokens each) in {wall:.1}s"
+        );
+        println!(
+            "request latency ms: mean {:.0}  p50 {:.0}  p99 {:.0}",
+            lat.mean(),
+            lat.p50(),
+            lat.p99()
+        );
+        println!(
+            "throughput: {:.2} req/s, {:.1} generated tok/s",
+            n_ok as f64 / wall,
+            (n_ok * max_new) as f64 / wall
+        );
+
+        // Metrics endpoint.
+        let mut s = TcpStream::connect(ADDR)?;
+        write!(s, "GET /metrics HTTP/1.1\r\n\r\n")?;
+        let mut m = String::new();
+        s.read_to_string(&mut m)?;
+        let counters: Vec<&str> = m.lines().filter(|l| l.starts_with("counter")).collect();
+        println!("server counters: {counters:?}");
+        stop_driver.store(true, Ordering::Relaxed);
+        Ok(())
+    });
+
+    radar_serve::server::serve(engine, ADDR, stop)?;
+    driver.join().unwrap()?;
+    Ok(())
+}

@@ -1,0 +1,299 @@
+"""AOT compile path: lower every serving graph to HLO text artifacts.
+
+This is the only place python touches the serving stack; it runs at
+``make artifacts`` and never again. Outputs, per model:
+
+  artifacts/<model>/manifest.json      model config + artifact registry
+                                       + weight tensor ABI
+  artifacts/<model>/weights.npz        trained (or seeded-random) weights
+  artifacts/<model>/omega_n{N}.npz     random projection Omega (Eq. 4)
+  artifacts/<model>/decode_b{B}_s{S}_n{N}.hlo.txt
+  artifacts/<model>/prefill_t{T}_p{P}_n{N}.hlo.txt
+  artifacts/<model>/golden.npz         replay vectors for rust integration
+                                       tests (inputs + expected outputs)
+
+HLO **text** is the interchange format: the image's xla_extension 0.5.1
+rejects jax>=0.5 serialized protos (64-bit instruction ids); the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# Bucket tables (DESIGN.md §7). Decode S and prefill P are multiples of
+# the kernels' BLOCK_S=128 so the streaming grids tile exactly.
+DECODE_BUCKETS = {
+    "sm": [(1, 128), (1, 256), (1, 512), (1, 1024), (1, 2048), (1, 4096),
+           (2, 128), (2, 256), (2, 512), (2, 1024),
+           (4, 128), (4, 256), (4, 512), (4, 1024)],
+    "md": [(1, 128), (1, 256), (1, 512), (1, 1024), (1, 2048), (2, 256)],
+}
+NSWEEP = {"sm": [32, 64, 256, 512], "md": []}   # extra n variants at (B=1, S=256)
+QKV_BATCH = {"sm": [1, 2, 4], "md": [1, 2]}
+PREFILL_T = 128
+PREFILL_BUCKETS = {
+    "sm": [0, 256, 512, 1024, 2048, 4096],
+    "md": [0, 256, 512, 1024, 2048],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def weight_specs(cfg: M.ModelConfig):
+    return [_f32(shape) for _, shape in M.tensor_manifest(cfg)]
+
+
+def lower_decode(cfg: M.ModelConfig, B: int, S: int, n_feat: int) -> str:
+    fn = M.decode_step_fn(cfg, B, S, use_pallas=True)
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    specs = weight_specs(cfg) + [
+        _f32((n_feat, dh)),            # omega
+        _i32((B,)), _i32((B,)),        # tokens, pos
+        _f32((B, L, H, S, dh)),        # K
+        _f32((B, L, H, S, dh)),        # V
+        _f32((B, L, H, S)),            # mask (per layer+head)
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_qkv(cfg: M.ModelConfig, B: int, n_feat: int) -> str:
+    fn = M.qkv_fn(cfg, B, use_pallas=True)
+    d, a, dh = cfg.d_model, cfg.d_attn, cfg.d_head
+    specs = [
+        _f32((d, a)), _f32((d, a)), _f32((d, a)), _f32((d,)),  # wq wk wv ln1
+        _f32((n_feat, dh)),                                    # omega
+        _f32((B, d)), _i32((B,)),                              # x, pos
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_attn_mlp(cfg: M.ModelConfig, B: int, S: int) -> str:
+    fn = M.attn_mlp_fn(cfg, B, S, use_pallas=True)
+    d, a, dh, H, f = cfg.d_model, cfg.d_attn, cfg.d_head, cfg.n_heads, cfg.d_ffn
+    specs = [
+        _f32((a, d)), _f32((d, f)), _f32((f, d)), _f32((d,)),  # wo w1 w2 ln2
+        _f32((B, d)),                                          # x
+        _f32((B, H, dh)), _f32((B, H, dh)), _f32((B, H, dh)),  # q k v
+        _f32((B, H, S, dh)), _f32((B, H, S, dh)),              # K V
+        _f32((B, H, S)),                                       # mask (per head)
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_prefill(cfg: M.ModelConfig, T: int, P: int, n_feat: int) -> str:
+    fn = M.prefill_fn(cfg, T, P, use_pallas=True)
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    specs = weight_specs(cfg) + [
+        _f32((n_feat, dh)),            # omega
+        _i32((T,)), _i32(()),          # tokens, pos0
+        _f32((L, H, P, dh)),           # pastK
+        _f32((L, H, P, dh)),           # pastV
+        _f32((P,)),                    # past_mask
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+# ---------------------------------------------------------------------------
+# Golden replay vectors
+# ---------------------------------------------------------------------------
+
+def make_golden(cfg: M.ModelConfig, params: dict, omega: np.ndarray) -> dict:
+    """Concrete inputs + expected outputs for the smallest decode and
+    prefill buckets; the rust integration test executes the compiled
+    artifacts on these inputs and asserts allclose(1e-4)."""
+    L, H, dh, n = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.n_feat
+    B, S, T, P = 1, 128, PREFILL_T, 256
+    rng = np.random.RandomState(1234)
+    g = {}
+    # --- decode ---
+    g["dec_tokens"] = rng.randint(0, 255, (B,)).astype(np.int32)
+    g["dec_pos"] = np.array([40], np.int32)
+    g["dec_K"] = rng.randn(B, L, H, S, dh).astype(np.float32) * 0.3
+    g["dec_V"] = rng.randn(B, L, H, S, dh).astype(np.float32) * 0.3
+    mask = np.zeros((B, L, H, S), np.float32)
+    mask[..., 40:] = -1e30                     # 40 real tokens, rest padded
+    g["dec_mask"] = mask
+    weights = [np.asarray(params[nm]) for nm, _ in M.tensor_manifest(cfg)]
+    fn = M.decode_step_fn(cfg, B, S, use_pallas=True)
+    outs = fn(*weights, jnp.asarray(omega), g["dec_tokens"], g["dec_pos"],
+              g["dec_K"], g["dec_V"], g["dec_mask"])
+    for nm, o in zip(["logits", "k_new", "v_new", "feat_new", "probs"], outs):
+        g[f"dec_out_{nm}"] = np.asarray(o)
+    # --- prefill ---
+    g["pre_tokens"] = rng.randint(0, 255, (T,)).astype(np.int32)
+    g["pre_pos0"] = np.array(64, np.int32)
+    g["pre_K"] = rng.randn(L, H, P, dh).astype(np.float32) * 0.3
+    g["pre_V"] = rng.randn(L, H, P, dh).astype(np.float32) * 0.3
+    pmask = np.zeros((P,), np.float32)
+    pmask[64:] = -1e30                         # 64 real past tokens
+    g["pre_mask"] = pmask
+    pfn = M.prefill_fn(cfg, T, P, use_pallas=True)
+    pouts = pfn(*weights, jnp.asarray(omega), g["pre_tokens"], g["pre_pos0"],
+                g["pre_K"], g["pre_V"], g["pre_mask"])
+    for nm, o in zip(["logits", "k_c", "v_c", "feat_c", "colsum"], pouts):
+        g[f"pre_out_{nm}"] = np.asarray(o)
+    # --- per-layer pipeline (layer 0 weights), B=1, S=128 ---
+    d = cfg.d_model
+    g["lay_x"] = rng.randn(1, d).astype(np.float32) * 0.5
+    g["lay_pos"] = np.array([17], np.int32)
+    p0 = {k.split(".", 2)[2]: params[k] for k in params
+          if k.startswith("layers.0.")}
+    qfn = M.qkv_fn(cfg, 1, use_pallas=True)
+    qouts = qfn(p0["wq"], p0["wk"], p0["wv"], p0["ln1"], jnp.asarray(omega),
+                g["lay_x"], g["lay_pos"])
+    for nm, o in zip(["q", "k", "v", "phi_q", "phi_k"], qouts):
+        g[f"lay_out_{nm}"] = np.asarray(o)
+    g["lay_K"] = g["dec_K"][0, 0][None]                    # [1,H,S,dh]
+    g["lay_V"] = g["dec_V"][0, 0][None]
+    afn = M.attn_mlp_fn(cfg, 1, S, use_pallas=True)
+    aouts = afn(p0["wo"], p0["w1"], p0["w2"], p0["ln2"],
+                g["lay_x"], qouts[0], qouts[1], qouts[2],
+                g["lay_K"], g["lay_V"], g["dec_mask"][:, 0])  # [1,H,S]
+    g["lay_out_x"] = np.asarray(aouts[0])
+    g["lay_out_probs"] = np.asarray(aouts[1])
+    # --- embed + head (implemented rust-side; verified against these) ---
+    g["head_x"] = rng.randn(2, d).astype(np.float32) * 0.5
+    xe = params["emb"][jnp.asarray([5, 250])]
+    g["emb_out"] = np.asarray(xe)
+    xf = M.rmsnorm(jnp.asarray(g["head_x"]), params["ln_f"], cfg.norm_eps)
+    g["head_out_logits"] = np.asarray(xf @ params["emb"].T)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def build_model(model_name: str, out_root: str, skip_hlo: bool = False,
+                golden_only: bool = False) -> None:
+    cfg = M.CONFIGS[model_name]
+    out = os.path.join(out_root, model_name)
+    os.makedirs(out, exist_ok=True)
+
+    # Weights: prefer a trained checkpoint; else deterministic random init
+    # (training then overwrites + re-goldens).
+    wpath = os.path.join(out, "weights.npz")
+    if os.path.exists(wpath):
+        loaded = np.load(wpath)
+        params = {k: jnp.asarray(loaded[k]) for k in loaded.files}
+        print(f"[{model_name}] loaded weights from {wpath}")
+    else:
+        params = M.init_params(cfg, seed=0)
+        np.savez(wpath, **{k: np.asarray(v) for k, v in params.items()})
+        print(f"[{model_name}] wrote seeded-random weights to {wpath}")
+
+    n_feats = sorted({cfg.n_feat, *NSWEEP[model_name]})
+    omegas = {}
+    for n in n_feats:
+        omegas[n] = M.make_omega(cfg, n, seed=42)
+        np.savez(os.path.join(out, f"omega_n{n}.npz"), omega=omegas[n])
+
+    golden = make_golden(cfg, params, omegas[cfg.n_feat])
+    np.savez(os.path.join(out, "golden.npz"), **golden)
+    print(f"[{model_name}] wrote golden replay vectors")
+    if golden_only:
+        return
+
+    artifacts = []
+    if not skip_hlo:
+        for (B, S) in DECODE_BUCKETS[model_name]:
+            name = f"decode_b{B}_s{S}_n{cfg.n_feat}"
+            t0 = time.time()
+            text = lower_decode(cfg, B, S, cfg.n_feat)
+            open(os.path.join(out, name + ".hlo.txt"), "w").write(text)
+            artifacts.append({"name": name, "kind": "decode", "B": B, "S": S,
+                              "n": cfg.n_feat})
+            print(f"[{model_name}] {name}: {len(text)//1024} KiB "
+                  f"({time.time()-t0:.1f}s)")
+        for n in NSWEEP[model_name]:
+            B, S = 1, 256
+            name = f"decode_b{B}_s{S}_n{n}"
+            text = lower_decode(cfg, B, S, n)
+            open(os.path.join(out, name + ".hlo.txt"), "w").write(text)
+            artifacts.append({"name": name, "kind": "decode", "B": B, "S": S,
+                              "n": n})
+            print(f"[{model_name}] {name} done")
+        for B in QKV_BATCH[model_name]:
+            for n in sorted({cfg.n_feat, *NSWEEP[model_name]}):
+                name = f"qkv_b{B}_n{n}"
+                text = lower_qkv(cfg, B, n)
+                open(os.path.join(out, name + ".hlo.txt"), "w").write(text)
+                artifacts.append({"name": name, "kind": "qkv", "B": B, "n": n})
+            for (BB, S) in DECODE_BUCKETS[model_name]:
+                if BB != B:
+                    continue
+                name = f"attnmlp_b{B}_s{S}"
+                text = lower_attn_mlp(cfg, B, S)
+                open(os.path.join(out, name + ".hlo.txt"), "w").write(text)
+                artifacts.append({"name": name, "kind": "attn_mlp",
+                                  "B": B, "S": S, "n": cfg.n_feat})
+            print(f"[{model_name}] per-layer artifacts for B={B} done")
+        for n in NSWEEP[model_name]:
+            # The n-sweep (Fig. 4) also needs prefill at matching n
+            # (cache features are n-dimensional); short buckets suffice.
+            for P in [0, 256]:
+                name = f"prefill_t{PREFILL_T}_p{P}_n{n}"
+                text = lower_prefill(cfg, PREFILL_T, P, n)
+                open(os.path.join(out, name + ".hlo.txt"), "w").write(text)
+                artifacts.append({"name": name, "kind": "prefill",
+                                  "T": PREFILL_T, "P": P, "n": n})
+        for P in PREFILL_BUCKETS[model_name]:
+            name = f"prefill_t{PREFILL_T}_p{P}_n{cfg.n_feat}"
+            t0 = time.time()
+            text = lower_prefill(cfg, PREFILL_T, P, cfg.n_feat)
+            open(os.path.join(out, name + ".hlo.txt"), "w").write(text)
+            artifacts.append({"name": name, "kind": "prefill",
+                              "T": PREFILL_T, "P": P, "n": cfg.n_feat})
+            print(f"[{model_name}] {name}: {len(text)//1024} KiB "
+                  f"({time.time()-t0:.1f}s)")
+
+    manifest = {
+        "config": M.config_dict(cfg),
+        "tensors": [{"name": nm, "shape": list(sh)}
+                    for nm, sh in M.tensor_manifest(cfg)],
+        "artifacts": artifacts,
+        "prefill_chunk": PREFILL_T,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{model_name}] manifest written ({len(artifacts)} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="sm,md")
+    ap.add_argument("--golden-only", action="store_true",
+                    help="refresh weights+golden without re-lowering HLO")
+    args = ap.parse_args()
+    for m in args.models.split(","):
+        build_model(m, args.out, golden_only=args.golden_only)
+
+
+if __name__ == "__main__":
+    main()

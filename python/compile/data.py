@@ -1,0 +1,239 @@
+"""Synthetic corpora with planted long-range dependencies.
+
+The paper evaluates on PG-19 (books) and The Stack (code). Offline, we
+substitute deterministic synthetic corpora that preserve the property the
+experiments actually probe: *sparse, genuinely long-range attention*.
+
+Two generators:
+
+- ``book_text``  — pseudo-English prose from a seeded syllable Markov
+  model, with planted key/value *recall spans*: a definition
+  ``<<k17:v83>>`` appears, and 50-400 bytes later the probe ``<<k17?>>``
+  must be answered with ``v83``. A trained model resolves the probe only
+  by attending back to the definition — exactly the signal that
+  eviction-based baselines (StreamingLLM/H2O/SnapKV) destroy and Radar's
+  segment retrieval preserves.
+- ``code_text``  — code-like text: function definitions with numeric
+  bodies and later call sites that repeat the definition's result,
+  plus nested bracket structure.
+
+Everything is byte-level (vocab = 256) and reproducible from a seed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+class SplitMix64:
+    """Tiny deterministic PRNG (same algorithm as the rust side)."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = seed & self.MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return (z ^ (z >> 31)) & self.MASK
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n)."""
+        return self.next_u64() % n
+
+    def choice(self, seq):
+        return seq[self.below(len(seq))]
+
+
+# ---------------------------------------------------------------------------
+# Pseudo-English prose
+# ---------------------------------------------------------------------------
+
+_ONSETS = ["b", "br", "c", "ch", "d", "dr", "f", "fl", "g", "gr", "h", "j",
+           "k", "l", "m", "n", "p", "pl", "qu", "r", "s", "sh", "st", "t",
+           "th", "tr", "v", "w"]
+_NUCLEI = ["a", "e", "i", "o", "u", "ai", "ea", "ou", "oo"]
+_CODAS = ["", "", "n", "r", "s", "t", "l", "m", "nd", "st", "ck", "sh"]
+
+
+def _make_lexicon(rng: SplitMix64, n_words: int) -> list[str]:
+    words = set()
+    while len(words) < n_words:
+        n_syll = 1 + rng.below(3)
+        w = "".join(
+            rng.choice(_ONSETS) + rng.choice(_NUCLEI) + rng.choice(_CODAS)
+            for _ in range(n_syll)
+        )
+        if 2 <= len(w) <= 12:
+            words.add(w)
+    return sorted(words)
+
+
+def recall_drills(n_bytes: int, seed: int = 5, n_keys: int = 64,
+                  n_vals: int = 64, max_dist: int = 350) -> bytes:
+    """Dense key/value recall practice: bindings followed by probes at
+    controlled distances — the curriculum that teaches the induction
+    behaviour the needle/LongBench-S evaluations probe."""
+    rng = SplitMix64(seed)
+    out = bytearray()
+    live: list[tuple[str, str]] = []
+    fill_words = ["so", "then", "and", "yet", "while", "for"]
+    while len(out) < n_bytes:
+        r = rng.below(10)
+        if r < 4 or not live:
+            k = f"k{rng.below(n_keys):02d}"
+            v = f"v{rng.below(n_vals):02d}"
+            out += f"<<{k}={v}>> ".encode()
+            live.append((k, v))
+            if len(live) > 6:
+                live.pop(0)
+        elif r < 8:
+            k, v = live[rng.below(len(live))]
+            out += f"<<{k}={v}>> ".encode()
+        else:
+            for _ in range(rng.below(max_dist // 8) + 2):
+                out += fill_words[rng.below(6)].encode() + b" "
+    return bytes(out[:n_bytes])
+
+
+def book_text(
+    n_bytes: int,
+    seed: int = 7,
+    recall_every: int = 100,
+    recall_min_dist: int = 40,
+    recall_max_dist: int = 350,
+    n_keys: int = 64,
+    n_vals: int = 64,
+) -> bytes:
+    """Prose with planted ``<<kNN:vMM>> ... <<kNN?>>vMM`` recall spans."""
+    rng = SplitMix64(seed)
+    lex = _make_lexicon(rng, 400)
+    # Bigram chain over the lexicon: each word gets a small successor set,
+    # giving locally coherent (learnable) statistics.
+    succ = {
+        w: [rng.choice(lex) for _ in range(4)]
+        for w in lex
+    }
+    out = bytearray()
+    pending: list[tuple[int, str, str]] = []  # (emit_at, key, val)
+    word = rng.choice(lex)
+    sent_len = 0
+    since_recall = 0
+    while len(out) < n_bytes:
+        # Emit any due probe spans: the binding string recurs VERBATIM
+        # ("<<k17=v83>>"), so resolving the value is an exact-prefix
+        # induction (attend to the previous occurrence, copy).
+        while pending and pending[0][0] <= len(out):
+            _, k, v = pending.pop(0)
+            out += f"<<{k}={v}>> ".encode()
+        if since_recall >= recall_every and len(pending) < 8:
+            # Never rebind a key with an outstanding probe: probes must be
+            # resolvable from the *most recent* preceding definition.
+            busy = {k for _, k, _ in pending}
+            k = f"k{rng.below(n_keys):02d}"
+            while k in busy:
+                k = f"k{rng.below(n_keys):02d}"
+            v = f"v{rng.below(n_vals):02d}"
+            out += f"<<{k}={v}>> ".encode()
+            dist = recall_min_dist + rng.below(recall_max_dist - recall_min_dist)
+            pending.append((len(out) + dist, k, v))
+            pending.sort()
+            since_recall = 0
+            continue
+        w = word
+        out += w.encode()
+        sent_len += len(w) + 1
+        since_recall += len(w) + 1
+        if sent_len > 40 + rng.below(40):
+            out += b". "
+            word = rng.choice(lex)
+            sent_len = 0
+        else:
+            out += b" "
+            word = rng.choice(succ[w])
+    return bytes(out[:n_bytes])
+
+
+# ---------------------------------------------------------------------------
+# Code-like text
+# ---------------------------------------------------------------------------
+
+def code_text(n_bytes: int, seed: int = 13) -> bytes:
+    """Code-like corpus: defs bind names to constants; later call sites
+    must reproduce the bound constant (long-range symbol resolution)."""
+    rng = SplitMix64(seed)
+    out = bytearray()
+    defs: list[tuple[str, int]] = []
+    while len(out) < n_bytes:
+        r = rng.below(10)
+        if r < 3 or not defs:
+            name = f"fn_{rng.below(90):02d}"
+            val = rng.below(90)
+            body = " + ".join(str(rng.below(9)) for _ in range(1 + rng.below(3)))
+            out += f"def {name}(x):\n    y = {body}\n    return {val}\n".encode()
+            defs.append((name, val))
+            if len(defs) > 24:
+                defs.pop(0)
+        elif r < 7:
+            # Call site: the "comment" repeats the def's return value —
+            # resolvable only by attending back to the definition.
+            name, val = defs[rng.below(len(defs))]
+            out += f"z = {name}(7)  # -> {val}\n".encode()
+        else:
+            depth = 1 + rng.below(4)
+            inner = str(rng.below(100))
+            expr = "[" * depth + inner + "]" * depth
+            out += f"lst = {expr}\n".encode()
+    return bytes(out[:n_bytes])
+
+
+# ---------------------------------------------------------------------------
+# Training stream
+# ---------------------------------------------------------------------------
+
+def training_corpus(n_bytes: int, seed: int = 3) -> bytes:
+    """Mixture used for LM training: 50% book, 20% code, 30% recall
+    drills, interleaved in 2 KiB chunks so every style appears within
+    every training window. The drill share is what makes the tiny model
+    learn the induction/copy behaviour the serving evaluations probe."""
+    book = book_text(int(n_bytes * 0.5) + 4096, seed=seed)
+    code = code_text(int(n_bytes * 0.2) + 4096, seed=seed + 1)
+    drill = recall_drills(int(n_bytes * 0.3) + 4096, seed=seed + 4)
+    out = bytearray()
+    bi = ci = di = 0
+    chunk = 2048
+    rng = SplitMix64(seed + 2)
+    while len(out) < n_bytes:
+        r = rng.below(10)
+        if r < 5:
+            out += book[bi : bi + chunk]
+            bi += chunk
+        elif r < 7:
+            out += code[ci : ci + chunk]
+            ci += chunk
+        else:
+            out += drill[di : di + chunk]
+            di += chunk
+    return bytes(out[:n_bytes])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Dump evaluation corpora")
+    ap.add_argument("--out", default="../artifacts/corpus")
+    ap.add_argument("--book-bytes", type=int, default=16384)
+    ap.add_argument("--code-bytes", type=int, default=16384)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "book_eval.bin"), "wb") as f:
+        f.write(book_text(args.book_bytes, seed=101))
+    with open(os.path.join(args.out, "code_eval.bin"), "wb") as f:
+        f.write(code_text(args.code_bytes, seed=102))
+    print(f"wrote corpora to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

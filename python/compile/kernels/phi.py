@@ -1,0 +1,56 @@
+"""Pallas kernel: positive random features (Eq. 4).
+
+Computes phi(k) for a batch of key vectors against the shared random
+matrix Omega. The grid tiles the token axis; each program instance
+handles one block of BLOCK_M tokens and the full feature width n
+(n <= 256 here; on a real TPU n would additionally be tiled to the
+128-lane VPU width — the BlockSpec already expresses the HBM->VMEM
+schedule for the token axis, which is the long one).
+
+VMEM footprint per instance (f32): BLOCK_M*d + n*d + BLOCK_M*n
+= 128*64 + 256*64 + 128*256 ≈ 57k floats ≈ 224 KiB — comfortably inside
+a TPU core's ~16 MiB VMEM, leaving room for double buffering.
+MXU: the inner product k' @ Omega^T is a [128,64]x[64,n] matmul —
+MXU-shaped (multiples of the 128x128 systolic tile after padding).
+
+Must be lowered with interpret=True on this box (CPU PJRT cannot run
+Mosaic custom-calls); the same program is the TPU kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+
+
+def _phi_kernel(k_ref, omega_ref, o_ref, *, d: int, n: int):
+    # k_ref: [BLOCK_M, d]; omega_ref: [n, d]; o_ref: [BLOCK_M, n]
+    kp = k_ref[...] / jnp.sqrt(jnp.sqrt(jnp.float32(d)))
+    proj = jnp.dot(kp, omega_ref[...].T)                      # [BM, n]
+    sq = 0.5 * jnp.sum(kp * kp, axis=-1, keepdims=True)       # [BM, 1]
+    o_ref[...] = jnp.exp(proj - sq) / jnp.sqrt(jnp.float32(n))
+
+
+def phi_pallas(k: jnp.ndarray, omega: jnp.ndarray) -> jnp.ndarray:
+    """k: [M, d] (M padded to BLOCK_M internally), omega: [n, d] -> [M, n]."""
+    m, d = k.shape
+    n = omega.shape[0]
+    m_pad = (m + BLOCK_M - 1) // BLOCK_M * BLOCK_M
+    k_padded = jnp.pad(k, ((0, m_pad - m), (0, 0))) if m_pad != m else k
+    out = pl.pallas_call(
+        functools.partial(_phi_kernel, d=d, n=n),
+        grid=(m_pad // BLOCK_M,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+        interpret=True,
+    )(k_padded, omega)
+    return out[:m]

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+assert the Pallas kernels in ``phi.py`` / ``attend.py`` match these to
+float32 tolerance. They are also used directly by the training forward
+pass (the kernels' interpret-mode lowering is slower to trace/grad).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def phi_ref(k: jnp.ndarray, omega: jnp.ndarray) -> jnp.ndarray:
+    """Positive random features, Eq. 4 of the paper.
+
+    phi(k)_i = (1/sqrt(n)) * exp(omega_i . k' - ||k'||^2 / 2),
+    with k' = k / d^(1/4) (d = head dim) so that
+    E[phi(q) . phi(k)] = exp(q.k / sqrt(d)) — the softmax kernel.
+
+    k: [..., d]; omega: [n, d]  ->  [..., n]
+    """
+    d = k.shape[-1]
+    kp = k / jnp.sqrt(jnp.sqrt(jnp.float32(d)))
+    n = omega.shape[0]
+    # exp() can overflow for adversarial inputs; the paper's Lemma 6
+    # assumes bounded norms. We compute in f32 like the kernel.
+    proj = kp @ omega.T                                   # [..., n]
+    sq = 0.5 * jnp.sum(kp * kp, axis=-1, keepdims=True)   # [..., 1]
+    return jnp.exp(proj - sq) / jnp.sqrt(jnp.float32(n))
+
+
+def segment_mean_ref(feat: jnp.ndarray, c: int) -> jnp.ndarray:
+    """Eq. 5: mean-pool per-token features into segment summaries.
+
+    feat: [t, n] with t divisible by c  ->  [t//c, n]
+    """
+    t, n = feat.shape
+    return feat.reshape(t // c, c, n).mean(axis=1)
+
+
+def attend_decode_ref(
+    q: jnp.ndarray,        # [G, d]      G = flattened batch*heads
+    keys: jnp.ndarray,     # [G, S, d]   gathered (padded) cache keys
+    values: jnp.ndarray,   # [G, S, d]
+    k_self: jnp.ndarray,   # [G, d]      current token's key
+    v_self: jnp.ndarray,   # [G, d]
+    mask: jnp.ndarray,     # [G, S]      additive: 0 = keep, -inf = pad
+):
+    """Single-query attention over the gathered token set plus self.
+
+    Returns (out [G, d], probs [G, S+1]); probs[:, S] is the self token.
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s_cache = jnp.einsum("gd,gsd->gs", q, keys) * scale + mask   # [G, S]
+    s_self = jnp.sum(q * k_self, axis=-1, keepdims=True) * scale  # [G, 1]
+    scores = jnp.concatenate([s_cache, s_self], axis=-1)          # [G, S+1]
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    z = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / z
+    vals = jnp.concatenate([values, v_self[:, None, :]], axis=1)  # [G,S+1,d]
+    out = jnp.einsum("gs,gsd->gd", probs, vals)
+    return out, probs
+
+
+def attend_prefill_ref(
+    q: jnp.ndarray,         # [G, T, d]   chunk queries
+    k_past: jnp.ndarray,    # [G, P, d]
+    v_past: jnp.ndarray,    # [G, P, d]
+    k_chunk: jnp.ndarray,   # [G, T, d]
+    v_chunk: jnp.ndarray,   # [G, T, d]
+    past_mask: jnp.ndarray,  # [G, P]     additive
+):
+    """Chunked-prefill attention: each chunk query attends to all past
+    tokens (mask-padded) plus causally to the chunk itself.
+
+    Returns (out [G, T, d], colsum [G, P+T]) where colsum[j] is the total
+    normalized attention mass received by key j across the T queries —
+    the signal H2O / SnapKV consume.
+    """
+    G, T, d = q.shape
+    P = k_past.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    keys = jnp.concatenate([k_past, k_chunk], axis=1)     # [G, P+T, d]
+    vals = jnp.concatenate([v_past, v_chunk], axis=1)
+    scores = jnp.einsum("gtd,gsd->gts", q, keys) * scale  # [G, T, P+T]
+    # past mask (padding) + causal mask within the chunk
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    full_mask = jnp.concatenate(
+        [
+            jnp.broadcast_to(past_mask[:, None, :], (G, T, P)),
+            jnp.broadcast_to(jnp.where(causal, 0.0, -jnp.inf)[None], (G, T, T)),
+        ],
+        axis=-1,
+    )
+    scores = scores + full_mask
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("gts,gsd->gtd", probs, vals)
+    colsum = jnp.sum(probs, axis=1)                       # [G, P+T]
+    return out, colsum

@@ -1,0 +1,384 @@
+"""L2: the transformer decoder served by the rust coordinator.
+
+Byte-level decoder LM: RMSNorm -> attention (RoPE) -> residual ->
+RMSNorm -> GELU MLP -> residual; tied input/output embeddings.
+
+Three entry points:
+
+- ``forward``          — full-sequence causal forward (pure jnp), used
+                         for training and as the end-to-end oracle.
+- ``decode_step_fn``   — one token per sequence against a *gathered*
+                         (policy-selected, padded) KV buffer. This is
+                         the serving hot path; it calls the Pallas
+                         kernels and is AOT-lowered per (B, S) bucket.
+- ``prefill_fn``       — one 128-token chunk against past KV, lowered
+                         per past-length bucket.
+
+The weight layout (``tensor_manifest``) is the ABI shared with rust:
+rust reads ``weights.bin`` + ``manifest.json`` and uploads each tensor
+as a device-resident PJRT buffer in exactly this order.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.phi import phi_pallas
+from compile.kernels.attend import attend_decode_pallas, attend_prefill_pallas
+from compile.kernels import ref as kref
+
+VOCAB = 256
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ffn: int
+    n_feat: int          # default random-feature dim n (Omega rows)
+    max_train_len: int   # "pre-training context length" for the paper's plots
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_heads * self.d_head
+
+
+CONFIGS = {
+    # "sm" plays the paper's Llama role; "md" the Mistral role (bigger,
+    # relatively under-trained, collapses past its native context).
+    "sm": ModelConfig("sm", d_model=128, n_layers=4, n_heads=2, d_head=64,
+                      d_ffn=512, n_feat=128, max_train_len=512),
+    "md": ModelConfig("md", d_model=256, n_layers=4, n_heads=4, d_head=64,
+                      d_ffn=1024, n_feat=128, max_train_len=512),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def tensor_manifest(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Flat (name, shape) list — the rust<->python weight ABI."""
+    out: list[tuple[str, tuple[int, ...]]] = []
+    for l in range(cfg.n_layers):
+        out += [
+            (f"layers.{l}.wq", (cfg.d_model, cfg.d_attn)),
+            (f"layers.{l}.wk", (cfg.d_model, cfg.d_attn)),
+            (f"layers.{l}.wv", (cfg.d_model, cfg.d_attn)),
+            (f"layers.{l}.wo", (cfg.d_attn, cfg.d_model)),
+            (f"layers.{l}.w1", (cfg.d_model, cfg.d_ffn)),
+            (f"layers.{l}.w2", (cfg.d_ffn, cfg.d_model)),
+            (f"layers.{l}.ln1", (cfg.d_model,)),
+            (f"layers.{l}.ln2", (cfg.d_model,)),
+        ]
+    out += [("emb", (VOCAB, cfg.d_model)), ("ln_f", (cfg.d_model,))]
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in tensor_manifest(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "emb":
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+        else:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) \
+                * (1.0 / np.sqrt(fan_in))
+    return params
+
+
+def params_to_flat(params: dict, cfg: ModelConfig) -> np.ndarray:
+    return np.concatenate(
+        [np.asarray(params[n], np.float32).reshape(-1)
+         for n, _ in tensor_manifest(cfg)]
+    )
+
+
+def flat_to_params(flat: np.ndarray, cfg: ModelConfig) -> dict:
+    params, off = {}, 0
+    for name, shape in tensor_manifest(cfg):
+        size = int(np.prod(shape))
+        params[name] = jnp.asarray(flat[off:off + size].reshape(shape))
+        off += size
+    assert off == flat.size, f"weight blob size mismatch: {off} != {flat.size}"
+    return params
+
+
+def make_omega(cfg: ModelConfig, n_feat: int, seed: int = 42) -> np.ndarray:
+    """The shared random projection Omega [n, d_head] (Eq. 4).
+
+    Rows are *orthogonal* random features (Choromanski et al. §3:
+    block-orthogonal gaussian with chi-distributed row norms) — same
+    expectation as iid gaussian rows but strictly lower estimator
+    variance, which directly tightens Theorem 2's effective gap.
+    """
+    rng = np.random.RandomState(seed)
+    d = cfg.d_head
+    blocks = []
+    remaining = n_feat
+    while remaining > 0:
+        g = rng.randn(d, d)
+        q, _ = np.linalg.qr(g)
+        # Restore gaussian row norms (chi_d distributed).
+        norms = np.linalg.norm(rng.randn(d, d), axis=1)
+        blocks.append((q * norms[:, None])[: min(remaining, d)])
+        remaining -= d
+    return np.concatenate(blocks).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding, half-split (llama) convention.
+
+    x: [..., d_head]; pos: broadcastable int positions [...]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs     # [..., half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def mlp(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / oracle) — pure jnp
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: [B, T] int32 -> logits [B, T, V]. Full causal attention."""
+    B, T = tokens.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    x = params["emb"][tokens]                            # [B, T, d]
+    pos = jnp.arange(T)
+    causal = jnp.where(
+        jnp.tril(jnp.ones((T, T), bool)), 0.0, -jnp.inf
+    )
+    for l in range(cfg.n_layers):
+        p = {k.split(".", 2)[2]: v for k, v in params.items()
+             if k.startswith(f"layers.{l}.")}
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q = (h @ p["wq"]).reshape(B, T, H, dh)
+        k = (h @ p["wk"]).reshape(B, T, H, dh)
+        v = (h @ p["wv"]).reshape(B, T, H, dh)
+        q = rope(q, pos[None, :, None], cfg.rope_theta)
+        k = rope(k, pos[None, :, None], cfg.rope_theta)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) / np.sqrt(dh)
+        probs = jax.nn.softmax(scores + causal[None, None], axis=-1)
+        attn = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(B, T, H * dh)
+        x = x + attn @ p["wo"]
+        x = x + mlp(rmsnorm(x, p["ln2"], cfg.norm_eps), p["w1"], p["w2"])
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["emb"].T
+
+
+# ---------------------------------------------------------------------------
+# Decode step (the serving hot path; AOT-lowered per bucket)
+# ---------------------------------------------------------------------------
+
+def decode_step_fn(cfg: ModelConfig, B: int, S: int, use_pallas: bool = True):
+    """Returns fn(*weights, omega, tokens, pos, K, V, mask) -> tuple.
+
+    Shapes (the L2<->L3 ABI; see DESIGN.md §8):
+      tokens [B] i32, pos [B] i32,
+      K, V   [B, L, H, S, dh] f32   gathered cache (policy-selected),
+      mask   [B, L, H, S] f32       additive (0 keep / -1e30 pad) —
+                                    per-(layer, head): selections may
+                                    dedup differently per head,
+    ->
+      logits   [B, V],
+      k_new    [B, L, H, dh]   post-RoPE key of this token,
+      v_new    [B, L, H, dh],
+      feat_new [B, L, H, n]    phi_Omega(k_new)  (Eq. 4),
+      probs    [B, L, H, S+1]  attention over gathered+self (for H2O).
+    """
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    names = [n for n, _ in tensor_manifest(cfg)]
+    attend = attend_decode_pallas if use_pallas else (
+        lambda q, k, v, ks, vs, m: kref.attend_decode_ref(q, k, v, ks, vs, m)
+    )
+    phi = phi_pallas if use_pallas else kref.phi_ref
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        omega, tokens, pos, K, V, mask = args[len(names):]
+        x = params["emb"][tokens]                        # [B, d]
+        k_news, v_news, feat_news, probs_all = [], [], [], []
+        for l in range(L):
+            p = {k.split(".", 2)[2]: v for k, v in params.items()
+                 if k.startswith(f"layers.{l}.")}
+            h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+            q = (h @ p["wq"]).reshape(B, H, dh)
+            k = (h @ p["wk"]).reshape(B, H, dh)
+            v = (h @ p["wv"]).reshape(B, H, dh)
+            q = rope(q, pos[:, None], cfg.rope_theta)
+            k = rope(k, pos[:, None], cfg.rope_theta)
+            # Flatten (B, H) -> G for the kernel.
+            G = B * H
+            out, probs = attend(
+                q.reshape(G, dh),
+                K[:, l].reshape(G, S, dh),
+                V[:, l].reshape(G, S, dh),
+                k.reshape(G, dh),
+                v.reshape(G, dh),
+                mask[:, l].reshape(G, S),
+            )
+            attn = out.reshape(B, H * dh)
+            x = x + attn @ p["wo"]
+            x = x + mlp(rmsnorm(x, p["ln2"], cfg.norm_eps), p["w1"], p["w2"])
+            k_news.append(k)
+            v_news.append(v)
+            feat_news.append(phi(k.reshape(G, dh), omega).reshape(B, H, -1))
+            probs_all.append(probs.reshape(B, H, S + 1))
+        xf = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = xf @ params["emb"].T
+        return (
+            logits,
+            jnp.stack(k_news, axis=1),     # [B, L, H, dh]
+            jnp.stack(v_news, axis=1),
+            jnp.stack(feat_news, axis=1),  # [B, L, H, n]
+            jnp.stack(probs_all, axis=1),  # [B, L, H, S+1]
+        )
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (AOT-lowered per past-length bucket)
+# ---------------------------------------------------------------------------
+
+def prefill_fn(cfg: ModelConfig, T: int, P: int, use_pallas: bool = True):
+    """Returns fn(*weights, omega, tokens, pos0, pastK, pastV, past_mask).
+
+    Shapes:
+      tokens [T] i32, pos0 [] i32 (chunk start position),
+      pastK/pastV [L, H, P, dh], past_mask [P] additive,
+    ->
+      logits   [T, V],
+      k_chunk  [L, H, T, dh], v_chunk [L, H, T, dh],
+      feat_c   [L, H, T, n],
+      colsum   [L, H, P+T]  per-key attention mass (H2O / SnapKV signal).
+    """
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    names = [n for n, _ in tensor_manifest(cfg)]
+    attend = attend_prefill_pallas if use_pallas else kref.attend_prefill_ref
+    phi = phi_pallas if use_pallas else kref.phi_ref
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        omega, tokens, pos0, pastK, pastV, past_mask = args[len(names):]
+        x = params["emb"][tokens]                        # [T, d]
+        pos = pos0 + jnp.arange(T)
+        k_cs, v_cs, feat_cs, colsums = [], [], [], []
+        for l in range(L):
+            p = {k.split(".", 2)[2]: v for k, v in params.items()
+                 if k.startswith(f"layers.{l}.")}
+            h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+            q = (h @ p["wq"]).reshape(T, H, dh).transpose(1, 0, 2)  # [H,T,dh]
+            k = (h @ p["wk"]).reshape(T, H, dh).transpose(1, 0, 2)
+            v = (h @ p["wv"]).reshape(T, H, dh).transpose(1, 0, 2)
+            q = rope(q, pos[None, :], cfg.rope_theta)
+            k = rope(k, pos[None, :], cfg.rope_theta)
+            out, colsum = attend(
+                q, pastK[l], pastV[l], k, v,
+                jnp.broadcast_to(past_mask[None], (H, P)),
+            )                                            # [H,T,dh], [H,P+T]
+            attn = out.transpose(1, 0, 2).reshape(T, H * dh)
+            x = x + attn @ p["wo"]
+            x = x + mlp(rmsnorm(x, p["ln2"], cfg.norm_eps), p["w1"], p["w2"])
+            k_cs.append(k)
+            v_cs.append(v)
+            feat_cs.append(phi(k.reshape(H * T, dh), omega).reshape(H, T, -1))
+            colsums.append(colsum)
+        xf = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = xf @ params["emb"].T
+        return (
+            logits,
+            jnp.stack(k_cs),      # [L, H, T, dh]
+            jnp.stack(v_cs),
+            jnp.stack(feat_cs),   # [L, H, T, n]
+            jnp.stack(colsums),   # [L, H, P+T]
+        )
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode pipeline (the Radar path).
+#
+# Radar's segment search needs phi(q) at layer l BEFORE the layer-l KV
+# gather, so the fused one-dispatch decode graph cannot serve it. These
+# two generic layer artifacts (weights are inputs, so one compiled
+# program serves every layer) let rust interleave: qkv -> select ->
+# gather -> attn_mlp, per layer — Algorithm 1's structure.
+# ---------------------------------------------------------------------------
+
+def qkv_fn(cfg: ModelConfig, B: int, use_pallas: bool = True):
+    """fn(wq, wk, wv, ln1, omega, x [B,d], pos [B]) ->
+    (q, k, v [B,H,dh] post-RoPE, phi_q, phi_k [B,H,n])."""
+    H, dh = cfg.n_heads, cfg.d_head
+    phi = phi_pallas if use_pallas else kref.phi_ref
+
+    def fn(wq, wk, wv, ln1, omega, x, pos):
+        h = rmsnorm(x, ln1, cfg.norm_eps)
+        q = rope((h @ wq).reshape(B, H, dh), pos[:, None], cfg.rope_theta)
+        k = rope((h @ wk).reshape(B, H, dh), pos[:, None], cfg.rope_theta)
+        v = (h @ wv).reshape(B, H, dh)
+        G = B * H
+        phi_q = phi(q.reshape(G, dh), omega).reshape(B, H, -1)
+        phi_k = phi(k.reshape(G, dh), omega).reshape(B, H, -1)
+        return q, k, v, phi_q, phi_k
+
+    return fn
+
+
+def attn_mlp_fn(cfg: ModelConfig, B: int, S: int, use_pallas: bool = True):
+    """fn(wo, w1, w2, ln2, x [B,d], q,k,v [B,H,dh],
+          K,V [B,H,S,dh], mask [B,H,S]) -> (x_out [B,d], probs [B,H,S+1]).
+
+    Attention over the gathered set + self, residual, MLP block."""
+    H, dh = cfg.n_heads, cfg.d_head
+    attend = attend_decode_pallas if use_pallas else kref.attend_decode_ref
+
+    def fn(wo, w1, w2, ln2, x, q, k, v, K, V, mask):
+        G = B * H
+        out, probs = attend(
+            q.reshape(G, dh), K.reshape(G, S, dh), V.reshape(G, S, dh),
+            k.reshape(G, dh), v.reshape(G, dh),
+            mask.reshape(G, S),
+        )
+        x = x + out.reshape(B, H * dh) @ wo
+        x = x + mlp(rmsnorm(x, ln2, cfg.norm_eps), w1, w2)
+        return x, probs.reshape(B, H, S + 1)
+
+    return fn
+
+
+def config_dict(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["vocab"] = VOCAB
+    return d

@@ -1,0 +1,121 @@
+"""Build-time LM training (hand-rolled Adam — no optax offline).
+
+Trains the byte-level models on the synthetic mixture corpus
+(``data.training_corpus``), whose planted recall spans force genuinely
+long-range attention heads — the substrate the serving experiments need
+(DESIGN.md §4). Checkpoints overwrite ``artifacts/<model>/weights.npz``;
+run ``aot.py --golden-only`` afterwards to refresh the golden vectors.
+
+Python-only, build-time-only: never on the serving path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.data import training_corpus
+
+
+def cross_entropy(params, cfg, tokens):
+    """tokens: [B, T+1] -> mean next-byte CE over the window."""
+    logits = M.forward(params, cfg, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def adam_init(params):
+    zeros = lambda: {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros(), "v": zeros(), "t": jnp.int32(0)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    new_m, new_v, new_p = {}, {}, {}
+    bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+    for k in params:
+        m = b1 * state["m"][k] + (1 - b1) * grads[k]
+        v = b2 * state["v"][k] + (1 - b2) * grads[k] ** 2
+        new_m[k], new_v[k] = m, v
+        new_p[k] = params[k] - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def make_batch(corpus: np.ndarray, rng: np.random.RandomState,
+               batch: int, seq: int) -> np.ndarray:
+    starts = rng.randint(0, len(corpus) - seq - 1, size=batch)
+    return np.stack([corpus[s : s + seq + 1] for s in starts]).astype(np.int32)
+
+
+def train(model_name: str, steps: int, out_root: str, seq: int, batch: int,
+          lr_max: float, seed: int = 0, resume: bool = False) -> None:
+    cfg = M.CONFIGS[model_name]
+    out = os.path.join(out_root, model_name)
+    os.makedirs(out, exist_ok=True)
+    corpus = np.frombuffer(training_corpus(2_000_000, seed=3), np.uint8)
+    wpath = os.path.join(out, "weights.npz")
+    if resume and os.path.exists(wpath):
+        loaded = np.load(wpath)
+        params = {k: jnp.asarray(loaded[k]) for k in loaded.files}
+        print(f"[{model_name}] resumed from {wpath}")
+    else:
+        params = M.init_params(cfg, seed=seed)
+    state = adam_init(params)
+    warmup = max(steps // 20, 5)
+
+    @jax.jit
+    def step_fn(params, state, tokens, lr):
+        loss, grads = jax.value_and_grad(cross_entropy)(params, cfg, tokens)
+        params, state = adam_update(params, grads, state, lr)
+        return params, state, loss
+
+    rng = np.random.RandomState(seed + 1)
+    log, t0 = [], time.time()
+    for step in range(steps):
+        if step < warmup:
+            lr = lr_max * (step + 1) / warmup
+        else:
+            frac = (step - warmup) / max(steps - warmup, 1)
+            lr = lr_max * 0.5 * (1 + np.cos(np.pi * frac))
+        tokens = jnp.asarray(make_batch(corpus, rng, batch, seq))
+        params, state, loss = step_fn(params, state, tokens, jnp.float32(lr))
+        if step % 10 == 0 or step == steps - 1:
+            l = float(loss)
+            log.append({"step": step, "loss": l, "lr": float(lr),
+                        "sec": round(time.time() - t0, 1)})
+            print(f"[{model_name}] step {step:4d} loss {l:.4f} "
+                  f"lr {lr:.2e} ({time.time()-t0:.0f}s)", flush=True)
+    np.savez(os.path.join(out, "weights.npz"),
+             **{k: np.asarray(v) for k, v in params.items()})
+    with open(os.path.join(out, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"[{model_name}] saved weights ({time.time()-t0:.0f}s total)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="sm")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the existing checkpoint")
+    args = ap.parse_args()
+    train(args.model, args.steps, args.out, args.seq, args.batch, args.lr,
+          resume=args.resume)
+
+
+if __name__ == "__main__":
+    main()

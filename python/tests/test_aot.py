@@ -1,0 +1,64 @@
+"""AOT path smoke tests: lowering produces loadable HLO text with the
+expected entry layout, and golden vectors have the documented shapes."""
+
+import re
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import lower_decode, lower_prefill, make_golden
+
+CFG = M.CONFIGS["sm"]
+
+
+@pytest.fixture(scope="module")
+def decode_hlo():
+    return lower_decode(CFG, 1, 128, CFG.n_feat)
+
+
+def test_decode_hlo_structure(decode_hlo):
+    assert decode_hlo.startswith("HloModule")
+    assert "ENTRY" in decode_hlo
+    layout = decode_hlo.splitlines()[0]
+    # 34 weight tensors + omega + 5 runtime inputs, 5-tuple output
+    n_weights = len(M.tensor_manifest(CFG))
+    assert layout.count("f32[") >= n_weights + 5
+    assert "s32[1]" in layout                   # tokens/pos
+    assert "f32[1,4,2,128,64]" in layout        # K/V bucket
+    assert "f32[1,256]" in layout               # logits [B, V]
+    assert "f32[1,4,2,129]" in layout           # probs S+1
+
+
+def test_decode_hlo_no_custom_calls(decode_hlo):
+    """interpret=True must lower to plain HLO (no Mosaic custom-calls,
+    which the CPU PJRT client cannot execute)."""
+    assert "custom-call" not in decode_hlo or "mosaic" not in decode_hlo.lower()
+
+
+def test_prefill_hlo_structure():
+    text = lower_prefill(CFG, 128, 256, CFG.n_feat)
+    layout = text.splitlines()[0]
+    assert "s32[128]" in layout                 # chunk tokens
+    assert "f32[4,2,256,64]" in layout          # past KV bucket
+    assert "f32[4,2,384]" in layout             # colsum P+T
+
+
+def test_prefill_p0_lowerable():
+    text = lower_prefill(CFG, 128, 0, CFG.n_feat)
+    assert "ENTRY" in text
+
+
+def test_golden_shapes():
+    params = M.init_params(CFG, seed=0)
+    omega = M.make_omega(CFG, CFG.n_feat)
+    g = make_golden(CFG, params, omega)
+    L, H, dh, n = CFG.n_layers, CFG.n_heads, CFG.d_head, CFG.n_feat
+    assert g["dec_out_logits"].shape == (1, 256)
+    assert g["dec_out_k_new"].shape == (1, L, H, dh)
+    assert g["dec_out_feat_new"].shape == (1, L, H, n)
+    assert g["dec_out_probs"].shape == (1, L, H, 129)
+    assert g["pre_out_logits"].shape == (128, 256)
+    assert g["pre_out_colsum"].shape == (L, H, 384)
+    assert np.isfinite(g["dec_out_logits"]).all()
+    assert np.isfinite(g["pre_out_logits"]).all()

@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes; fixed cases cover the edges (all-padded cache,
+single block, multiple blocks, zero-length past).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    phi_ref, segment_mean_ref, attend_decode_ref, attend_prefill_ref,
+)
+from compile.kernels.phi import phi_pallas, BLOCK_M
+from compile.kernels.attend import (
+    attend_decode_pallas, attend_prefill_pallas, BLOCK_S,
+)
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# phi (Eq. 4)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    d=st.sampled_from([16, 32, 64]),
+    n=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_phi_matches_ref(m, d, n, seed):
+    rng = np.random.RandomState(seed)
+    k = _rand(rng, m, d, scale=0.5)
+    omega = _rand(rng, n, d)
+    np.testing.assert_allclose(
+        phi_pallas(k, omega), phi_ref(k, omega), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_phi_nonnegative_and_scaled():
+    rng = np.random.RandomState(0)
+    k, omega = _rand(rng, 64, 64, scale=0.3), _rand(rng, 128, 64)
+    f = np.asarray(phi_pallas(k, omega))
+    assert (f >= 0).all(), "Eq.4 features must be positive"
+
+
+def test_phi_kernel_estimates_softmax_kernel():
+    """Lemma 1: E[phi(q).phi(k)] = exp(q.k/sqrt(d)). Check the Monte-Carlo
+    estimate converges for a large n."""
+    rng = np.random.RandomState(1)
+    d, n = 32, 8192
+    q, k = _rand(rng, 1, d, scale=0.4), _rand(rng, 1, d, scale=0.4)
+    omega = _rand(rng, n, d)
+    est = float((phi_ref(q, omega) @ phi_ref(k, omega).T).reshape(()))
+    exact = float(np.exp(np.asarray(q) @ np.asarray(k).T / np.sqrt(d)).reshape(()))
+    assert abs(est - exact) / exact < 0.15, (est, exact)
+
+
+def test_phi_block_boundary():
+    """M exactly at and one over the BLOCK_M boundary."""
+    rng = np.random.RandomState(2)
+    omega = _rand(rng, 64, 32)
+    for m in (BLOCK_M, BLOCK_M + 1, 2 * BLOCK_M):
+        k = _rand(rng, m, 32, scale=0.5)
+        np.testing.assert_allclose(
+            phi_pallas(k, omega), phi_ref(k, omega), rtol=RTOL, atol=ATOL
+        )
+
+
+def test_segment_mean_ref_shape():
+    rng = np.random.RandomState(3)
+    f = _rand(rng, 12, 8)
+    s = segment_mean_ref(f, 4)
+    assert s.shape == (3, 8)
+    np.testing.assert_allclose(s[0], f[:4].mean(axis=0), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# decode attend
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    g=st.integers(1, 6),
+    nblocks=st.integers(1, 4),
+    valid=st.integers(0, 100),
+    seed=st.integers(0, 10_000),
+)
+def test_attend_decode_matches_ref(g, nblocks, valid, seed):
+    rng = np.random.RandomState(seed)
+    s_len, d = nblocks * BLOCK_S, 64
+    q, ks, vs = _rand(rng, g, d), _rand(rng, g, d), _rand(rng, g, d)
+    K, V = _rand(rng, g, s_len, d), _rand(rng, g, s_len, d)
+    mask = np.zeros((g, s_len), np.float32)
+    mask[:, min(valid, s_len):] = -1e30
+    mask = jnp.asarray(mask)
+    o1, p1 = attend_decode_pallas(q, K, V, ks, vs, mask)
+    o2, p2 = attend_decode_ref(q, K, V, ks, vs, mask)
+    np.testing.assert_allclose(o1, o2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(p1, p2, rtol=RTOL, atol=ATOL)
+
+
+def test_attend_decode_all_padded_is_self_attention():
+    """Fully-masked cache => output == v_self, probs = one-hot on self."""
+    rng = np.random.RandomState(4)
+    g, s_len, d = 2, BLOCK_S, 64
+    q, ks, vs = _rand(rng, g, d), _rand(rng, g, d), _rand(rng, g, d)
+    K, V = _rand(rng, g, s_len, d), _rand(rng, g, s_len, d)
+    mask = jnp.full((g, s_len), -1e30)
+    o, p = attend_decode_pallas(q, K, V, ks, vs, mask)
+    np.testing.assert_allclose(o, vs, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(p)[:, -1], 1.0, rtol=1e-5)
+
+
+def test_attend_decode_probs_normalized():
+    rng = np.random.RandomState(5)
+    g, s_len, d = 3, 2 * BLOCK_S, 64
+    q, ks, vs = _rand(rng, g, d), _rand(rng, g, d), _rand(rng, g, d)
+    K, V = _rand(rng, g, s_len, d), _rand(rng, g, s_len, d)
+    mask = jnp.zeros((g, s_len))
+    _, p = attend_decode_pallas(q, K, V, ks, vs, mask)
+    np.testing.assert_allclose(np.asarray(p).sum(-1), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# prefill attend
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    g=st.integers(1, 4),
+    p_blocks=st.integers(0, 3),
+    valid=st.integers(0, 200),
+    seed=st.integers(0, 10_000),
+)
+def test_attend_prefill_matches_ref(g, p_blocks, valid, seed):
+    rng = np.random.RandomState(seed)
+    t_len, d = 128, 64
+    p_len = p_blocks * BLOCK_S
+    q = _rand(rng, g, t_len, d)
+    kp, vp = _rand(rng, g, p_len, d), _rand(rng, g, p_len, d)
+    kc, vc = _rand(rng, g, t_len, d), _rand(rng, g, t_len, d)
+    pm = np.zeros((g, p_len), np.float32)
+    pm[:, min(valid, p_len):] = -1e30
+    pm = jnp.asarray(pm)
+    o1, c1 = attend_prefill_pallas(q, kp, vp, kc, vc, pm)
+    o2, c2 = attend_prefill_ref(q, kp, vp, kc, vc, pm)
+    np.testing.assert_allclose(o1, o2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(c1, c2, rtol=RTOL, atol=ATOL)
+
+
+def test_attend_prefill_causality():
+    """Changing a later chunk token must not affect earlier outputs."""
+    rng = np.random.RandomState(6)
+    g, t_len, d = 1, 128, 64
+    q = _rand(rng, g, t_len, d)
+    kc, vc = _rand(rng, g, t_len, d), _rand(rng, g, t_len, d)
+    empty = jnp.zeros((g, 0, d))
+    pm = jnp.zeros((g, 0))
+    o1, _ = attend_prefill_pallas(q, empty, empty, kc, vc, pm)
+    kc2 = kc.at[:, -1].set(99.0)
+    vc2 = vc.at[:, -1].set(99.0)
+    o2, _ = attend_prefill_pallas(q, empty, empty, kc2, vc2, pm)
+    np.testing.assert_allclose(o1[:, :-1], o2[:, :-1], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(o1[:, -1], o2[:, -1])
+
+
+def test_attend_prefill_colsum_total_mass():
+    """Column sums over all keys must total T (each query row sums to 1)."""
+    rng = np.random.RandomState(7)
+    g, t_len, p_len, d = 2, 128, 128, 64
+    q = _rand(rng, g, t_len, d)
+    kp, vp = _rand(rng, g, p_len, d), _rand(rng, g, p_len, d)
+    kc, vc = _rand(rng, g, t_len, d), _rand(rng, g, t_len, d)
+    pm = jnp.zeros((g, p_len))
+    _, cs = attend_prefill_pallas(q, kp, vp, kc, vc, pm)
+    np.testing.assert_allclose(np.asarray(cs).sum(-1), t_len, rtol=1e-4)

@@ -1,0 +1,183 @@
+"""L2 correctness: model graphs compose consistently.
+
+The critical invariant: a full-sequence causal forward must equal
+(prefill chunks) + (decode steps against the accumulated KV) — that is
+what proves rust's incremental serving math equals the oracle model.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+CFG = M.CONFIGS["sm"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_params(CFG, seed=0)
+    weights = [params[n] for n, _ in M.tensor_manifest(CFG)]
+    omega = jnp.asarray(M.make_omega(CFG, CFG.n_feat))
+    return params, weights, omega
+
+
+def _prefill(weights, omega, toks, P, pastK, pastV, pmask, pos0):
+    fn = M.prefill_fn(CFG, len(toks), P, use_pallas=True)
+    return fn(*weights, omega, jnp.asarray(toks, jnp.int32),
+              jnp.int32(pos0), pastK, pastV, pmask)
+
+
+def test_manifest_roundtrip():
+    params = M.init_params(CFG, seed=3)
+    flat = M.params_to_flat(params, CFG)
+    back = M.flat_to_params(flat, CFG)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]),
+                                      np.asarray(back[k]))
+
+
+def test_manifest_covers_all_params():
+    params = M.init_params(CFG, seed=0)
+    names = {n for n, _ in M.tensor_manifest(CFG)}
+    assert names == set(params.keys())
+
+
+def test_rope_preserves_norm():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(5, 64).astype(np.float32))
+    pos = jnp.asarray([0, 1, 7, 100, 1000])
+    y = M.rope(x, pos, CFG.rope_theta)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_relative_property():
+    """q(pos a).k(pos b) depends only on a-b (per frequency pair)."""
+    rng = np.random.RandomState(1)
+    q = jnp.asarray(rng.randn(1, 64).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, 64).astype(np.float32))
+    def dot(a, b):
+        qa = M.rope(q, jnp.asarray([a]), CFG.rope_theta)
+        kb = M.rope(k, jnp.asarray([b]), CFG.rope_theta)
+        return float(jnp.sum(qa * kb))
+    assert abs(dot(10, 3) - dot(107, 100)) < 1e-3
+    assert abs(dot(10, 3) - dot(10, 4)) > 1e-6   # but not position-blind
+
+
+def test_prefill_p0_equals_full_forward(setup):
+    params, weights, omega = setup
+    rng = np.random.RandomState(0)
+    toks = rng.randint(0, 255, 128)
+    full = M.forward(params, CFG, jnp.asarray(toks[None], jnp.int32))[0]
+    L, H, dh = CFG.n_layers, CFG.n_heads, CFG.d_head
+    outs = _prefill(weights, omega, toks, 0,
+                    jnp.zeros((L, H, 0, dh)), jnp.zeros((L, H, 0, dh)),
+                    jnp.zeros((0,)), 0)
+    np.testing.assert_allclose(outs[0], full, rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_prefill_equals_full_forward(setup):
+    """Two 128-token chunks == one 256-token causal forward."""
+    params, weights, omega = setup
+    rng = np.random.RandomState(2)
+    toks = rng.randint(0, 255, 256)
+    full = M.forward(params, CFG, jnp.asarray(toks[None], jnp.int32))[0]
+    L, H, dh = CFG.n_layers, CFG.n_heads, CFG.d_head
+    o1 = _prefill(weights, omega, toks[:128], 0,
+                  jnp.zeros((L, H, 0, dh)), jnp.zeros((L, H, 0, dh)),
+                  jnp.zeros((0,)), 0)
+    # Pad chunk-1 KV into the P=256 bucket.
+    P = 256
+    pastK = jnp.zeros((L, H, P, dh)).at[:, :, :128].set(o1[1])
+    pastV = jnp.zeros((L, H, P, dh)).at[:, :, :128].set(o1[2])
+    pmask = jnp.zeros((P,)).at[128:].set(-1e30)
+    o2 = _prefill(weights, omega, toks[128:], P, pastK, pastV, pmask, 128)
+    got = jnp.concatenate([o1[0], o2[0]])
+    np.testing.assert_allclose(got, full, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_equals_full_forward(setup):
+    """Prefill 128 then decode 3 tokens one-by-one == full forward."""
+    params, weights, omega = setup
+    rng = np.random.RandomState(3)
+    toks = rng.randint(0, 255, 131)
+    full = M.forward(params, CFG, jnp.asarray(toks[None], jnp.int32))[0]
+    L, H, dh = CFG.n_layers, CFG.n_heads, CFG.d_head
+    o1 = _prefill(weights, omega, toks[:128], 0,
+                  jnp.zeros((L, H, 0, dh)), jnp.zeros((L, H, 0, dh)),
+                  jnp.zeros((0,)), 0)
+    S = 256
+    K = np.zeros((1, L, H, S, dh), np.float32)
+    V = np.zeros((1, L, H, S, dh), np.float32)
+    K[0, :, :, :128] = np.asarray(o1[1])
+    V[0, :, :, :128] = np.asarray(o1[2])
+    dec = M.decode_step_fn(CFG, 1, S, use_pallas=True)
+    for i, t in enumerate(range(128, 131)):
+        mask = np.zeros((1, L, H, S), np.float32)
+        mask[..., t:] = -1e30
+        outs = dec(*weights, omega,
+                   jnp.asarray([toks[t]], jnp.int32),
+                   jnp.asarray([t], jnp.int32),
+                   jnp.asarray(K), jnp.asarray(V), jnp.asarray(mask))
+        np.testing.assert_allclose(
+            outs[0][0], full[t], rtol=2e-4, atol=2e-4,
+            err_msg=f"logits diverge at decode step {i}",
+        )
+        K[0, :, :, t] = np.asarray(outs[1][0])
+        V[0, :, :, t] = np.asarray(outs[2][0])
+
+
+def test_decode_feat_matches_phi_of_knew(setup):
+    from compile.kernels.ref import phi_ref
+    params, weights, omega = setup
+    L, H, dh, S = CFG.n_layers, CFG.n_heads, CFG.d_head, 128
+    dec = M.decode_step_fn(CFG, 1, S, use_pallas=True)
+    outs = dec(*weights, omega,
+               jnp.asarray([65], jnp.int32), jnp.asarray([0], jnp.int32),
+               jnp.zeros((1, L, H, S, dh)), jnp.zeros((1, L, H, S, dh)),
+               jnp.full((1, L, H, S), -1e30))
+    k_new, feat = outs[1][0], outs[3][0]          # [L,H,dh], [L,H,n]
+    want = phi_ref(k_new.reshape(-1, dh), omega).reshape(L, H, -1)
+    np.testing.assert_allclose(feat, want, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_probs_sum_to_one(setup):
+    params, weights, omega = setup
+    L, H, dh, S = CFG.n_layers, CFG.n_heads, CFG.d_head, 128
+    rng = np.random.RandomState(5)
+    K = jnp.asarray(rng.randn(1, L, H, S, dh).astype(np.float32) * 0.3)
+    V = jnp.asarray(rng.randn(1, L, H, S, dh).astype(np.float32) * 0.3)
+    dec = M.decode_step_fn(CFG, 1, S, use_pallas=True)
+    outs = dec(*weights, omega,
+               jnp.asarray([7], jnp.int32), jnp.asarray([50], jnp.int32),
+               K, V, jnp.zeros((1, L, H, S)).at[..., 50:].set(-1e30))
+    np.testing.assert_allclose(np.asarray(outs[4]).sum(-1), 1.0, rtol=1e-4)
+
+
+def test_batched_decode_rows_independent(setup):
+    """B=2 decode == two B=1 decodes (batching must not mix rows)."""
+    params, weights, omega = setup
+    L, H, dh, S = CFG.n_layers, CFG.n_heads, CFG.d_head, 128
+    rng = np.random.RandomState(6)
+    K = rng.randn(2, L, H, S, dh).astype(np.float32) * 0.3
+    V = rng.randn(2, L, H, S, dh).astype(np.float32) * 0.3
+    mask = np.zeros((2, L, H, S), np.float32)
+    mask[0, ..., 30:] = -1e30
+    mask[1, ..., 90:] = -1e30
+    toks = np.array([10, 200], np.int32)
+    pos = np.array([30, 90], np.int32)
+    dec2 = M.decode_step_fn(CFG, 2, S, use_pallas=True)
+    out2 = dec2(*weights, omega, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(K), jnp.asarray(V), jnp.asarray(mask))
+    dec1 = M.decode_step_fn(CFG, 1, S, use_pallas=True)
+    for b in range(2):
+        out1 = dec1(*weights, omega,
+                    jnp.asarray(toks[b:b+1]), jnp.asarray(pos[b:b+1]),
+                    jnp.asarray(K[b:b+1]), jnp.asarray(V[b:b+1]),
+                    jnp.asarray(mask[b:b+1]))
+        np.testing.assert_allclose(out2[0][b], out1[0][0],
+                                   rtol=1e-4, atol=1e-4)

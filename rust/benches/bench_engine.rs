@@ -1,0 +1,97 @@
+//! End-to-end decode benchmarks (Alg. 1's O(sqrt t)/step claim and the
+//! Fig. 2 second-row timing curves): per-token decode latency vs
+//! context length for vanilla vs radar vs streaming, plus batched
+//! throughput. Requires `make artifacts`.
+
+use radar_serve::config::{ArtifactPaths, PolicyKind, ServingConfig};
+use radar_serve::engine::{Engine, GenRequest};
+use radar_serve::model::tokenizer;
+use radar_serve::runtime::Runtime;
+use radar_serve::workload::load_corpus;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let paths = ArtifactPaths::new("artifacts", "sm");
+    if !paths.manifest().exists() {
+        eprintln!("skipping bench_engine: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Arc::new(Runtime::load(paths.clone())?);
+    let corpus = load_corpus(&paths, "book_eval.bin")?;
+
+    println!("\n== bench_engine: per-token decode latency vs context length ==");
+    println!(
+        "{:<12} {:>8} {:>14} {:>12}",
+        "policy", "t", "ms/token", "tok/s"
+    );
+    let lens = [512usize, 1024, 2048, 3072];
+    for policy in [PolicyKind::Vanilla, PolicyKind::Streaming, PolicyKind::Radar] {
+        for &t in &lens {
+            let mut cfg = ServingConfig::default();
+            cfg.policy = policy;
+            cfg.window = 64;
+            cfg.budget = 192;
+            let mut engine = Engine::new(rt.clone(), cfg)?;
+            // Prefill to t, then decode: 8 warmup steps (amortize
+            // lazy artifact compilation) + a measured window of 64.
+            let toks = tokenizer::encode_bytes(&corpus[..t + 73]);
+            let req = GenRequest::teacher_forced(toks[..t].to_vec(), toks[t..].to_vec());
+            let id = engine.add(req)?;
+            for _ in 0..8 {
+                engine.step()?;
+            }
+            let warm = engine.seq(id).unwrap().logprobs.len();
+            let t0 = std::time::Instant::now();
+            while !engine.active_ids().is_empty() {
+                engine.step()?;
+            }
+            let el = t0.elapsed().as_secs_f64();
+            let res = engine.remove(id).unwrap();
+            let n = (res.logprobs.len() - warm) as f64;
+            println!(
+                "{:<12} {:>8} {:>14.2} {:>12.1}",
+                policy.name(),
+                t,
+                el * 1e3 / n,
+                n / el
+            );
+        }
+    }
+
+    println!("\n== bench_engine: batched decode throughput (radar) ==");
+    println!("{:<8} {:>14} {:>12}", "batch", "ms/token/seq", "agg tok/s");
+    for b in [1usize, 2, 4] {
+        let mut cfg = ServingConfig::default();
+        cfg.policy = PolicyKind::Streaming; // fused path batches
+        cfg.max_batch = b;
+        let mut engine = Engine::new(rt.clone(), cfg)?;
+        let mut ids = Vec::new();
+        for i in 0..b {
+            let off = i * 700;
+            let toks = tokenizer::encode_bytes(&corpus[off..off + 577]);
+            ids.push(engine.add(GenRequest::teacher_forced(
+                toks[..512].to_vec(),
+                toks[512..].to_vec(),
+            ))?);
+        }
+        for _ in 0..4 {
+            engine.step()?; // warmup: compile the (B, S) bucket
+        }
+        let t0 = std::time::Instant::now();
+        while !engine.active_ids().is_empty() {
+            engine.step()?;
+        }
+        let el = t0.elapsed().as_secs_f64();
+        let total: usize = ids
+            .iter()
+            .map(|&id| engine.remove(id).unwrap().logprobs.len().saturating_sub(4))
+            .sum();
+        println!(
+            "{:<8} {:>14.2} {:>12.1}",
+            b,
+            el * 1e3 / (total as f64 / b as f64),
+            total as f64 / el
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Microbenchmarks of the L3 hot-path pieces (criterion is unavailable
+//! offline; uses the in-tree warmup+measure harness). Run via
+//! `cargo bench --offline`.
+
+use radar_serve::config::ModelConfig;
+use radar_serve::kvcache::{BlockPool, SeqCache};
+use radar_serve::radar::{top_k_indices, RadarIndex};
+use radar_serve::util::prng::SplitMix64;
+use radar_serve::util::stats::bench_loop;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "sm".into(),
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 2,
+        d_head: 64,
+        d_ffn: 512,
+        n_feat: 128,
+        max_train_len: 512,
+        vocab: 256,
+    }
+}
+
+fn build_cache(t: usize, c: &ModelConfig) -> (BlockPool, SeqCache) {
+    let mut pool = BlockPool::new(c, c.n_feat, t / 16 + 2);
+    let mut seq = SeqCache::new(c.n_feat);
+    let lh = c.n_lh();
+    let mut rng = SplitMix64::new(1);
+    let k: Vec<f32> = (0..lh * c.d_head).map(|_| rng.next_f32()).collect();
+    let f: Vec<f32> = (0..lh * c.n_feat).map(|_| rng.next_f32()).collect();
+    for _ in 0..t {
+        seq.append(&mut pool, &k, &k.clone(), &f).unwrap();
+    }
+    (pool, seq)
+}
+
+fn main() {
+    let c = cfg();
+    let mut results = Vec::new();
+
+    // Segment scoring (Eq. 6) at several context lengths.
+    for t in [1024usize, 4096, 16384] {
+        let (pool, seq) = build_cache(t, &c);
+        let mut idx = RadarIndex::new(c.n_lh(), c.n_feat);
+        idx.force_restructure(&seq, &pool);
+        let q: Vec<f32> = (0..c.n_feat).map(|i| (i as f32 * 0.01).sin()).collect();
+        let mut out = Vec::new();
+        results.push(bench_loop(
+            &format!("segment_scores t={t} (n_segs={})", idx.n_segs),
+            10,
+            2000,
+            2.0,
+            || {
+                idx.scores(0, &q, &mut out);
+                std::hint::black_box(&out);
+            },
+        ));
+        // Top-k over those scores.
+        idx.scores(0, &q, &mut out);
+        results.push(bench_loop(
+            &format!("top_k_indices k=8 of {}", out.len()),
+            10,
+            5000,
+            1.0,
+            || {
+                std::hint::black_box(top_k_indices(&out, 8));
+            },
+        ));
+    }
+
+    // Restructure cost (the amortized O(t) operation).
+    for t in [1024usize, 4096, 16384] {
+        let (pool, seq) = build_cache(t, &c);
+        let mut idx = RadarIndex::new(c.n_lh(), c.n_feat);
+        results.push(bench_loop(
+            &format!("restructure t={t}"),
+            2,
+            50,
+            3.0,
+            || {
+                idx.force_restructure(&seq, &pool);
+            },
+        ));
+    }
+
+    // Gather (the per-step memcpy): radar-sized vs vanilla-sized.
+    {
+        let t = 4096;
+        let (pool, seq) = build_cache(t, &c);
+        let mut rng = SplitMix64::new(3);
+        for (label, n_sel) in [("radar ~600", 600usize), ("vanilla 4096", 4096)] {
+            let sel: Vec<u32> = if n_sel >= t {
+                (0..t as u32).collect()
+            } else {
+                let mut s: Vec<u32> = rng
+                    .sample_indices(t, n_sel)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                s.sort_unstable();
+                s
+            };
+            let mut dk = vec![0.0f32; sel.len().next_power_of_two() * c.d_head];
+            let mut dv = dk.clone();
+            results.push(bench_loop(
+                &format!("gather_plane {label} @t={t}"),
+                5,
+                2000,
+                2.0,
+                || {
+                    seq.gather_plane(&pool, 0, 0, &sel, &mut dk, &mut dv);
+                    std::hint::black_box(&dk);
+                },
+            ));
+        }
+    }
+
+    println!("\n== bench_radar (hot-path micro) ==");
+    for r in &results {
+        println!("{}", r.report_line());
+    }
+}

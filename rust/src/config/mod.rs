@@ -1,0 +1,283 @@
+//! Configuration: the model ABI (mirrors `python/compile/model.py`) and
+//! serving-time knobs. Loaded from the artifact manifest plus optional
+//! JSON config files / CLI overrides.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Model architecture — must match the python `ModelConfig` exactly;
+/// it is read from `artifacts/<model>/manifest.json`, never hardcoded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub n_feat: usize,
+    pub max_train_len: usize,
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let g = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest config missing '{k}'"))
+        };
+        Ok(Self {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest config missing 'name'"))?
+                .to_string(),
+            d_model: g("d_model")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            d_head: g("d_head")?,
+            d_ffn: g("d_ffn")?,
+            n_feat: g("n_feat")?,
+            max_train_len: g("max_train_len")?,
+            vocab: g("vocab")?,
+        })
+    }
+
+    pub fn d_attn(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+
+    /// (layer, head) pair count — selection policies run per pair.
+    pub fn n_lh(&self) -> usize {
+        self.n_layers * self.n_heads
+    }
+}
+
+/// Which token-selection method serves a request (DESIGN.md §5 policy/).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// Full attention over the entire cache (the quadratic baseline).
+    Vanilla,
+    /// StreamingLLM: sinks + sliding window; middle tokens evicted.
+    Streaming,
+    /// H2O: sinks + window + accumulated-attention heavy hitters.
+    H2O,
+    /// SnapKV: prompt tokens selected once at prefill end, then frozen.
+    SnapKV,
+    /// SubGen-style: online k-means centroids over keys + window.
+    SubGen,
+    /// The paper: top-k segments by random-feature scores + window.
+    Radar,
+    /// Ablations (Fig. 5).
+    RadarExact,
+    RadarRandom,
+    RadarLowest,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "vanilla" | "full" => Self::Vanilla,
+            "streaming" | "streamingllm" => Self::Streaming,
+            "h2o" => Self::H2O,
+            "snapkv" => Self::SnapKV,
+            "subgen" => Self::SubGen,
+            "radar" => Self::Radar,
+            "radar-exact" | "exact" => Self::RadarExact,
+            "radar-random" | "random" => Self::RadarRandom,
+            "radar-lowest" | "lowest" => Self::RadarLowest,
+            other => return Err(anyhow!("unknown policy '{other}'")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Vanilla => "vanilla",
+            Self::Streaming => "streaming",
+            Self::H2O => "h2o",
+            Self::SnapKV => "snapkv",
+            Self::SubGen => "subgen",
+            Self::Radar => "radar",
+            Self::RadarExact => "radar-exact",
+            Self::RadarRandom => "radar-random",
+            Self::RadarLowest => "radar-lowest",
+        }
+    }
+
+    pub fn all() -> &'static [PolicyKind] {
+        &[
+            Self::Vanilla,
+            Self::Streaming,
+            Self::H2O,
+            Self::SnapKV,
+            Self::SubGen,
+            Self::Radar,
+            Self::RadarExact,
+            Self::RadarRandom,
+            Self::RadarLowest,
+        ]
+    }
+}
+
+/// Serving-time knobs (paper defaults rescaled per DESIGN.md §7).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub policy: PolicyKind,
+    /// Radar: number of top segments (paper: 64 @ 16-32K ctx; ours: 8).
+    pub radar_k: usize,
+    /// Random-feature dimension n; must match an `omega_n{N}` artifact.
+    pub n_feat: usize,
+    /// Always-kept sink tokens (StreamingLLM-style; Radar keeps them too).
+    pub sinks: usize,
+    /// Token budget for eviction-based policies (the paper's 32 + n_c).
+    pub budget: usize,
+    /// Sliding-window length for streaming/h2o/snapkv.
+    pub window: usize,
+    /// Max concurrent decode batch (must match a compiled B bucket).
+    pub max_batch: usize,
+    /// Cap on tokens per sequence (cache capacity).
+    pub max_seq_len: usize,
+    /// Sampling.
+    pub temperature: f32,
+    pub greedy: bool,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            policy: PolicyKind::Radar,
+            radar_k: 8,
+            n_feat: 128,
+            sinks: 4,
+            budget: 256,
+            window: 64,
+            max_batch: 4,
+            max_seq_len: 4096,
+            temperature: 1.0,
+            greedy: true,
+            seed: 0,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Apply `key=value` overrides (CLI `--set k=v,k2=v2`).
+    pub fn apply_override(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "policy" => self.policy = PolicyKind::parse(val)?,
+            "radar_k" | "k" => self.radar_k = val.parse()?,
+            "n_feat" | "n" => self.n_feat = val.parse()?,
+            "sinks" => self.sinks = val.parse()?,
+            "budget" => self.budget = val.parse()?,
+            "window" => self.window = val.parse()?,
+            "max_batch" => self.max_batch = val.parse()?,
+            "max_seq_len" => self.max_seq_len = val.parse()?,
+            "temperature" => self.temperature = val.parse()?,
+            "greedy" => self.greedy = val == "true" || val == "1",
+            "seed" => self.seed = val.parse()?,
+            other => return Err(anyhow!("unknown serving option '{other}'")),
+        }
+        Ok(())
+    }
+}
+
+/// Root paths for an artifact set.
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    pub root: PathBuf,
+    pub model: String,
+}
+
+impl ArtifactPaths {
+    pub fn new(root: impl AsRef<Path>, model: &str) -> Self {
+        Self { root: root.as_ref().to_path_buf(), model: model.to_string() }
+    }
+
+    pub fn model_dir(&self) -> PathBuf {
+        self.root.join(&self.model)
+    }
+
+    pub fn manifest(&self) -> PathBuf {
+        self.model_dir().join("manifest.json")
+    }
+
+    pub fn weights(&self) -> PathBuf {
+        self.model_dir().join("weights.npz")
+    }
+
+    pub fn omega(&self, n: usize) -> PathBuf {
+        self.model_dir().join(format!("omega_n{n}.npz"))
+    }
+
+    pub fn golden(&self) -> PathBuf {
+        self.model_dir().join("golden.npz")
+    }
+
+    pub fn hlo(&self, name: &str) -> PathBuf {
+        self.model_dir().join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn corpus(&self, name: &str) -> PathBuf {
+        self.root.join("corpus").join(name)
+    }
+
+    pub fn load_manifest(&self) -> Result<Json> {
+        let text = std::fs::read_to_string(self.manifest())
+            .with_context(|| format!("reading {:?} (run `make artifacts`)", self.manifest()))?;
+        Ok(Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_config_from_json() {
+        let j = Json::parse(
+            r#"{"name":"sm","d_model":128,"n_layers":4,"n_heads":2,
+                "d_head":64,"d_ffn":512,"n_feat":128,"max_train_len":512,
+                "rope_theta":10000.0,"norm_eps":1e-5,"vocab":256}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.d_attn(), 128);
+        assert_eq!(c.n_lh(), 8);
+    }
+
+    #[test]
+    fn model_config_missing_field_errors() {
+        let j = Json::parse(r#"{"name":"sm","d_model":128}"#).unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(p.name()).unwrap(), *p);
+        }
+        assert!(PolicyKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn serving_overrides() {
+        let mut s = ServingConfig::default();
+        s.apply_override("policy", "h2o").unwrap();
+        s.apply_override("k", "16").unwrap();
+        s.apply_override("budget", "512").unwrap();
+        assert_eq!(s.policy, PolicyKind::H2O);
+        assert_eq!(s.radar_k, 16);
+        assert_eq!(s.budget, 512);
+        assert!(s.apply_override("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let p = ArtifactPaths::new("/tmp/a", "sm");
+        assert!(p.hlo("decode_b1_s128_n128").ends_with("sm/decode_b1_s128_n128.hlo.txt"));
+        assert!(p.omega(64).ends_with("sm/omega_n64.npz"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Continuous batcher: groups runnable sequences into decode batches
+//! compatible with one compiled artifact (same S bucket; batch rows
+//! padded up to a compiled B bucket).
+
+use super::request::SeqId;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchGroup {
+    /// Sequences in this dispatch (<= the resolved B bucket).
+    pub seq_ids: Vec<SeqId>,
+    /// The S bucket all rows share (max over members' needs, rounded).
+    pub bucket_s: usize,
+}
+
+/// Round a needed length up to the smallest available bucket.
+pub fn round_bucket(need: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().filter(|&b| b >= need).min()
+}
+
+/// Group (seq, needed_s) pairs into batch groups.
+///
+/// Strategy (throughput-greedy, like vLLM's batch packer): sort by
+/// needed S; pack consecutive runs that share a rounded bucket, cutting
+/// at `max_batch`. Padding waste is bounded by bucket granularity.
+pub fn group_by_bucket(
+    needs: &[(SeqId, usize)],
+    s_buckets: &[usize],
+    max_batch: usize,
+) -> Vec<BatchGroup> {
+    let mut sorted: Vec<(SeqId, usize)> = needs.to_vec();
+    sorted.sort_by_key(|&(_, s)| s);
+    let mut out: Vec<BatchGroup> = Vec::new();
+    for (id, need) in sorted {
+        let bucket = match round_bucket(need, s_buckets) {
+            Some(b) => b,
+            None => {
+                // No compiled bucket fits: isolate; the engine will
+                // surface the resolve error for this sequence.
+                out.push(BatchGroup { seq_ids: vec![id], bucket_s: need });
+                continue;
+            }
+        };
+        if let Some(last) = out.last_mut() {
+            if last.bucket_s == bucket && last.seq_ids.len() < max_batch {
+                last.seq_ids.push(id);
+                continue;
+            }
+        }
+        out.push(BatchGroup { seq_ids: vec![id], bucket_s: bucket });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BUCKETS: &[usize] = &[128, 256, 512, 1024];
+
+    #[test]
+    fn round_up() {
+        assert_eq!(round_bucket(1, BUCKETS), Some(128));
+        assert_eq!(round_bucket(128, BUCKETS), Some(128));
+        assert_eq!(round_bucket(129, BUCKETS), Some(256));
+        assert_eq!(round_bucket(2000, BUCKETS), None);
+    }
+
+    #[test]
+    fn groups_compatible_sequences() {
+        let needs = vec![(1, 100), (2, 120), (3, 500), (4, 90), (5, 110)];
+        let groups = group_by_bucket(&needs, BUCKETS, 4);
+        // 4 sequences fit the 128 bucket (batch cap 4), one in 512.
+        let g128: Vec<_> = groups.iter().filter(|g| g.bucket_s == 128).collect();
+        assert_eq!(g128.len(), 1);
+        assert_eq!(g128[0].seq_ids.len(), 4);
+        assert!(groups.iter().any(|g| g.bucket_s == 512 && g.seq_ids.len() == 1));
+    }
+
+    #[test]
+    fn batch_cap_respected() {
+        let needs: Vec<(SeqId, usize)> = (0..10).map(|i| (i, 50)).collect();
+        let groups = group_by_bucket(&needs, BUCKETS, 4);
+        assert_eq!(groups.len(), 3); // 4+4+2
+        assert!(groups.iter().all(|g| g.seq_ids.len() <= 4));
+        let total: usize = groups.iter().map(|g| g.seq_ids.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn no_starvation_all_sequences_placed() {
+        let needs: Vec<(SeqId, usize)> =
+            (0..25).map(|i| (i, (i as usize * 37) % 900 + 1)).collect();
+        let groups = group_by_bucket(&needs, BUCKETS, 4);
+        let mut seen: Vec<SeqId> = groups.iter().flat_map(|g| g.seq_ids.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prop_grouping_preserves_membership_and_caps() {
+        use crate::util::minitest::check;
+        use crate::util::prng::SplitMix64;
+        check(
+            11,
+            60,
+            |r: &mut SplitMix64| {
+                let n = r.below(20) as usize;
+                (0..n).map(|i| (i as u64, 1 + r.below(1200) as usize)).collect::<Vec<(u64, usize)>>()
+            },
+            |needs| {
+                let groups = group_by_bucket(needs, BUCKETS, 4);
+                let mut seen: Vec<u64> =
+                    groups.iter().flat_map(|g| g.seq_ids.clone()).collect();
+                seen.sort_unstable();
+                let mut want: Vec<u64> = needs.iter().map(|&(i, _)| i).collect();
+                want.sort_unstable();
+                if seen != want {
+                    return Err("membership not preserved".into());
+                }
+                for g in &groups {
+                    if g.seq_ids.len() > 4 {
+                        return Err("batch cap violated".into());
+                    }
+                    for id in &g.seq_ids {
+                        let need = needs.iter().find(|&&(i, _)| i == *id).unwrap().1;
+                        if need <= 1024 && g.bucket_s < need {
+                            return Err(format!("seq {id} need {need} > bucket {}", g.bucket_s));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

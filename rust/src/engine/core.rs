@@ -1,0 +1,552 @@
+//! The engine: owns the block pool, sequences, and the step loop.
+//!
+//! Prefill: 128-token chunks with full attention over the growing past
+//! (padded to P buckets). Decode: two pipelines —
+//!
+//! - **fused** (vanilla/streaming/h2o/snapkv/subgen): selection is
+//!   query-independent, so one `decode_b{B}_s{S}` dispatch per step
+//!   covers all layers; sequences are continuously batched.
+//! - **per-layer** (radar + ablations): Algorithm 1 needs phi(q) at
+//!   layer l before the layer-l gather, so each layer runs
+//!   `qkv -> select -> gather -> attn_mlp`; embedding lookup and the
+//!   final head are host-side (verified against goldens).
+
+use super::batcher::group_by_bucket;
+use super::request::{GenRequest, GenResult, PolicyHolder, SeqId, Sequence};
+use crate::config::ServingConfig;
+use crate::kvcache::BlockPool;
+use crate::metrics::Metrics;
+use crate::model::{embed, head, log_prob};
+use crate::policy::{SelectCtx, Selection};
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+const NEG: f32 = -1e30;
+
+pub struct Engine {
+    pub rt: Arc<Runtime>,
+    pub cfg: ServingConfig,
+    pub pool: BlockPool,
+    pub metrics: Arc<Metrics>,
+    seqs: BTreeMap<SeqId, Sequence>,
+    next_id: SeqId,
+    omega: Arc<xla::PjRtBuffer>,
+    // Reused step staging buffers (values stay bounded; masked slots
+    // carry stale-but-finite data — see DESIGN.md §9 L3).
+    buf_k: Vec<f32>,
+    buf_v: Vec<f32>,
+    buf_mask: Vec<f32>,
+}
+
+/// Telemetry for one engine step.
+#[derive(Debug, Default, Clone)]
+pub struct StepStats {
+    pub decoded: usize,
+    pub dispatches: usize,
+}
+
+impl Engine {
+    pub fn new(rt: Arc<Runtime>, cfg: ServingConfig) -> Result<Self> {
+        let blocks = cfg.max_seq_len.div_ceil(crate::kvcache::BLOCK_TOKENS)
+            * (cfg.max_batch.max(4) * 4);
+        let pool = BlockPool::new(&rt.config, cfg.n_feat, blocks);
+        let omega = rt.omega(cfg.n_feat)?;
+        Ok(Self {
+            rt,
+            cfg,
+            pool,
+            metrics: Arc::new(Metrics::new()),
+            seqs: BTreeMap::new(),
+            next_id: 1,
+            omega,
+            buf_k: Vec::new(),
+            buf_v: Vec::new(),
+            buf_mask: Vec::new(),
+        })
+    }
+
+    pub fn seq(&self, id: SeqId) -> Option<&Sequence> {
+        self.seqs.get(&id)
+    }
+
+    pub fn active_ids(&self) -> Vec<SeqId> {
+        self.seqs.iter().filter(|(_, s)| !s.done).map(|(&i, _)| i).collect()
+    }
+
+    pub fn finished(&self) -> Vec<SeqId> {
+        self.seqs.iter().filter(|(_, s)| s.done).map(|(&i, _)| i).collect()
+    }
+
+    /// Admit a request: allocate the sequence and run prefill on the
+    /// prompt (if any). Returns the sequence id.
+    pub fn add(&mut self, req: GenRequest) -> Result<SeqId> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mc = self.rt.config.clone();
+        let mut seq = Sequence::new(id, req, &self.cfg, mc.n_layers, mc.n_heads);
+        let t0 = Instant::now();
+        if !seq.tokens.is_empty() {
+            self.prefill(&mut seq)?;
+        }
+        seq.prompt_len = seq.tokens.len();
+        seq.prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.metrics.inc("requests_admitted");
+        self.metrics.observe_us("prefill", seq.prefill_ms * 1e3);
+        self.seqs.insert(id, seq);
+        Ok(id)
+    }
+
+    /// Remove a finished sequence, freeing its cache blocks.
+    pub fn remove(&mut self, id: SeqId) -> Option<GenResult> {
+        let mut seq = self.seqs.remove(&id)?;
+        seq.cache.free(&mut self.pool);
+        Some(seq.result())
+    }
+
+    // -----------------------------------------------------------------
+    // Prefill
+    // -----------------------------------------------------------------
+
+    /// Prefill covers tokens [0, P-1): the LAST prompt token is left
+    /// for the first decode step, whose logits produce the first
+    /// generated/evaluated token (standard prefill/decode handoff).
+    fn prefill(&mut self, seq: &mut Sequence) -> Result<()> {
+        let mc = self.rt.config.clone();
+        let chunk = self.rt.registry.prefill_chunk;
+        let (l, h, dh) = (mc.n_layers, mc.n_heads, mc.d_head);
+        let total = seq.tokens.len() - 1;
+        // Whole chunks via the prefill artifact; a trailing partial
+        // chunk is PADDED to the chunk size and run as one dispatch
+        // (causality makes real positions independent of the padding,
+        // whose outputs are simply not appended — §Perf L3-1: this
+        // replaced up to chunk-1 sequential decode dispatches).
+        let n_chunks = total.div_ceil(chunk);
+        for ci in 0..n_chunks {
+            let t0 = ci * chunk;
+            let t1 = (t0 + chunk).min(total);
+            let real = t1 - t0;
+            let meta = self.rt.registry.resolve_prefill(t0, self.cfg.n_feat)?.clone();
+            let p = meta.len;
+            let mut past_k = vec![0.0f32; l * h * p * dh];
+            let mut past_v = vec![0.0f32; l * h * p * dh];
+            let mut pmask = vec![NEG; p];
+            if t0 > 0 {
+                seq.cache.gather_past(&self.pool, 0, t0, p, &mut past_k, &mut past_v);
+            }
+            for m in pmask.iter_mut().take(t0) {
+                *m = 0.0;
+            }
+            let mut toks: Vec<i32> = seq.tokens[t0..t1].to_vec();
+            toks.resize(chunk, 0); // pad the tail chunk
+            let out = self.rt.prefill(
+                &meta, &self.omega, &toks, t0 as i32, &past_k, &past_v, &pmask,
+            )?;
+            seq.cache
+                .append_chunk(&mut self.pool, real, chunk, &out.k_c, &out.v_c, &out.feat_c)?;
+            // Policy feedback. Policies assume colsum rows of width
+            // p + (t1 - t0); when the chunk was padded, re-pack the
+            // rows to drop the padded keys' columns.
+            match &mut seq.policy {
+                PolicyHolder::Fused(p_obj) => {
+                    let ctx = SelectCtx {
+                        pool: &self.pool,
+                        seq: &seq.cache,
+                        t: t1,
+                        cfg: &self.cfg,
+                    };
+                    if real == chunk {
+                        p_obj.on_prefill(&ctx, &out.colsum, p, t0, t1);
+                    } else {
+                        let src_w = p + chunk;
+                        let dst_w = p + real;
+                        let mut trimmed = vec![0.0f32; l * h * dst_w];
+                        for plane in 0..l * h {
+                            trimmed[plane * dst_w..(plane + 1) * dst_w]
+                                .copy_from_slice(&out.colsum[plane * src_w..plane * src_w + dst_w]);
+                        }
+                        p_obj.on_prefill(&ctx, &trimmed, p, t0, t1);
+                    }
+                }
+                PolicyHolder::Radar(_) => {}
+            }
+        }
+        // Radar: build the initial segment structure once.
+        if let PolicyHolder::Radar(rp) = &mut seq.policy {
+            rp.index.force_restructure(&seq.cache, &self.pool);
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Decode: public step API
+    // -----------------------------------------------------------------
+
+    /// One engine step: advance every runnable sequence by one token.
+    /// Fused sequences are batched; radar sequences run per-layer.
+    pub fn step(&mut self) -> Result<StepStats> {
+        let mut stats = StepStats::default();
+        let ids = self.active_ids();
+        if ids.is_empty() {
+            return Ok(stats);
+        }
+        // Partition by pipeline.
+        let mut fused: Vec<SeqId> = Vec::new();
+        let mut radar: Vec<SeqId> = Vec::new();
+        for id in ids {
+            match self.seqs[&id].policy {
+                PolicyHolder::Fused(_) => fused.push(id),
+                PolicyHolder::Radar(_) => radar.push(id),
+            }
+        }
+        if !fused.is_empty() {
+            stats.merge(self.step_fused_batch(&fused)?);
+        }
+        for id in radar {
+            let mut seq = self.seqs.remove(&id).unwrap();
+            let r = self.advance_radar(&mut seq);
+            self.seqs.insert(id, seq);
+            r?;
+            stats.decoded += 1;
+            stats.dispatches += 2 * self.rt.config.n_layers;
+        }
+        Ok(stats)
+    }
+
+    /// Run all sequences to completion; returns finished results.
+    pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
+        while !self.active_ids().is_empty() {
+            self.step()?;
+        }
+        let ids = self.finished();
+        Ok(ids.into_iter().filter_map(|i| self.remove(i)).collect())
+    }
+
+    // -----------------------------------------------------------------
+    // Fused pipeline (batched)
+    // -----------------------------------------------------------------
+
+    fn step_fused_batch(&mut self, ids: &[SeqId]) -> Result<StepStats> {
+        let mut stats = StepStats::default();
+        // Compute selections + needed S per sequence.
+        let mut selections: BTreeMap<SeqId, Selection> = BTreeMap::new();
+        let mut needs: Vec<(SeqId, usize)> = Vec::new();
+        for &id in ids {
+            let mut seq = self.seqs.remove(&id).unwrap();
+            let sel = {
+                let ctx = SelectCtx {
+                    pool: &self.pool,
+                    seq: &seq.cache,
+                    t: seq.cache.len(),
+                    cfg: &self.cfg,
+                };
+                match &mut seq.policy {
+                    PolicyHolder::Fused(p) => p.select(&ctx),
+                    PolicyHolder::Radar(_) => unreachable!(),
+                }
+            };
+            needs.push((id, sel.max_len().max(1)));
+            selections.insert(id, sel);
+            self.seqs.insert(id, seq);
+        }
+        let s_buckets: Vec<usize> = {
+            let mut b: Vec<usize> = self
+                .rt
+                .registry
+                .all()
+                .iter()
+                .filter(|a| {
+                    a.kind == crate::runtime::ArtifactKind::Decode
+                        && a.n_feat == self.cfg.n_feat
+                })
+                .map(|a| a.len)
+                .collect();
+            b.sort_unstable();
+            b.dedup();
+            b
+        };
+        let groups = group_by_bucket(&needs, &s_buckets, self.cfg.max_batch);
+        for g in groups {
+            let b_need = g.seq_ids.len();
+            let meta = self
+                .rt
+                .registry
+                .resolve_decode(b_need, g.bucket_s, self.cfg.n_feat)?
+                .clone();
+            self.dispatch_fused_group(&g.seq_ids, &meta, &selections)?;
+            stats.decoded += b_need;
+            stats.dispatches += 1;
+        }
+        Ok(stats)
+    }
+
+    fn dispatch_fused_group(
+        &mut self,
+        ids: &[SeqId],
+        meta: &crate::runtime::ArtifactMeta,
+        selections: &BTreeMap<SeqId, Selection>,
+    ) -> Result<()> {
+        let mc = self.rt.config.clone();
+        let (l, h, dh) = (mc.n_layers, mc.n_heads, mc.d_head);
+        let (b, s) = (meta.batch, meta.len);
+        let row_kv = l * h * s * dh;
+        let row_mask = l * h * s;
+        self.buf_k.resize(b * row_kv, 0.0);
+        self.buf_v.resize(b * row_kv, 0.0);
+        self.buf_mask.resize(b * row_mask, 0.0);
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        // Stage rows.
+        for (bi, &id) in ids.iter().enumerate() {
+            let seq = &self.seqs[&id];
+            let sel = &selections[&id];
+            let t = seq.cache.len();
+            tokens[bi] = seq.next_input().ok_or_else(|| anyhow!("seq {id} has no input"))?;
+            pos[bi] = t as i32;
+            for li in 0..l {
+                for hi in 0..h {
+                    let p = li * h + hi;
+                    let plane_sel = &sel.per_plane[p];
+                    let koff = bi * row_kv + (li * h + hi) * s * dh;
+                    seq.cache.gather_plane(
+                        &self.pool,
+                        li,
+                        hi,
+                        plane_sel,
+                        &mut self.buf_k[koff..koff + s * dh],
+                        &mut self.buf_v[koff..koff + s * dh],
+                    );
+                    let moff = bi * row_mask + p * s;
+                    let mrow = &mut self.buf_mask[moff..moff + s];
+                    let n_valid = plane_sel.len();
+                    mrow[..n_valid].fill(0.0);
+                    mrow[n_valid..].fill(NEG);
+                }
+            }
+        }
+        // Pad ghost rows (bi >= ids.len()): fully masked.
+        for bi in ids.len()..b {
+            self.buf_mask[bi * row_mask..(bi + 1) * row_mask].fill(NEG);
+        }
+        let t_dispatch = Instant::now();
+        let out = self.metrics.time("decode_dispatch", || {
+            self.rt.decode(meta, &self.omega, &tokens, &pos, &self.buf_k, &self.buf_v, &self.buf_mask)
+        })?;
+        let dispatch_share = t_dispatch.elapsed().as_secs_f64() * 1e3 / ids.len() as f64;
+        // Distribute outputs.
+        let kv_row = l * h * dh;
+        let feat_row = l * h * meta.n_feat;
+        let probs_row = l * h * (s + 1);
+        for (bi, &id) in ids.iter().enumerate() {
+            let mut seq = self.seqs.remove(&id).unwrap();
+            let t0 = Instant::now();
+            let logits = &out.logits[bi * mc.vocab..(bi + 1) * mc.vocab];
+            seq.cache.append(
+                &mut self.pool,
+                &out.k_new[bi * kv_row..(bi + 1) * kv_row],
+                &out.v_new[bi * kv_row..(bi + 1) * kv_row],
+                &out.feat_new[bi * feat_row..(bi + 1) * feat_row],
+            )?;
+            {
+                let ctx = SelectCtx {
+                    pool: &self.pool,
+                    seq: &seq.cache,
+                    t: seq.cache.len(),
+                    cfg: &self.cfg,
+                };
+                if let PolicyHolder::Fused(p) = &mut seq.policy {
+                    p.on_decode(
+                        &ctx,
+                        &selections[&id],
+                        &out.probs[bi * probs_row..(bi + 1) * probs_row],
+                        s,
+                    );
+                }
+            }
+            self.finish_token(&mut seq, logits);
+            seq.decode_ms += dispatch_share + t0.elapsed().as_secs_f64() * 1e3;
+            self.seqs.insert(id, seq);
+        }
+        self.metrics.add("tokens_decoded", ids.len() as u64);
+        Ok(())
+    }
+
+    /// Single-sequence fused step (kept for the unbatched API surface;
+    /// exercised by unit paths and debugging tools).
+    #[allow(dead_code)]
+    fn fused_step_one(&mut self, seq: &mut Sequence, tok: i32, pos: usize) -> Result<()> {
+        let sel = {
+            let ctx = SelectCtx {
+                pool: &self.pool,
+                seq: &seq.cache,
+                t: seq.cache.len(),
+                cfg: &self.cfg,
+            };
+            match &mut seq.policy {
+                PolicyHolder::Fused(p) => p.select(&ctx),
+                _ => unreachable!(),
+            }
+        };
+        let meta = self
+            .rt
+            .registry
+            .resolve_decode(1, sel.max_len().max(1), self.cfg.n_feat)?
+            .clone();
+        let mc = self.rt.config.clone();
+        let (l, h, dh, s) = (mc.n_layers, mc.n_heads, mc.d_head, meta.len);
+        self.buf_k.resize(l * h * s * dh, 0.0);
+        self.buf_v.resize(l * h * s * dh, 0.0);
+        self.buf_mask.resize(l * h * s, 0.0);
+        for li in 0..l {
+            for hi in 0..h {
+                let p = li * h + hi;
+                let koff = p * s * dh;
+                seq.cache.gather_plane(
+                    &self.pool, li, hi, &sel.per_plane[p],
+                    &mut self.buf_k[koff..koff + s * dh],
+                    &mut self.buf_v[koff..koff + s * dh],
+                );
+                let mrow = &mut self.buf_mask[p * s..(p + 1) * s];
+                mrow[..sel.per_plane[p].len()].fill(0.0);
+                mrow[sel.per_plane[p].len()..].fill(NEG);
+            }
+        }
+        let out = self.rt.decode(
+            &meta, &self.omega, &[tok], &[pos as i32],
+            &self.buf_k, &self.buf_v, &self.buf_mask,
+        )?;
+        seq.cache.append(&mut self.pool, &out.k_new, &out.v_new, &out.feat_new)?;
+        let ctx = SelectCtx { pool: &self.pool, seq: &seq.cache, t: seq.cache.len(), cfg: &self.cfg };
+        if let PolicyHolder::Fused(p) = &mut seq.policy {
+            p.on_decode(&ctx, &sel, &out.probs, s);
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Per-layer (Radar) pipeline
+    // -----------------------------------------------------------------
+
+    fn advance_radar(&mut self, seq: &mut Sequence) -> Result<()> {
+        let pos = seq.cache.len();
+        let tok = match seq.next_input() {
+            Some(t) => t,
+            None => {
+                seq.done = true;
+                return Ok(());
+            }
+        };
+        let t0 = Instant::now();
+        let logits = self.radar_step_logits(seq, tok, pos)?;
+        self.finish_token(seq, &logits);
+        seq.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.metrics.inc("tokens_decoded");
+        Ok(())
+    }
+
+    /// The per-layer pipeline for one token; returns final logits.
+    fn radar_step_logits(&mut self, seq: &mut Sequence, tok: i32, pos: usize) -> Result<Vec<f32>> {
+        let mc = self.rt.config.clone();
+        let (l_n, h_n, dh, nf) = (mc.n_layers, mc.n_heads, mc.d_head, self.cfg.n_feat);
+        let qkv_meta = self.rt.registry.resolve_qkv(1, nf)?.clone();
+        let mut x = embed(&self.rt, &[tok]);
+        let mut k_all = vec![0.0f32; l_n * h_n * dh];
+        let mut v_all = vec![0.0f32; l_n * h_n * dh];
+        let mut f_all = vec![0.0f32; l_n * h_n * nf];
+        for li in 0..l_n {
+            let q_out = self.metrics.time("qkv_dispatch", || {
+                self.rt.qkv(&qkv_meta, li, &self.omega, &x, &[pos as i32])
+            })?;
+            // Selection with this layer's phi(q).
+            let (sel_planes, s_need) = {
+                let rp = match &mut seq.policy {
+                    PolicyHolder::Radar(rp) => rp,
+                    _ => unreachable!(),
+                };
+                let planes = rp.select_layer(
+                    &self.pool, &seq.cache, &self.cfg, li, &q_out.phi_q, &q_out.q,
+                );
+                let need = planes.iter().map(Vec::len).max().unwrap_or(0).max(1);
+                (planes, need)
+            };
+            let am_meta = self.rt.registry.resolve_attn_mlp(1, s_need)?.clone();
+            let s = am_meta.len;
+            self.buf_k.resize(h_n * s * dh, 0.0);
+            self.buf_v.resize(h_n * s * dh, 0.0);
+            self.buf_mask.resize(h_n * s, 0.0);
+            for hi in 0..h_n {
+                let koff = hi * s * dh;
+                seq.cache.gather_plane(
+                    &self.pool, li, hi, &sel_planes[hi],
+                    &mut self.buf_k[koff..koff + s * dh],
+                    &mut self.buf_v[koff..koff + s * dh],
+                );
+                let mrow = &mut self.buf_mask[hi * s..(hi + 1) * s];
+                mrow[..sel_planes[hi].len()].fill(0.0);
+                mrow[sel_planes[hi].len()..].fill(NEG);
+            }
+            let am_out = self.metrics.time("attnmlp_dispatch", || {
+                self.rt.attn_mlp(
+                    &am_meta, li, &x, &q_out.q, &q_out.k, &q_out.v,
+                    &self.buf_k, &self.buf_v, &self.buf_mask,
+                )
+            })?;
+            x = am_out.x;
+            // Stash this layer's new k/v/feat for the append below.
+            k_all[li * h_n * dh..(li + 1) * h_n * dh].copy_from_slice(&q_out.k);
+            v_all[li * h_n * dh..(li + 1) * h_n * dh].copy_from_slice(&q_out.v);
+            f_all[li * h_n * nf..(li + 1) * h_n * nf].copy_from_slice(&q_out.phi_k);
+        }
+        seq.cache.append(&mut self.pool, &k_all, &v_all, &f_all)?;
+        if let PolicyHolder::Radar(rp) = &mut seq.policy {
+            rp.on_grow(&self.pool, &seq.cache); // Alg. 1 line 8
+        }
+        Ok(head(&self.rt, &mc, &x))
+    }
+
+    // -----------------------------------------------------------------
+    // Token bookkeeping shared by both pipelines
+    // -----------------------------------------------------------------
+
+    fn finish_token(&self, seq: &mut Sequence, logits: &[f32]) {
+        let pos = seq.cache.len(); // position of the NEXT token
+        if let Some(teacher) = seq.teacher.clone() {
+            // Teacher forcing: the next token is fixed; record log-prob.
+            let step = seq.generated;
+            if step < teacher.len() {
+                let tgt = teacher[step] as usize;
+                seq.logprobs.push(log_prob(logits, tgt));
+                if seq.tokens.len() <= pos {
+                    seq.tokens.push(teacher[step]);
+                }
+                seq.generated += 1;
+            }
+            if seq.generated >= teacher.len().min(seq.max_new_tokens) {
+                seq.done = true;
+            }
+        } else {
+            let tok = seq.sampler.sample(logits);
+            seq.logprobs.push(log_prob(logits, tok as usize));
+            seq.tokens.push(tok);
+            seq.generated += 1;
+            if seq.generated >= seq.max_new_tokens
+                || seq.stop_token == Some(tok)
+                || seq.tokens.len() >= self.cfg.max_seq_len
+            {
+                seq.done = true;
+            }
+        }
+        if seq.tokens.len() >= self.cfg.max_seq_len {
+            seq.done = true;
+        }
+    }
+}
+
+impl StepStats {
+    fn merge(&mut self, o: StepStats) {
+        self.decoded += o.decoded;
+        self.dispatches += o.dispatches;
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 engine: prefill/decode scheduling, continuous batching, and the
+//! two decode pipelines (fused single-dispatch for query-independent
+//! policies; per-layer qkv -> select -> gather -> attn_mlp for Radar).
+
+mod batcher;
+mod core;
+mod request;
+
+pub use batcher::{group_by_bucket, BatchGroup};
+pub use core::{Engine, StepStats};
+pub use request::{GenRequest, GenResult, SeqId, Sequence};

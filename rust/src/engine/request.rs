@@ -1,0 +1,156 @@
+//! Request and per-sequence serving state.
+
+use crate::config::{PolicyKind, ServingConfig};
+use crate::kvcache::SeqCache;
+use crate::model::Sampler;
+use crate::policy::{RadarPolicy, RadarVariant, SelectionPolicy};
+
+pub type SeqId = u64;
+
+/// An inbound generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Teacher-forcing stream for PPL evaluation: if set, decode
+    /// consumes these tokens instead of sampled ones and records
+    /// per-token log-probs.
+    pub teacher: Option<Vec<i32>>,
+    /// Stop generation at this byte (e.g. b'\n'), if any.
+    pub stop_token: Option<i32>,
+}
+
+impl GenRequest {
+    pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Self { prompt, max_new_tokens, teacher: None, stop_token: None }
+    }
+
+    pub fn teacher_forced(prompt: Vec<i32>, teacher: Vec<i32>) -> Self {
+        let n = teacher.len();
+        Self { prompt, max_new_tokens: n, teacher: Some(teacher), stop_token: None }
+    }
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: SeqId,
+    pub tokens: Vec<i32>,
+    /// log p(token) for each generated/teacher-forced token.
+    pub logprobs: Vec<f64>,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+}
+
+impl GenResult {
+    /// Perplexity over the recorded logprobs.
+    pub fn ppl(&self) -> f64 {
+        if self.logprobs.is_empty() {
+            return f64::NAN;
+        }
+        let mean_nll: f64 =
+            -self.logprobs.iter().sum::<f64>() / self.logprobs.len() as f64;
+        mean_nll.exp()
+    }
+}
+
+/// Which decode pipeline serves the sequence.
+pub enum PolicyHolder {
+    Fused(Box<dyn SelectionPolicy>),
+    Radar(RadarPolicy),
+}
+
+pub struct Sequence {
+    pub id: SeqId,
+    pub cache: SeqCache,
+    pub policy: PolicyHolder,
+    pub sampler: Sampler,
+    /// All tokens: prompt + generated (or teacher-forced).
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub teacher: Option<Vec<i32>>,
+    pub stop_token: Option<i32>,
+    pub max_new_tokens: usize,
+    pub generated: usize,
+    pub logprobs: Vec<f64>,
+    pub done: bool,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+}
+
+impl Sequence {
+    pub fn new(id: SeqId, req: GenRequest, cfg: &ServingConfig, n_layers: usize, n_heads: usize) -> Self {
+        let policy = match cfg.policy {
+            PolicyKind::Radar => PolicyHolder::Radar(RadarPolicy::new(
+                RadarVariant::Approx, n_layers, n_heads, cfg.n_feat, cfg.seed ^ id,
+            )),
+            PolicyKind::RadarExact => PolicyHolder::Radar(RadarPolicy::new(
+                RadarVariant::Exact, n_layers, n_heads, cfg.n_feat, cfg.seed ^ id,
+            )),
+            PolicyKind::RadarRandom => PolicyHolder::Radar(RadarPolicy::new(
+                RadarVariant::Random, n_layers, n_heads, cfg.n_feat, cfg.seed ^ id,
+            )),
+            PolicyKind::RadarLowest => PolicyHolder::Radar(RadarPolicy::new(
+                RadarVariant::Lowest, n_layers, n_heads, cfg.n_feat, cfg.seed ^ id,
+            )),
+            _ => PolicyHolder::Fused(crate::policy::make_policy(cfg, n_layers * n_heads)),
+        };
+        Self {
+            id,
+            cache: SeqCache::new(cfg.n_feat),
+            policy,
+            sampler: Sampler::new(cfg.seed ^ (id << 1), cfg.temperature, cfg.greedy),
+            tokens: req.prompt,
+            prompt_len: 0, // set after prefill
+            teacher: req.teacher,
+            stop_token: req.stop_token,
+            max_new_tokens: req.max_new_tokens,
+            generated: 0,
+            logprobs: Vec::new(),
+            done: false,
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+        }
+    }
+
+    /// The token this sequence feeds into the next decode step
+    /// (position = cache.len()).
+    pub fn next_input(&self) -> Option<i32> {
+        let pos = self.cache.len();
+        self.tokens.get(pos).copied()
+    }
+
+    pub fn result(&self) -> GenResult {
+        GenResult {
+            id: self.id,
+            tokens: self.tokens.clone(),
+            logprobs: self.logprobs.clone(),
+            prefill_ms: self.prefill_ms,
+            decode_ms: self.decode_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_of_uniform_logprobs() {
+        let r = GenResult {
+            id: 0,
+            tokens: vec![],
+            logprobs: vec![-(2.0f64.ln()); 10],
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+        };
+        assert!((r.ppl() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn teacher_request_sets_max_tokens() {
+        let r = GenRequest::teacher_forced(vec![1, 2], vec![3, 4, 5]);
+        assert_eq!(r.max_new_tokens, 3);
+        assert!(r.teacher.is_some());
+    }
+}

@@ -1,0 +1,185 @@
+//! Fig. 7 / §E: visualize the segment-attention approximation and
+//! measure top-1 / top-3 flag rates of Radar vs recency vs random.
+//!
+//! Protocol (paper §E): 100 tokens after 1 sink token, 10 segments of
+//! 10. For each query step we advance the hidden state through every
+//! layer (full attention over the cache, so queries are the true
+//! model queries) and, per (layer, head), compare:
+//!   truth  = argmax of the *exact* segment attention mass,
+//!   radar  = top-k of the Eq. 6 random-feature scores,
+//!   recency= the most recent segments,
+//!   random = uniform guesses.
+
+use super::Ctx;
+use crate::config::PolicyKind;
+use crate::engine::GenRequest;
+use crate::model::{embed, tokenizer};
+use crate::radar::{exact_segment_scores, top_k_indices, RadarIndex};
+use anyhow::Result;
+
+pub struct FlagRates {
+    pub strategy: &'static str,
+    pub top1: f64,
+    pub top3: f64,
+}
+
+pub struct Fig7Out {
+    pub rates: Vec<FlagRates>,
+    /// Per-layer radar rates (which layer hosts retrieval heads).
+    pub per_layer: Vec<(usize, f64, f64)>,
+    /// [steps][n_segs] exact and approx scores (layer 1 head 0 heatmap).
+    pub exact_rows: Vec<Vec<f32>>,
+    pub approx_rows: Vec<Vec<f32>>,
+}
+
+pub fn run(ctx: &Ctx, corpus: &[u8], n_queries: usize, n_feat: usize) -> Result<Fig7Out> {
+    let rt = &ctx.rt;
+    let mc = rt.config.clone();
+    let total = 101usize; // 1 sink + 100 tokens, exactly 10 segments of 10
+    let toks = tokenizer::encode_bytes(&corpus[..total + n_queries + 2]);
+    let nf = n_feat.to_string();
+    let mut engine = ctx.engine(PolicyKind::Vanilla, &[("n_feat", nf.as_str())])?;
+    let req = GenRequest::teacher_forced(toks[..total + 1].to_vec(), toks[total + 1..].to_vec());
+    let id = engine.add(req)?;
+    // add() prefilled tokens [0, total); build the segment structure.
+    let mut radar = RadarIndex::new(mc.n_lh(), n_feat);
+    {
+        let seq = engine.seq(id).unwrap();
+        radar.force_restructure(&seq.cache, &engine.pool);
+    }
+    let (c, n_segs) = (radar.c, radar.n_segs);
+    anyhow::ensure!((c, n_segs) == (10, 10), "paper setup: got c={c} segs={n_segs}");
+
+    let qkv_meta = rt.registry.resolve_qkv(1, n_feat)?.clone();
+    let am_meta = rt.registry.resolve_attn_mlp(1, 128)?.clone();
+    let omega = rt.omega(n_feat)?;
+    let (l_n, h_n, dh) = (mc.n_layers, mc.n_heads, mc.d_head);
+    let s_bucket = am_meta.len;
+
+    let mut hits1 = [0usize; 3];
+    let mut hits3 = [0usize; 3];
+    let mut layer_hits = vec![(0usize, 0usize, 0usize); l_n]; // (top1, top3, count)
+    let mut n_total = 0usize;
+    let mut rng = crate::util::prng::SplitMix64::new(5);
+    let mut exact_rows = Vec::new();
+    let mut approx_rows = Vec::new();
+
+    // Full-attention selection: all cached tokens.
+    let all: Vec<u32> = (0..total as u32).collect();
+    let mut gk = vec![0.0f32; h_n * s_bucket * dh];
+    let mut gv = vec![0.0f32; h_n * s_bucket * dh];
+    let mut mask = vec![0.0f32; h_n * s_bucket];
+    for qi in 0..n_queries {
+        let tok = toks[total + qi];
+        let pos = (total + qi) as i32;
+        let mut x = embed(rt, &[tok]);
+        for l in 0..l_n {
+            let q_out = rt.qkv(&qkv_meta, l, &omega, &x, &[pos])?;
+            for h in 0..h_n {
+                let p = l * h_n + h;
+                let phi_q = &q_out.phi_q[h * n_feat..(h + 1) * n_feat];
+                let q = &q_out.q[h * dh..(h + 1) * dh];
+                let mut approx = Vec::new();
+                radar.scores(p, phi_q, &mut approx);
+                let mut exact = Vec::new();
+                {
+                    let seq = engine.seq(id).unwrap();
+                    exact_segment_scores(&seq.cache, &engine.pool, l, h, q, c, n_segs, &mut exact);
+                }
+                let truth = crate::model::argmax(&exact);
+                let r1 = top_k_indices(&approx, 1);
+                let r3 = top_k_indices(&approx, 3);
+                hits1[0] += r1.contains(&truth) as usize;
+                hits3[0] += r3.contains(&truth) as usize;
+                layer_hits[l].0 += r1.contains(&truth) as usize;
+                layer_hits[l].1 += r3.contains(&truth) as usize;
+                layer_hits[l].2 += 1;
+                hits1[1] += (truth == n_segs - 1) as usize;
+                hits3[1] += (truth >= n_segs - 3) as usize;
+                let rr1 = rng.sample_indices(n_segs, 1);
+                let rr3 = rng.sample_indices(n_segs, 3);
+                hits1[2] += rr1.contains(&truth) as usize;
+                hits3[2] += rr3.contains(&truth) as usize;
+                n_total += 1;
+                if l == 1 && h == 0 && qi < 16 {
+                    exact_rows.push(exact.clone());
+                    approx_rows.push(approx.clone());
+                }
+            }
+            // Advance x through layer l with full attention.
+            {
+                let seq = engine.seq(id).unwrap();
+                for h in 0..h_n {
+                    let koff = h * s_bucket * dh;
+                    seq.cache.gather_plane(
+                        &engine.pool, l, h, &all,
+                        &mut gk[koff..koff + s_bucket * dh],
+                        &mut gv[koff..koff + s_bucket * dh],
+                    );
+                    let mrow = &mut mask[h * s_bucket..(h + 1) * s_bucket];
+                    mrow[..all.len()].fill(0.0);
+                    mrow[all.len()..].fill(-1e30);
+                }
+            }
+            let am = rt.attn_mlp(&am_meta, l, &x, &q_out.q, &q_out.k, &q_out.v, &gk, &gv, &mask)?;
+            x = am.x;
+        }
+        // Feed the true next token into the cache via the engine.
+        engine.step()?;
+        {
+            let seq = engine.seq(id).unwrap();
+            if seq.done {
+                break;
+            }
+        }
+    }
+    engine.remove(id);
+    let pct = |x: usize| 100.0 * x as f64 / n_total as f64;
+    Ok(Fig7Out {
+        rates: vec![
+            FlagRates { strategy: "radar", top1: pct(hits1[0]), top3: pct(hits3[0]) },
+            FlagRates { strategy: "recency", top1: pct(hits1[1]), top3: pct(hits3[1]) },
+            FlagRates { strategy: "random", top1: pct(hits1[2]), top3: pct(hits3[2]) },
+        ],
+        per_layer: layer_hits
+            .iter()
+            .enumerate()
+            .map(|(l, &(h1, h3, n))| {
+                (l, 100.0 * h1 as f64 / n.max(1) as f64, 100.0 * h3 as f64 / n.max(1) as f64)
+            })
+            .collect(),
+        exact_rows,
+        approx_rows,
+    })
+}
+
+pub fn print(out: &Fig7Out, csv_path: &str) -> Result<()> {
+    println!("\n== Fig 7 / §E: segment flag rates (10 segments, truth = exact argmax) ==");
+    println!("{:<10} {:>8} {:>8}", "strategy", "top-1%", "top-3%");
+    for r in &out.rates {
+        println!("{:<10} {:>8.2} {:>8.2}", r.strategy, r.top1, r.top3);
+    }
+    println!("radar per layer (top-1%, top-3%):");
+    for (l, t1, t3) in &out.per_layer {
+        println!("  layer {l}: {t1:>6.2} {t3:>6.2}");
+    }
+    let mut csv = String::from("kind,step,seg0,seg1,seg2,seg3,seg4,seg5,seg6,seg7,seg8,seg9\n");
+    for (i, row) in out.exact_rows.iter().enumerate() {
+        csv.push_str(&format!("exact,{i}"));
+        for v in row {
+            csv.push_str(&format!(",{v:.5}"));
+        }
+        csv.push('\n');
+    }
+    for (i, row) in out.approx_rows.iter().enumerate() {
+        csv.push_str(&format!("approx,{i}"));
+        for v in row {
+            csv.push_str(&format!(",{v:.5}"));
+        }
+        csv.push('\n');
+    }
+    std::fs::create_dir_all(std::path::Path::new(csv_path).parent().unwrap())?;
+    std::fs::write(csv_path, csv)?;
+    println!("(heatmap data -> {csv_path})");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! LongBench-S end-to-end evaluation (Table 1): every method x every
+//! subtask, greedy generation, per-task metrics, average score and
+//! average percentile.
+
+use super::Ctx;
+use crate::config::PolicyKind;
+use crate::engine::GenRequest;
+use crate::model::tokenizer;
+use crate::workload::score::percentile_ranks;
+use crate::workload::tasks::{generate, TASKS};
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct LongBenchRow {
+    pub method: String,
+    pub per_task: Vec<f64>,
+    pub avg_score: f64,
+    pub avg_percentile: f64,
+}
+
+/// Run one method over all 16 tasks (n instances each).
+fn eval_method(
+    ctx: &Ctx,
+    policy: PolicyKind,
+    overrides: &[(&str, &str)],
+    ctx_len: usize,
+    instances: usize,
+) -> Result<Vec<f64>> {
+    let mut per_task = Vec::with_capacity(TASKS.len());
+    for spec in &TASKS {
+        let mut total = 0.0;
+        for i in 0..instances {
+            let inst = generate(spec, ctx_len, 1000 + i as u64);
+            let mut engine = ctx.engine(policy, overrides)?;
+            let prompt = tokenizer::encode_bytes(&inst.prompt);
+            let mut req = GenRequest::new(prompt, inst.max_new_tokens);
+            req.stop_token = Some(b' ' as i32);
+            let id = engine.add(req)?;
+            while !engine.active_ids().is_empty() {
+                engine.step()?;
+            }
+            let res = engine.remove(id).unwrap();
+            let gen_tokens = &res.tokens[res.tokens.len() - res.logprobs.len()..];
+            let pred = tokenizer::decode(gen_tokens);
+            total += spec.metric.score(pred.trim(), &inst.reference);
+        }
+        per_task.push(100.0 * total / instances as f64);
+    }
+    Ok(per_task)
+}
+
+/// The Table-1 driver: vanilla (full context) + every budgeted method
+/// at the given n_c.
+pub fn run_table(
+    ctx: &Ctx,
+    ctx_len: usize,
+    n_c: usize,
+    instances: usize,
+    methods: &[PolicyKind],
+) -> Result<Vec<LongBenchRow>> {
+    let nc = n_c.to_string();
+    let mut rows = Vec::new();
+    for &m in methods {
+        let overrides: Vec<(&str, &str)> = match m {
+            PolicyKind::Vanilla => vec![],
+            // paper: sliding window 32 + n_c middle tokens
+            _ => vec![("window", "32"), ("budget", nc.as_str())],
+        };
+        let per_task = eval_method(ctx, m, &overrides, ctx_len, instances)?;
+        let avg = per_task.iter().sum::<f64>() / per_task.len() as f64;
+        rows.push(LongBenchRow {
+            method: m.name().to_string(),
+            per_task,
+            avg_score: avg,
+            avg_percentile: 0.0,
+        });
+        crate::info!("longbench: {} done (avg {:.2})", m.name(), avg);
+    }
+    // Percentiles across methods per task.
+    let task_rows: Vec<Vec<f64>> = (0..TASKS.len())
+        .map(|t| rows.iter().map(|r| r.per_task[t]).collect())
+        .collect();
+    let percs = percentile_ranks(&task_rows);
+    for (r, p) in rows.iter_mut().zip(percs) {
+        r.avg_percentile = p;
+    }
+    Ok(rows)
+}
+
+pub fn print_table(title: &str, rows: &[LongBenchRow], csv_path: &str) -> Result<()> {
+    println!("\n== {title} ==");
+    print!("{:<14}", "method");
+    for spec in &TASKS {
+        print!(" {:>9}", &spec.name[..spec.name.len().min(9)]);
+    }
+    println!(" {:>9} {:>9}", "AvgScore", "AvgPerc");
+    for r in rows {
+        print!("{:<14}", r.method);
+        for s in &r.per_task {
+            print!(" {:>9.2}", s);
+        }
+        println!(" {:>9.2} {:>9.2}", r.avg_score, r.avg_percentile);
+    }
+    let mut csv = String::from("method");
+    for spec in &TASKS {
+        csv.push_str(&format!(",{}", spec.name));
+    }
+    csv.push_str(",avg_score,avg_percentile\n");
+    for r in rows {
+        csv.push_str(&r.method);
+        for s in &r.per_task {
+            csv.push_str(&format!(",{s:.3}"));
+        }
+        csv.push_str(&format!(",{:.3},{:.3}\n", r.avg_score, r.avg_percentile));
+    }
+    std::fs::create_dir_all(std::path::Path::new(csv_path).parent().unwrap())?;
+    std::fs::write(csv_path, csv)?;
+    println!("(table data -> {csv_path})");
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Experiment harnesses: one driver per paper table/figure
+//! (DESIGN.md §6). Each prints the paper-style rows and writes CSV
+//! into `results/`.
+
+pub mod flagrate;
+pub mod longbench;
+pub mod ppl;
+pub mod report;
+pub mod theorem2;
+
+use crate::config::{ArtifactPaths, PolicyKind, ServingConfig};
+use crate::engine::Engine;
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Shared harness context: one loaded runtime, many engine configs.
+pub struct Ctx {
+    pub rt: Arc<Runtime>,
+    pub paths: ArtifactPaths,
+}
+
+impl Ctx {
+    pub fn load(root: &str, model: &str) -> Result<Self> {
+        let paths = ArtifactPaths::new(root, model);
+        let rt = Arc::new(Runtime::load(paths.clone())?);
+        Ok(Self { rt, paths })
+    }
+
+    pub fn engine(&self, policy: PolicyKind, overrides: &[(&str, &str)]) -> Result<Engine> {
+        let mut cfg = ServingConfig::default();
+        cfg.policy = policy;
+        for (k, v) in overrides {
+            cfg.apply_override(k, v)?;
+        }
+        Engine::new(self.rt.clone(), cfg)
+    }
+}

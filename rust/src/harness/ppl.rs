@@ -1,0 +1,127 @@
+//! Teacher-forced perplexity + elapsed-time curves (Fig. 2 / 3 / 4 /
+//! 5 / 6 all reduce to this driver with different policies/params).
+
+use super::Ctx;
+use crate::config::PolicyKind;
+use crate::engine::GenRequest;
+use crate::model::tokenizer;
+use anyhow::Result;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct PplPoint {
+    /// Context length t at this sample.
+    pub t: usize,
+    /// Cumulative perplexity over evaluated tokens so far.
+    pub ppl: f64,
+    /// Cumulative decode wallclock seconds.
+    pub elapsed_s: f64,
+    /// Tokens/s over the last interval.
+    pub throughput: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PplCurve {
+    pub policy: String,
+    pub points: Vec<PplPoint>,
+    pub final_ppl: f64,
+    pub total_s: f64,
+}
+
+/// Evaluate `policy` on `corpus[0..eval_len]`: prefill the first
+/// `prefill` tokens, then teacher-force the rest, sampling a curve
+/// point every `every` tokens.
+pub fn ppl_curve(
+    ctx: &Ctx,
+    policy: PolicyKind,
+    overrides: &[(&str, &str)],
+    corpus: &[u8],
+    prefill: usize,
+    eval_len: usize,
+    every: usize,
+) -> Result<PplCurve> {
+    let eval_len = eval_len.min(corpus.len());
+    assert!(prefill < eval_len, "prefill {prefill} >= eval {eval_len}");
+    let mut engine = ctx.engine(policy, overrides)?;
+    let toks = tokenizer::encode_bytes(&corpus[..eval_len]);
+    let prompt: Vec<i32> = toks[..prefill.max(1)].to_vec();
+    let teacher: Vec<i32> = toks[prefill.max(1)..].to_vec();
+    let req = GenRequest::teacher_forced(prompt, teacher);
+    let id = engine.add(req)?;
+    let mut points = Vec::new();
+    let mut nll_sum = 0.0f64;
+    let mut n_eval = 0usize;
+    let mut elapsed = 0.0f64;
+    let mut last_mark = Instant::now();
+    let mut last_count = 0usize;
+    while !engine.active_ids().is_empty() {
+        let t0 = Instant::now();
+        engine.step()?;
+        elapsed += t0.elapsed().as_secs_f64();
+        let seq = engine.seq(id).unwrap();
+        let new = &seq.logprobs[n_eval..];
+        for lp in new {
+            nll_sum -= lp;
+        }
+        n_eval = seq.logprobs.len();
+        let t = seq.cache.len();
+        if n_eval > 0 && (n_eval - last_count >= every || seq.done) {
+            let dt = last_mark.elapsed().as_secs_f64();
+            let tp = (n_eval - last_count) as f64 / dt.max(1e-9);
+            points.push(PplPoint {
+                t,
+                ppl: (nll_sum / n_eval as f64).exp(),
+                elapsed_s: elapsed,
+                throughput: tp,
+            });
+            last_mark = Instant::now();
+            last_count = n_eval;
+        }
+    }
+    let res = engine.remove(id).unwrap();
+    let final_ppl = res.ppl();
+    Ok(PplCurve {
+        policy: format!("{}{}", policy.name(), fmt_overrides(overrides)),
+        points,
+        final_ppl,
+        total_s: elapsed,
+    })
+}
+
+fn fmt_overrides(ov: &[(&str, &str)]) -> String {
+    if ov.is_empty() {
+        String::new()
+    } else {
+        let s: Vec<String> = ov.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        format!("[{}]", s.join(","))
+    }
+}
+
+/// Print a set of curves as aligned columns + dump CSV.
+pub fn print_curves(title: &str, curves: &[PplCurve], csv_path: &str) -> Result<()> {
+    println!("\n== {title} ==");
+    println!(
+        "{:<28} {:>10} {:>12} {:>12}",
+        "policy", "final PPL", "total s", "tok/s (end)"
+    );
+    for c in curves {
+        let tp = c.points.last().map(|p| p.throughput).unwrap_or(f64::NAN);
+        println!(
+            "{:<28} {:>10.3} {:>12.2} {:>12.1}",
+            c.policy, c.final_ppl, c.total_s, tp
+        );
+    }
+    let mut csv = String::from("policy,t,ppl,elapsed_s,throughput\n");
+    for c in curves {
+        for p in &c.points {
+            csv.push_str(&format!(
+                "{},{},{:.5},{:.4},{:.2}\n",
+                c.policy, p.t, p.ppl, p.elapsed_s, p.throughput
+            ));
+        }
+    }
+    std::fs::create_dir_all(std::path::Path::new(csv_path).parent().unwrap())?;
+    std::fs::write(csv_path, csv)?;
+    println!("(curve data -> {csv_path})");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Report helpers shared by harness drivers.
+
+use anyhow::Result;
+use std::path::Path;
+
+/// Append a markdown section to EXPERIMENTS-style logs.
+pub fn append_section(path: &str, title: &str, body: &str) -> Result<()> {
+    use std::io::Write;
+    if let Some(parent) = Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "\n## {title}\n\n{body}")?;
+    Ok(())
+}
+
+/// Simple fixed-width markdown table.
+pub fn md_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push('|');
+    for h in headers {
+        s.push_str(&format!(" {h} |"));
+    }
+    s.push_str("\n|");
+    for _ in headers {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for r in rows {
+        s.push('|');
+        for c in r {
+            s.push_str(&format!(" {c} |"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_shape() {
+        let t = md_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+    }
+}

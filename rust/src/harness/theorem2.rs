@@ -1,0 +1,167 @@
+//! Theorem 2 Monte-Carlo: empirical probability that Eq. 6 identifies
+//! the arg-top segment, as a function of the projection dimension n
+//! and the attention gap — overlaid with the theorem's sufficient
+//! condition. Pure rust (no artifacts): the math is Eq. 4/5/6 exactly.
+
+use crate::util::prng::SplitMix64;
+use anyhow::Result;
+
+/// phi_Omega(k) with Omega ~ N(0,1)^{n x d} (Eq. 4), k' = k / d^(1/4).
+fn phi(k: &[f32], omega: &[f32], n: usize) -> Vec<f32> {
+    let d = k.len();
+    let scale = 1.0 / (d as f32).sqrt().sqrt();
+    let kp: Vec<f32> = k.iter().map(|x| x * scale).collect();
+    let sq: f32 = 0.5 * kp.iter().map(|x| x * x).sum::<f32>();
+    let inv_sqrt_n = 1.0 / (n as f32).sqrt();
+    (0..n)
+        .map(|i| {
+            let row = &omega[i * d..(i + 1) * d];
+            let dot: f32 = row.iter().zip(&kp).map(|(a, b)| a * b).sum();
+            (dot - sq).exp() * inv_sqrt_n
+        })
+        .collect()
+}
+
+pub struct Thm2Point {
+    pub n: usize,
+    pub gap: f64,
+    pub success_rate: f64,
+    /// Gap the theorem requires for delta = 0.1 at this n.
+    pub required_gap: f64,
+}
+
+/// One trial: `n_segs` segments of `c` keys in R^d; segment 0's keys are
+/// biased towards the query direction by `bias` so it holds the top
+/// attention mass; success = Eq. 6 ranks segment 0 first.
+fn trial(rng: &mut SplitMix64, d: usize, c: usize, n_segs: usize, n: usize, bias: f32) -> (bool, f64) {
+    let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+    let qn: f32 = q.iter().map(|x| x * x).sum::<f32>();
+    let omega: Vec<f32> = (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+    let phi_q = phi(&q, &omega, n);
+    let mut seg_scores_exact = Vec::with_capacity(n_segs);
+    let mut seg_scores_approx = Vec::with_capacity(n_segs);
+    let scale = 1.0 / (d as f32).sqrt();
+    for s in 0..n_segs {
+        let mut exact = 0.0f64;
+        let mut feat = vec![0.0f32; n];
+        for _ in 0..c {
+            let mut k: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+            if s == 0 {
+                for (ki, qi) in k.iter_mut().zip(&q) {
+                    *ki += bias * qi / qn.sqrt().max(1e-6);
+                }
+            }
+            let dot: f32 = k.iter().zip(&q).map(|(a, b)| a * b).sum();
+            exact += ((dot * scale) as f64).exp();
+            for (f, p) in feat.iter_mut().zip(phi(&k, &omega, n)) {
+                *f += p;
+            }
+        }
+        let approx: f32 = feat.iter().zip(&phi_q).map(|(a, b)| a * b).sum::<f32>() / c as f32;
+        seg_scores_exact.push(exact / c as f64);
+        seg_scores_approx.push(approx);
+    }
+    // Normalized attention gap between top (seg 0 by construction,
+    // verify) and runner-up.
+    let top = crate::model::argmax(&seg_scores_approx.iter().map(|&x| x).collect::<Vec<f32>>());
+    let mut exact_sorted = seg_scores_exact.clone();
+    exact_sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let denom: f64 = seg_scores_exact.iter().sum::<f64>() * n_segs as f64;
+    let gap = (exact_sorted[0] - exact_sorted[1]) / denom.max(1e-12);
+    let truth = seg_scores_exact
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    (top == truth, gap)
+}
+
+/// Sweep n; report empirical success rate + the theorem's required gap.
+pub fn run(trials: usize, seed: u64) -> Result<Vec<Thm2Point>> {
+    let (d, c, n_segs, bias) = (32usize, 8usize, 8usize, 1.2f32);
+    let zeta: f64 = 1.5; // approximate max norm under the 0.5-scaled gaussians
+    let delta = 0.1f64;
+    let mut out = Vec::new();
+    for &n in &[8usize, 16, 32, 64, 128, 256, 512] {
+        let mut rng = SplitMix64::new(seed ^ n as u64);
+        let mut ok = 0usize;
+        let mut gap_sum = 0.0;
+        for _ in 0..trials {
+            let (success, gap) = trial(&mut rng, d, c, n_segs, n, bias);
+            ok += success as usize;
+            gap_sum += gap;
+        }
+        // Theorem 2 sufficient gap: (1/c) exp(zeta^2/sqrt(d)) sqrt(8 log(2(c-1)/delta) / n)
+        let required = (1.0 / c as f64)
+            * (zeta * zeta / (d as f64).sqrt()).exp()
+            * (8.0 * (2.0 * (c as f64 - 1.0) / delta).ln() / n as f64).sqrt();
+        out.push(Thm2Point {
+            n,
+            gap: gap_sum / trials as f64,
+            success_rate: ok as f64 / trials as f64,
+            required_gap: required,
+        });
+    }
+    Ok(out)
+}
+
+pub fn print(points: &[Thm2Point], csv_path: &str) -> Result<()> {
+    println!("\n== Theorem 2 Monte-Carlo: top-segment identification vs n ==");
+    println!(
+        "{:>6} {:>14} {:>14} {:>16}",
+        "n", "success rate", "observed gap", "thm2 gap (d=.1)"
+    );
+    for p in points {
+        println!(
+            "{:>6} {:>14.3} {:>14.5} {:>16.5}",
+            p.n, p.success_rate, p.gap, p.required_gap
+        );
+    }
+    let mut csv = String::from("n,success_rate,observed_gap,required_gap\n");
+    for p in points {
+        csv.push_str(&format!(
+            "{},{:.5},{:.6},{:.6}\n",
+            p.n, p.success_rate, p.gap, p.required_gap
+        ));
+    }
+    std::fs::create_dir_all(std::path::Path::new(csv_path).parent().unwrap())?;
+    std::fs::write(csv_path, csv)?;
+    println!("(data -> {csv_path})");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phi_unbiased_kernel_estimate() {
+        // E[phi(q).phi(k)] ~= exp(q.k/sqrt(d)) for large n.
+        let mut rng = SplitMix64::new(1);
+        let d = 16;
+        let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32 * 0.4).collect();
+        let k: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32 * 0.4).collect();
+        let n = 16384;
+        let omega: Vec<f32> = (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+        let est: f32 = phi(&q, &omega, n).iter().zip(phi(&k, &omega, n)).map(|(a, b)| a * b).sum();
+        let dot: f32 = q.iter().zip(&k).map(|(a, b)| a * b).sum();
+        let exact = (dot / (d as f32).sqrt()).exp();
+        assert!(
+            (est - exact).abs() / exact < 0.2,
+            "est {est} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn success_rate_increases_with_n() {
+        let points = run(40, 3).unwrap();
+        let first = points.first().unwrap().success_rate;
+        let last = points.last().unwrap().success_rate;
+        assert!(
+            last >= first,
+            "success should not degrade with larger n: {first} -> {last}"
+        );
+        assert!(last > 0.8, "large-n success should be high: {last}");
+    }
+}

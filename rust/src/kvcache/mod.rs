@@ -1,0 +1,488 @@
+//! Paged KV cache + φ-feature store (the vLLM-style substrate).
+//!
+//! A shared `BlockPool` owns fixed-size blocks; each block holds
+//! `BLOCK_TOKENS` tokens of K, V and random features for **all**
+//! (layer, head) planes. Sequences own a list of block ids; freeing a
+//! sequence returns its blocks to the pool. The hot-path `gather_*`
+//! routines copy policy-selected token rows into the padded buffers
+//! the decode artifacts take as inputs.
+//!
+//! Layouts inside a block (row-major):
+//!   k, v  : [L, H, BLOCK_TOKENS, dh]
+//!   feat  : [L, H, BLOCK_TOKENS, n]
+
+use crate::config::ModelConfig;
+use anyhow::{anyhow, Result};
+
+pub const BLOCK_TOKENS: usize = 16;
+
+struct Block {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    feat: Vec<f32>,
+}
+
+/// Shared allocator. Not thread-safe by itself — the engine serializes
+/// access (single scheduler thread owns it).
+pub struct BlockPool {
+    cfg: ModelConfig,
+    n_feat: usize,
+    blocks: Vec<Block>,
+    free: Vec<usize>,
+    capacity: usize,
+}
+
+impl BlockPool {
+    pub fn new(cfg: &ModelConfig, n_feat: usize, capacity_blocks: usize) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            n_feat,
+            blocks: Vec::new(),
+            free: Vec::new(),
+            capacity: capacity_blocks,
+        }
+    }
+
+    fn plane(&self) -> usize {
+        self.cfg.n_layers * self.cfg.n_heads
+    }
+
+    fn kv_block_len(&self) -> usize {
+        self.plane() * BLOCK_TOKENS * self.cfg.d_head
+    }
+
+    fn feat_block_len(&self) -> usize {
+        self.plane() * BLOCK_TOKENS * self.n_feat
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn n_feat(&self) -> usize {
+        self.n_feat
+    }
+
+    pub fn allocate(&mut self) -> Result<usize> {
+        if let Some(id) = self.free.pop() {
+            return Ok(id);
+        }
+        if self.blocks.len() >= self.capacity {
+            return Err(anyhow!(
+                "kv cache exhausted ({} blocks = {} tokens)",
+                self.capacity,
+                self.capacity * BLOCK_TOKENS
+            ));
+        }
+        let id = self.blocks.len();
+        self.blocks.push(Block {
+            k: vec![0.0; self.kv_block_len()],
+            v: vec![0.0; self.kv_block_len()],
+            feat: vec![0.0; self.feat_block_len()],
+        });
+        Ok(id)
+    }
+
+    pub fn release(&mut self, ids: &[usize]) {
+        for &id in ids {
+            debug_assert!(!self.free.contains(&id), "double free of block {id}");
+            self.free.push(id);
+        }
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.blocks.len() - self.free.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.capacity - self.used_blocks()
+    }
+}
+
+/// Per-sequence cache view: owns blocks in order; token i lives at
+/// block `blocks[i / BT]`, slot `i % BT`.
+pub struct SeqCache {
+    pub blocks: Vec<usize>,
+    len: usize,
+    n_feat: usize,
+}
+
+impl SeqCache {
+    pub fn new(n_feat: usize) -> Self {
+        Self { blocks: Vec::new(), len: 0, n_feat }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one token's K/V/feat for every (l, h).
+    /// Layouts: k_new/v_new [L, H, dh]; feat [L, H, n].
+    pub fn append(
+        &mut self,
+        pool: &mut BlockPool,
+        k_new: &[f32],
+        v_new: &[f32],
+        feat: &[f32],
+    ) -> Result<()> {
+        let cfg = &pool.cfg;
+        let (lh, dh, nf) = (pool.plane(), cfg.d_head, pool.n_feat);
+        debug_assert_eq!(k_new.len(), lh * dh);
+        debug_assert_eq!(feat.len(), lh * nf);
+        debug_assert_eq!(self.n_feat, nf);
+        if self.len % BLOCK_TOKENS == 0 {
+            let id = pool.allocate()?;
+            self.blocks.push(id);
+        }
+        let slot = self.len % BLOCK_TOKENS;
+        let bid = *self.blocks.last().unwrap();
+        // Writes go plane by plane: src row (l,h) -> block offset.
+        for p in 0..lh {
+            let dst = (p * BLOCK_TOKENS + slot) * dh;
+            let src = p * dh;
+            pool.blocks[bid].k[dst..dst + dh].copy_from_slice(&k_new[src..src + dh]);
+            pool.blocks[bid].v[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
+            let dstf = (p * BLOCK_TOKENS + slot) * nf;
+            let srcf = p * nf;
+            pool.blocks[bid].feat[dstf..dstf + nf]
+                .copy_from_slice(&feat[srcf..srcf + nf]);
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Append the first `t_len` tokens of a prefill chunk whose source
+    /// layout is [L, H, src_t, dh] / [L, H, src_t, n]. `t_len < src_t`
+    /// when the chunk was padded (prompt tail); padded positions'
+    /// outputs are simply not appended (causality makes the real
+    /// positions' outputs independent of the padding).
+    pub fn append_chunk(
+        &mut self,
+        pool: &mut BlockPool,
+        t_len: usize,
+        src_t: usize,
+        k_c: &[f32],
+        v_c: &[f32],
+        feat_c: &[f32],
+    ) -> Result<()> {
+        let cfg = pool.cfg.clone();
+        let (lh, dh, nf) = (pool.plane(), cfg.d_head, pool.n_feat);
+        debug_assert!(t_len <= src_t);
+        debug_assert_eq!(k_c.len(), lh * src_t * dh);
+        for t in 0..t_len {
+            if self.len % BLOCK_TOKENS == 0 {
+                let id = pool.allocate()?;
+                self.blocks.push(id);
+            }
+            let slot = self.len % BLOCK_TOKENS;
+            let bid = *self.blocks.last().unwrap();
+            let blk = &mut pool.blocks[bid];
+            for p in 0..lh {
+                let src = (p * src_t + t) * dh;
+                let dst = (p * BLOCK_TOKENS + slot) * dh;
+                blk.k[dst..dst + dh].copy_from_slice(&k_c[src..src + dh]);
+                blk.v[dst..dst + dh].copy_from_slice(&v_c[src..src + dh]);
+                let srcf = (p * src_t + t) * nf;
+                let dstf = (p * BLOCK_TOKENS + slot) * nf;
+                blk.feat[dstf..dstf + nf].copy_from_slice(&feat_c[srcf..srcf + nf]);
+            }
+            self.len += 1;
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn locate(&self, idx: usize) -> (usize, usize) {
+        (self.blocks[idx / BLOCK_TOKENS], idx % BLOCK_TOKENS)
+    }
+
+    /// Read one token's key for plane (l, h) — O(1).
+    pub fn key<'p>(&self, pool: &'p BlockPool, l: usize, h: usize, idx: usize) -> &'p [f32] {
+        let (bid, slot) = self.locate(idx);
+        let p = l * pool.cfg.n_heads + h;
+        let dh = pool.cfg.d_head;
+        let off = (p * BLOCK_TOKENS + slot) * dh;
+        &pool.blocks[bid].k[off..off + dh]
+    }
+
+    pub fn feat<'p>(&self, pool: &'p BlockPool, l: usize, h: usize, idx: usize) -> &'p [f32] {
+        let (bid, slot) = self.locate(idx);
+        let p = l * pool.cfg.n_heads + h;
+        let nf = pool.n_feat;
+        let off = (p * BLOCK_TOKENS + slot) * nf;
+        &pool.blocks[bid].feat[off..off + nf]
+    }
+
+    /// Gather selected tokens of plane (l, h) into `dst_k`/`dst_v`
+    /// (each [S, dh], S >= sel.len(); rows beyond sel.len() untouched —
+    /// callers zero or mask them).
+    pub fn gather_plane(
+        &self,
+        pool: &BlockPool,
+        l: usize,
+        h: usize,
+        sel: &[u32],
+        dst_k: &mut [f32],
+        dst_v: &mut [f32],
+    ) {
+        let cfg = &pool.cfg;
+        let dh = cfg.d_head;
+        let p = l * cfg.n_heads + h;
+        let base = p * BLOCK_TOKENS * dh;
+        for (row, &idx) in sel.iter().enumerate() {
+            let (bid, slot) = self.locate(idx as usize);
+            let off = base + slot * dh;
+            let blk = &pool.blocks[bid];
+            dst_k[row * dh..(row + 1) * dh].copy_from_slice(&blk.k[off..off + dh]);
+            dst_v[row * dh..(row + 1) * dh].copy_from_slice(&blk.v[off..off + dh]);
+        }
+    }
+
+    /// Gather contiguous [start, end) K/V for all planes into
+    /// [L, H, P, dh] buffers (prefill past staging). P >= end-start.
+    pub fn gather_past(
+        &self,
+        pool: &BlockPool,
+        start: usize,
+        end: usize,
+        p_bucket: usize,
+        dst_k: &mut [f32],
+        dst_v: &mut [f32],
+    ) {
+        let cfg = &pool.cfg;
+        let (dh, lh) = (cfg.d_head, pool.plane());
+        debug_assert!(dst_k.len() >= lh * p_bucket * dh);
+        for p in 0..lh {
+            for (row, idx) in (start..end).enumerate() {
+                let (bid, slot) = self.locate(idx);
+                let off = (p * BLOCK_TOKENS + slot) * dh;
+                let dst = (p * p_bucket + row) * dh;
+                let blk = &pool.blocks[bid];
+                dst_k[dst..dst + dh].copy_from_slice(&blk.k[off..off + dh]);
+                dst_v[dst..dst + dh].copy_from_slice(&blk.v[off..off + dh]);
+            }
+        }
+    }
+
+    /// Release all blocks back to the pool.
+    pub fn free(&mut self, pool: &mut BlockPool) {
+        pool.release(&self.blocks);
+        self.blocks.clear();
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::check;
+    use crate::util::prng::SplitMix64;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ffn: 16,
+            n_feat: 8,
+            max_train_len: 64,
+            vocab: 16,
+        }
+    }
+
+    fn fill_token(seed: usize, lh: usize, dh: usize, nf: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let k: Vec<f32> = (0..lh * dh).map(|i| (seed * 1000 + i) as f32).collect();
+        let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+        let f: Vec<f32> = (0..lh * nf).map(|i| (seed * 7 + i) as f32).collect();
+        (k, v, f)
+    }
+
+    #[test]
+    fn append_then_read_back() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut seq = SeqCache::new(8);
+        for t in 0..40 {
+            let (k, v, f) = fill_token(t, 4, 4, 8);
+            seq.append(&mut pool, &k, &v, &f).unwrap();
+        }
+        assert_eq!(seq.len(), 40);
+        assert_eq!(seq.blocks.len(), 3); // ceil(40/16)
+        // token 17, plane (l=1,h=0) => p=2, src offset 2*4=8
+        let got = seq.key(&pool, 1, 0, 17);
+        let (want_k, _, _) = fill_token(17, 4, 4, 8);
+        assert_eq!(got, &want_k[8..12]);
+    }
+
+    #[test]
+    fn gather_matches_pointwise_reads() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut seq = SeqCache::new(8);
+        for t in 0..50 {
+            let (k, v, f) = fill_token(t, 4, 4, 8);
+            seq.append(&mut pool, &k, &v, &f).unwrap();
+        }
+        let sel = [3u32, 17, 31, 49];
+        let mut dk = vec![0.0; 8 * 4];
+        let mut dv = vec![0.0; 8 * 4];
+        seq.gather_plane(&pool, 1, 1, &sel, &mut dk, &mut dv);
+        for (row, &idx) in sel.iter().enumerate() {
+            assert_eq!(&dk[row * 4..row * 4 + 4], seq.key(&pool, 1, 1, idx as usize));
+        }
+    }
+
+    #[test]
+    fn append_chunk_equals_append_tokens() {
+        let c = cfg();
+        let (lh, dh, nf, t_len) = (4, 4, 8, 20);
+        let mut pool1 = BlockPool::new(&c, 8, 100);
+        let mut pool2 = BlockPool::new(&c, 8, 100);
+        let mut s1 = SeqCache::new(8);
+        let mut s2 = SeqCache::new(8);
+        // chunk layout [L,H,T,dh]
+        let mut kc = vec![0.0; lh * t_len * dh];
+        let mut vc = vec![0.0; lh * t_len * dh];
+        let mut fc = vec![0.0; lh * t_len * nf];
+        for t in 0..t_len {
+            let (k, v, f) = fill_token(t, lh, dh, nf);
+            for p in 0..lh {
+                for j in 0..dh {
+                    kc[(p * t_len + t) * dh + j] = k[p * dh + j];
+                    vc[(p * t_len + t) * dh + j] = v[p * dh + j];
+                }
+                for j in 0..nf {
+                    fc[(p * t_len + t) * nf + j] = f[p * nf + j];
+                }
+            }
+            s1.append(&mut pool1, &k, &v, &f).unwrap();
+        }
+        s2.append_chunk(&mut pool2, t_len, t_len, &kc, &vc, &fc).unwrap();
+        assert_eq!(s1.len(), s2.len());
+        for idx in 0..t_len {
+            for l in 0..2 {
+                for h in 0..2 {
+                    assert_eq!(
+                        s1.key(&pool1, l, h, idx),
+                        s2.key(&pool2, l, h, idx),
+                        "mismatch at token {idx} plane ({l},{h})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn append_chunk_partial_with_stride() {
+        // Padded tail: append only the first 5 tokens of a 16-wide chunk.
+        let c = cfg();
+        let (lh, dh, nf, src_t, real) = (4, 4, 8, 16, 5);
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut seq = SeqCache::new(8);
+        let mut kc = vec![0.0f32; lh * src_t * dh];
+        let vc = kc.clone();
+        let fc = vec![0.0f32; lh * src_t * nf];
+        for p in 0..lh {
+            for t in 0..src_t {
+                for j in 0..dh {
+                    kc[(p * src_t + t) * dh + j] = (p * 1000 + t * 10 + j) as f32;
+                }
+            }
+        }
+        seq.append_chunk(&mut pool, real, src_t, &kc, &vc, &fc).unwrap();
+        assert_eq!(seq.len(), real);
+        // token 3, plane (1,0)=p2 must equal source row (2, 3).
+        let got = seq.key(&pool, 1, 0, 3);
+        let want: Vec<f32> = (0..4).map(|j| (2 * 1000 + 3 * 10 + j) as f32).collect();
+        assert_eq!(got, &want[..]);
+    }
+
+    #[test]
+    fn free_then_reuse() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 4); // 64 tokens capacity
+        let mut seq = SeqCache::new(8);
+        let (k, v, f) = fill_token(0, 4, 4, 8);
+        for _ in 0..64 {
+            seq.append(&mut pool, &k, &v, &f).unwrap();
+        }
+        assert!(seq.append(&mut pool, &k, &v, &f).is_err(), "capacity enforced");
+        seq.free(&mut pool);
+        assert_eq!(pool.used_blocks(), 0);
+        let mut seq2 = SeqCache::new(8);
+        for _ in 0..64 {
+            seq2.append(&mut pool, &k, &v, &f).unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_allocator_never_aliases_live_blocks() {
+        // Property: interleaved alloc/free across many sequences never
+        // hands the same block to two live sequences.
+        check(
+            42,
+            50,
+            |r: &mut SplitMix64| {
+                (0..30).map(|_| r.below(3) as usize).collect::<Vec<usize>>()
+            },
+            |ops| {
+                let c = cfg();
+                let mut pool = BlockPool::new(&c, 8, 64);
+                let mut seqs: Vec<SeqCache> = Vec::new();
+                let (k, v, f) = fill_token(0, 4, 4, 8);
+                for &op in ops {
+                    match op {
+                        0 => seqs.push(SeqCache::new(8)),
+                        1 => {
+                            if let Some(s) = seqs.iter_mut().last() {
+                                let _ = s.append(&mut pool, &k, &v, &f);
+                            }
+                        }
+                        _ => {
+                            if !seqs.is_empty() {
+                                let mut s = seqs.remove(0);
+                                s.free(&mut pool);
+                            }
+                        }
+                    }
+                    let mut live: Vec<usize> =
+                        seqs.iter().flat_map(|s| s.blocks.iter().copied()).collect();
+                    let n = live.len();
+                    live.sort_unstable();
+                    live.dedup();
+                    if live.len() != n {
+                        return Err("block aliased across live sequences".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gather_past_layout() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut seq = SeqCache::new(8);
+        for t in 0..30 {
+            let (k, v, f) = fill_token(t, 4, 4, 8);
+            seq.append(&mut pool, &k, &v, &f).unwrap();
+        }
+        let p_bucket = 32;
+        let mut dk = vec![0.0; 4 * p_bucket * 4];
+        let mut dv = vec![0.0; 4 * p_bucket * 4];
+        seq.gather_past(&pool, 5, 25, p_bucket, &mut dk, &mut dv);
+        // plane (0,1)=p1, row 0 == token 5
+        let off = (1 * p_bucket + 0) * 4;
+        assert_eq!(&dk[off..off + 4], seq.key(&pool, 0, 1, 5));
+        // plane (1,1)=p3, row 19 == token 24
+        let off = (3 * p_bucket + 19) * 4;
+        assert_eq!(&dk[off..off + 4], seq.key(&pool, 1, 1, 24));
+    }
+}

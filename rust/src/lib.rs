@@ -1,0 +1,20 @@
+//! radar-serve: a rust + JAX + Pallas serving framework reproducing
+//! "Radar: Fast Long-Context Decoding for Any Transformer" (ICLR 2025).
+//!
+//! Layering (DESIGN.md):
+//! - L1/L2 live in `python/compile/` and run once at `make artifacts`;
+//! - this crate is L3: the serving coordinator that loads the HLO-text
+//!   artifacts via PJRT and owns the entire request path.
+
+pub mod config;
+pub mod engine;
+pub mod harness;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod policy;
+pub mod radar;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,291 @@
+//! radar-serve CLI: serving front-end + every paper experiment
+//! (DESIGN.md §6 maps subcommands to tables/figures).
+
+use anyhow::{anyhow, Result};
+use radar_serve::config::PolicyKind;
+use radar_serve::engine::GenRequest;
+use radar_serve::harness::{flagrate, longbench, ppl, theorem2, Ctx};
+use radar_serve::model::tokenizer;
+use radar_serve::util::cli::Args;
+use radar_serve::workload::load_corpus;
+
+const USAGE: &str = "radar-serve <command> [--flags]
+
+serving:
+  serve       --model sm --addr 127.0.0.1:8080 --policy radar [--set k=v]
+  generate    --model sm --prompt '...' --max-new 64 --policy radar
+
+experiments (paper artifacts):
+  fig2        PPL + time curves: vanilla vs streaming vs radar
+  fig3        no-prompt generation curves (adds h2o)
+  fig4        hyper-parameter sweeps over n and k
+  fig5        ablations: radar vs exact/random/lowest selection
+  fig6        H2O + SnapKV failure curves on the md model
+  table1      LongBench-S (all methods x n_c)
+  fig7        segment-attention flag rates + heatmap CSV
+  thm2        Theorem 2 Monte-Carlo
+  ppl         custom curve: --policy X --prefill N --eval-len N
+
+common flags:
+  --artifacts artifacts   --model sm|md   --out results/
+";
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    radar_serve::util::set_log_level(if args.bool_or("quiet", false) { 0 } else { 1 });
+    let cmd = args.subcommand().unwrap_or("help");
+    let root = args.str_or("artifacts", "artifacts");
+    let out = args.str_or("out", "results");
+    match cmd {
+        "serve" => serve(args, root),
+        "generate" => generate(args, root),
+        "fig2" => fig2(args, root, out),
+        "fig3" => fig3(args, root, out),
+        "fig4" => fig4(args, root, out),
+        "fig5" => fig5(args, root, out),
+        "fig6" => fig6(args, root, out),
+        "table1" => table1(args, root, out),
+        "fig7" => fig7(args, root, out),
+        "thm2" => thm2(args, out),
+        "ppl" => custom_ppl(args, root, out),
+        "inspect-artifacts" => inspect(args, root),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn serving_overrides(args: &Args) -> Vec<(String, String)> {
+    // --set k=v,k2=v2
+    args.get("set")
+        .map(|s| {
+            s.split(',')
+                .filter_map(|kv| kv.split_once('='))
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn serve(args: &Args, root: &str) -> Result<()> {
+    let ctx = Ctx::load(root, args.str_or("model", "sm"))?;
+    let policy = PolicyKind::parse(args.str_or("policy", "radar"))?;
+    let ov = serving_overrides(args);
+    let ov_ref: Vec<(&str, &str)> = ov.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let engine = ctx.engine(policy, &ov_ref)?;
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    radar_serve::server::serve(engine, args.str_or("addr", "127.0.0.1:8080"), stop)
+}
+
+fn generate(args: &Args, root: &str) -> Result<()> {
+    let ctx = Ctx::load(root, args.str_or("model", "sm"))?;
+    let policy = PolicyKind::parse(args.str_or("policy", "radar"))?;
+    let ov = serving_overrides(args);
+    let ov_ref: Vec<(&str, &str)> = ov.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let mut engine = ctx.engine(policy, &ov_ref)?;
+    let prompt = args.get("prompt").ok_or_else(|| anyhow!("--prompt required"))?;
+    let req = GenRequest::new(tokenizer::encode(prompt), args.usize_or("max-new", 64));
+    let id = engine.add(req)?;
+    let results = engine.run_to_completion()?;
+    let res = results.into_iter().find(|r| r.id == id).unwrap();
+    let text = tokenizer::decode(&res.tokens);
+    println!("{text}");
+    eprintln!(
+        "[{} tokens, prefill {:.1} ms, decode {:.1} ms, {:.1} tok/s]",
+        res.logprobs.len(),
+        res.prefill_ms,
+        res.decode_ms,
+        res.logprobs.len() as f64 / (res.decode_ms / 1e3).max(1e-9)
+    );
+    Ok(())
+}
+
+/// Fig. 2: book + code corpora, prefill 1024, decode to eval_len.
+fn fig2(args: &Args, root: &str, out: &str) -> Result<()> {
+    let model = args.str_or("model", "sm");
+    let ctx = Ctx::load(root, model)?;
+    let prefill = args.usize_or("prefill", 1024);
+    let eval_len = args.usize_or("eval-len", if model == "sm" { 3072 } else { 2048 });
+    let every = args.usize_or("every", 256);
+    for corpus_name in ["book_eval.bin", "code_eval.bin"] {
+        let corpus = load_corpus(&ctx.paths, corpus_name)?;
+        let mut curves = Vec::new();
+        for p in [PolicyKind::Vanilla, PolicyKind::Streaming, PolicyKind::Radar] {
+            let ov: Vec<(&str, &str)> = match p {
+                PolicyKind::Streaming => vec![("window", "64"), ("budget", "192")],
+                _ => vec![],
+            };
+            curves.push(ppl::ppl_curve(&ctx, p, &ov, &corpus, prefill, eval_len, every)?);
+            radar_serve::info!("fig2 {corpus_name}: {} done", p.name());
+        }
+        ppl::print_curves(
+            &format!("Fig 2 [{model}/{corpus_name}] prefill={prefill}"),
+            &curves,
+            &format!("{out}/fig2_{model}_{}.csv", corpus_name.trim_end_matches(".bin")),
+        )?;
+    }
+    Ok(())
+}
+
+/// Fig. 3: generation without prompts (prefill ~1 token).
+fn fig3(args: &Args, root: &str, out: &str) -> Result<()> {
+    let model = args.str_or("model", "sm");
+    let ctx = Ctx::load(root, model)?;
+    let eval_len = args.usize_or("eval-len", 1536);
+    let corpus = load_corpus(&ctx.paths, "book_eval.bin")?;
+    let mut curves = Vec::new();
+    for p in [PolicyKind::Vanilla, PolicyKind::Streaming, PolicyKind::H2O, PolicyKind::Radar] {
+        let ov: Vec<(&str, &str)> = match p {
+            PolicyKind::Streaming => vec![("window", "64"), ("budget", "192")],
+            PolicyKind::H2O => vec![("window", "64"), ("budget", "192")],
+            _ => vec![],
+        };
+        curves.push(ppl::ppl_curve(&ctx, p, &ov, &corpus, 1, eval_len, 128)?);
+        radar_serve::info!("fig3: {} done", p.name());
+    }
+    ppl::print_curves(
+        &format!("Fig 3 [{model}] no-prompt generation"),
+        &curves,
+        &format!("{out}/fig3_{model}.csv"),
+    )
+}
+
+/// Fig. 4: PPL at fixed length vs n (k=8) and vs k (n=128).
+fn fig4(args: &Args, root: &str, out: &str) -> Result<()> {
+    let ctx = Ctx::load(root, "sm")?;
+    let corpus = load_corpus(&ctx.paths, "book_eval.bin")?;
+    // Stay inside the model's native context (max_train_len) so the
+    // sweep measures selection quality, not RoPE extrapolation.
+    let prefill = args.usize_or("prefill", 128);
+    let eval_len = args.usize_or("eval-len", 512);
+    let mut curves = Vec::new();
+    for n in args.usize_list_or("ns", &[32, 64, 128, 256]) {
+        let ns = n.to_string();
+        let ov = vec![("n_feat", ns.as_str())];
+        curves.push(ppl::ppl_curve(&ctx, PolicyKind::Radar, &ov, &corpus, prefill, eval_len, 512)?);
+        radar_serve::info!("fig4: n={n} done");
+    }
+    for k in args.usize_list_or("ks", &[2, 4, 8, 16]) {
+        let ks = k.to_string();
+        let ov = vec![("k", ks.as_str())];
+        curves.push(ppl::ppl_curve(&ctx, PolicyKind::Radar, &ov, &corpus, prefill, eval_len, 512)?);
+        radar_serve::info!("fig4: k={k} done");
+    }
+    ppl::print_curves("Fig 4: effect of n and k", &curves, &format!("{out}/fig4.csv"))
+}
+
+/// Fig. 5: selection-strategy ablations.
+fn fig5(args: &Args, root: &str, out: &str) -> Result<()> {
+    let ctx = Ctx::load(root, "sm")?;
+    let corpus = load_corpus(&ctx.paths, "book_eval.bin")?;
+    // Native-context evaluation (see fig4 note).
+    let prefill = args.usize_or("prefill", 128);
+    let eval_len = args.usize_or("eval-len", 512);
+    let mut curves = Vec::new();
+    for p in [
+        PolicyKind::Radar,
+        PolicyKind::RadarLowest,
+        PolicyKind::RadarRandom,
+        PolicyKind::RadarExact,
+    ] {
+        // window=16 isolates segment selection (the shared sliding
+        // window would otherwise mask the strategies' differences).
+        let ov = vec![("window", "16")];
+        curves.push(ppl::ppl_curve(&ctx, p, &ov, &corpus, prefill, eval_len, 256)?);
+        radar_serve::info!("fig5: {} done", p.name());
+    }
+    ppl::print_curves("Fig 5: segment-selection ablations", &curves, &format!("{out}/fig5.csv"))
+}
+
+/// Fig. 6: H2O + SnapKV on the md model (failure shapes).
+fn fig6(args: &Args, root: &str, out: &str) -> Result<()> {
+    let ctx = Ctx::load(root, "md")?;
+    let corpus = load_corpus(&ctx.paths, "book_eval.bin")?;
+    let prefill = args.usize_or("prefill", 512);
+    let eval_len = args.usize_or("eval-len", 1536);
+    let mut curves = Vec::new();
+    for p in [PolicyKind::Vanilla, PolicyKind::H2O, PolicyKind::SnapKV, PolicyKind::Radar] {
+        let ov: Vec<(&str, &str)> = match p {
+            PolicyKind::H2O | PolicyKind::SnapKV => vec![("window", "64"), ("budget", "192")],
+            _ => vec![],
+        };
+        curves.push(ppl::ppl_curve(&ctx, p, &ov, &corpus, prefill, eval_len, 256)?);
+        radar_serve::info!("fig6: {} done", p.name());
+    }
+    ppl::print_curves("Fig 6 [md]: H2O/SnapKV failures", &curves, &format!("{out}/fig6_md.csv"))
+}
+
+/// Table 1: LongBench-S.
+fn table1(args: &Args, root: &str, out: &str) -> Result<()> {
+    let model = args.str_or("model", "sm");
+    let ctx = Ctx::load(root, model)?;
+    let instances = args.usize_or("instances", 3);
+    let methods = [
+        PolicyKind::Vanilla,
+        PolicyKind::Streaming,
+        PolicyKind::H2O,
+        PolicyKind::SnapKV,
+        PolicyKind::SubGen,
+        PolicyKind::Radar,
+    ];
+    for nc in args.usize_list_or("ncs", &[128, 256]) {
+        let ctx_len = args.usize_or("ctx-len", 448);
+        let rows = longbench::run_table(&ctx, ctx_len, nc, instances, &methods)?;
+        longbench::print_table(
+            &format!("Table 1 [{model}] n_c={nc} ctx={ctx_len} (Landmark: N/A, training-based)"),
+            &rows,
+            &format!("{out}/table1_{model}_nc{nc}.csv"),
+        )?;
+    }
+    Ok(())
+}
+
+fn fig7(args: &Args, root: &str, out: &str) -> Result<()> {
+    let ctx = Ctx::load(root, args.str_or("model", "sm"))?;
+    let corpus = load_corpus(&ctx.paths, "book_eval.bin")?;
+    let n_queries = args.usize_or("queries", 32);
+    let n_feat = args.usize_or("n", 128);
+    let o = flagrate::run(&ctx, &corpus, n_queries, n_feat)?;
+    flagrate::print(&o, &format!("{out}/fig7_heatmap.csv"))
+}
+
+fn thm2(args: &Args, out: &str) -> Result<()> {
+    let points = theorem2::run(args.usize_or("trials", 200), 7)?;
+    theorem2::print(&points, &format!("{out}/thm2.csv"))
+}
+
+fn custom_ppl(args: &Args, root: &str, out: &str) -> Result<()> {
+    let ctx = Ctx::load(root, args.str_or("model", "sm"))?;
+    let corpus = load_corpus(&ctx.paths, args.str_or("corpus", "book_eval.bin"))?;
+    let policy = PolicyKind::parse(args.str_or("policy", "radar"))?;
+    let ov = serving_overrides(args);
+    let ov_ref: Vec<(&str, &str)> = ov.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let curve = ppl::ppl_curve(
+        &ctx,
+        policy,
+        &ov_ref,
+        &corpus,
+        args.usize_or("prefill", 512),
+        args.usize_or("eval-len", 1536),
+        args.usize_or("every", 256),
+    )?;
+    ppl::print_curves("custom ppl", &[curve], &format!("{out}/ppl_custom.csv"))
+}
+
+fn inspect(args: &Args, root: &str) -> Result<()> {
+    let ctx = Ctx::load(root, args.str_or("model", "sm"))?;
+    println!("model: {:?}", ctx.rt.config);
+    println!("{} artifacts:", ctx.rt.registry.len());
+    for a in ctx.rt.registry.all() {
+        println!("  {:?} {} (B={} len={} n={})", a.kind, a.name, a.batch, a.len, a.n_feat);
+    }
+    Ok(())
+}

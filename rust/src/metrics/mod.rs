@@ -1,0 +1,137 @@
+//! Serving metrics: counters + latency histograms with a text
+//! exposition (the `/metrics` endpoint and per-run summaries).
+
+use crate::util::stats::Series;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    latencies_us: BTreeMap<String, Series>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn observe_us(&self, name: &str, us: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies_us.entry(name.to_string()).or_default().push(us);
+    }
+
+    /// Time a closure into the named latency series.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.observe_us(name, t.elapsed().as_secs_f64() * 1e6);
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn latency_mean_us(&self, name: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .latencies_us
+            .get(name)
+            .map(|s| s.mean())
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn latency_count(&self, name: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .latencies_us
+            .get(name)
+            .map(|s| s.len())
+            .unwrap_or(0)
+    }
+
+    /// Plain-text exposition (one metric per line).
+    pub fn render(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &g.counters {
+            out.push_str(&format!("counter {k} {v}\n"));
+        }
+        for (k, s) in &g.latencies_us {
+            out.push_str(&format!(
+                "latency_us {k} count {} mean {:.1} p50 {:.1} p99 {:.1}\n",
+                s.len(),
+                s.mean(),
+                s.p50(),
+                s.p99(),
+            ));
+        }
+        out
+    }
+
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.clear();
+        g.latencies_us.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("tokens");
+        m.add("tokens", 4);
+        assert_eq!(m.counter("tokens"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn latency_series() {
+        let m = Metrics::new();
+        for i in 0..10 {
+            m.observe_us("step", i as f64);
+        }
+        assert_eq!(m.latency_count("step"), 10);
+        assert!((m.latency_mean_us("step") - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_records() {
+        let m = Metrics::new();
+        let x = m.time("work", || 42);
+        assert_eq!(x, 42);
+        assert_eq!(m.latency_count("work"), 1);
+    }
+
+    #[test]
+    fn render_contains_all() {
+        let m = Metrics::new();
+        m.inc("a");
+        m.observe_us("b", 1.0);
+        let r = m.render();
+        assert!(r.contains("counter a 1"));
+        assert!(r.contains("latency_us b"));
+    }
+}

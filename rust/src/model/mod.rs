@@ -1,0 +1,169 @@
+//! Model-adjacent helpers that live rust-side: the byte tokenizer,
+//! embedding lookup + final head (cheap row-copy / small matmul done on
+//! host from the weight host-copies — verified against python goldens),
+//! and sampling.
+
+use crate::config::ModelConfig;
+use crate::runtime::Runtime;
+use crate::util::prng::SplitMix64;
+
+/// Byte-level tokenizer: text <-> u8 ids (vocab 256).
+pub mod tokenizer {
+    pub fn encode(text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn encode_bytes(bytes: &[u8]) -> Vec<i32> {
+        bytes.iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids.iter().map(|&i| (i.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn roundtrip_ascii() {
+            let s = "hello <<k17:v83>> def fn_01(x):";
+            assert_eq!(decode(&encode(s)), s);
+        }
+
+        #[test]
+        fn bytes_match_python_byte_level() {
+            assert_eq!(encode("Ab"), vec![65, 98]);
+        }
+    }
+}
+
+/// Host-side embedding lookup: x[b] = emb[token_b]. Layout [B, d].
+pub fn embed(rt: &Runtime, tokens: &[i32]) -> Vec<f32> {
+    let (shape, emb) = rt.weights.host_tensor("emb").expect("emb tensor");
+    let d = shape[1];
+    let mut x = Vec::with_capacity(tokens.len() * d);
+    for &t in tokens {
+        let row = (t as usize).min(shape[0] - 1) * d;
+        x.extend_from_slice(&emb[row..row + d]);
+    }
+    x
+}
+
+/// Host-side final head: logits = rmsnorm(x, ln_f) @ emb^T. x: [B, d].
+/// Returns [B, V]. Verified against `golden.npz` head vectors.
+pub fn head(rt: &Runtime, cfg: &ModelConfig, x: &[f32]) -> Vec<f32> {
+    let (_, ln_f) = rt.weights.host_tensor("ln_f").expect("ln_f");
+    let (eshape, emb) = rt.weights.host_tensor("emb").expect("emb");
+    let (v, d) = (eshape[0], eshape[1]);
+    let b = x.len() / d;
+    let mut logits = vec![0.0f32; b * v];
+    let eps = 1e-5f32;
+    let mut xn = vec![0.0f32; d];
+    for bi in 0..b {
+        let row = &x[bi * d..(bi + 1) * d];
+        let ms: f32 = row.iter().map(|a| a * a).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for i in 0..d {
+            xn[i] = row[i] * inv * ln_f[i];
+        }
+        let out = &mut logits[bi * v..(bi + 1) * v];
+        for (vi, o) in out.iter_mut().enumerate() {
+            let erow = &emb[vi * d..(vi + 1) * d];
+            let mut acc = 0.0f32;
+            for i in 0..d {
+                acc += xn[i] * erow[i];
+            }
+            *o = acc;
+        }
+    }
+    let _ = cfg;
+    logits
+}
+
+/// Sampling over a logits row.
+pub struct Sampler {
+    rng: SplitMix64,
+    pub temperature: f32,
+    pub greedy: bool,
+}
+
+impl Sampler {
+    pub fn new(seed: u64, temperature: f32, greedy: bool) -> Self {
+        Self { rng: SplitMix64::new(seed), temperature, greedy }
+    }
+
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        if self.greedy {
+            return argmax(logits) as i32;
+        }
+        let t = self.temperature.max(1e-3);
+        let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|&l| ((l - m) / t).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let mut u = self.rng.next_f32() * z;
+        for (i, &e) in exps.iter().enumerate() {
+            u -= e;
+            if u <= 0.0 {
+                return i as i32;
+            }
+        }
+        (exps.len() - 1) as i32
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            bi = i;
+        }
+    }
+    bi
+}
+
+/// log-softmax probability of `target` under `logits` (PPL evaluation).
+pub fn log_prob(logits: &[f32], target: usize) -> f64 {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let z: f64 = logits.iter().map(|&l| ((l as f64) - m).exp()).sum();
+    (logits[target] as f64) - m - z.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[-5.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn greedy_sampler_is_argmax() {
+        let mut s = Sampler::new(0, 1.0, true);
+        assert_eq!(s.sample(&[0.0, 9.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn temperature_sampler_in_range_and_deterministic() {
+        let mut s1 = Sampler::new(7, 0.8, false);
+        let mut s2 = Sampler::new(7, 0.8, false);
+        let logits = vec![0.5f32; 16];
+        for _ in 0..50 {
+            let a = s1.sample(&logits);
+            assert_eq!(a, s2.sample(&logits));
+            assert!((0..16).contains(&a));
+        }
+    }
+
+    #[test]
+    fn log_prob_normalized() {
+        let logits = vec![1.0f32, 2.0, 0.5];
+        let total: f64 = (0..3).map(|i| log_prob(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,490 @@
+//! Query-independent baseline policies: vanilla, StreamingLLM, H2O,
+//! SnapKV, SubGen. All run on the fused one-dispatch decode path.
+
+use super::{sinks_and_window, SelectCtx, Selection, SelectionPolicy};
+use crate::config::PolicyKind;
+use crate::util::prng::SplitMix64;
+
+// ---------------------------------------------------------------------------
+// Vanilla: attend to everything (the quadratic baseline).
+// ---------------------------------------------------------------------------
+
+pub struct VanillaPolicy {
+    lh: usize,
+}
+
+impl VanillaPolicy {
+    pub fn new(lh: usize) -> Self {
+        Self { lh }
+    }
+}
+
+impl SelectionPolicy for VanillaPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Vanilla
+    }
+
+    fn select(&mut self, ctx: &SelectCtx) -> Selection {
+        Selection::uniform(self.lh, (0..ctx.t as u32).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StreamingLLM (Xiao et al. 2024): sinks + sliding window. Middle
+// tokens are *permanently* invisible — the information-loss failure
+// mode the paper's Fig. 2 shows.
+// ---------------------------------------------------------------------------
+
+pub struct StreamingPolicy {
+    lh: usize,
+}
+
+impl StreamingPolicy {
+    pub fn new(lh: usize) -> Self {
+        Self { lh }
+    }
+}
+
+impl SelectionPolicy for StreamingPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Streaming
+    }
+
+    fn select(&mut self, ctx: &SelectCtx) -> Selection {
+        let c = ctx.cfg;
+        // budget = window + middle allowance n_c (paper: 32 + n_c); for
+        // streaming the whole budget extends the window.
+        let span = c.window + c.budget;
+        let w_start = ctx.t.saturating_sub(span);
+        Selection::uniform(self.lh, sinks_and_window(c.sinks, w_start, ctx.t))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// H2O (Zhang et al. 2023): keep sinks + window + the `budget` heaviest
+// hitters by *accumulated* attention mass; evicted tokens never return.
+// Accumulators update from the probs/colsum feedback.
+// ---------------------------------------------------------------------------
+
+pub struct H2OPolicy {
+    lh: usize,
+    /// Accumulated attention mass per plane per retained token.
+    /// acc[p] maps token idx -> score; evicted tokens are removed and
+    /// can never re-enter (the paper's criticism).
+    acc: Vec<std::collections::HashMap<u32, f32>>,
+    evicted: Vec<std::collections::HashSet<u32>>,
+}
+
+impl H2OPolicy {
+    pub fn new(lh: usize) -> Self {
+        Self {
+            lh,
+            acc: vec![Default::default(); lh],
+            evicted: vec![Default::default(); lh],
+        }
+    }
+
+    fn evict_overflow(&mut self, p: usize, keep: usize) {
+        let over = self.acc[p].len().saturating_sub(keep);
+        if over == 0 {
+            return;
+        }
+        let mut entries: Vec<(u32, f32)> =
+            self.acc[p].iter().map(|(&i, &s)| (i, s)).collect();
+        entries.sort_by(|a, b| a.1.total_cmp(&b.1));
+        for (idx, _) in entries.into_iter().take(over) {
+            self.acc[p].remove(&idx);
+            self.evicted[p].insert(idx);
+        }
+    }
+}
+
+impl SelectionPolicy for H2OPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::H2O
+    }
+
+    fn select(&mut self, ctx: &SelectCtx) -> Selection {
+        let c = ctx.cfg;
+        let w_start = ctx.t.saturating_sub(c.window);
+        let base = sinks_and_window(c.sinks, w_start, ctx.t);
+        let mut per_plane = Vec::with_capacity(self.lh);
+        for p in 0..self.lh {
+            let mut sel = base.clone();
+            let in_base = |i: u32| (i as usize) < c.sinks.min(w_start) || (i as usize) >= w_start;
+            let mut hitters: Vec<(u32, f32)> = self.acc[p]
+                .iter()
+                .filter(|(&i, _)| !in_base(i))
+                .map(|(&i, &s)| (i, s))
+                .collect();
+            hitters.sort_by(|a, b| b.1.total_cmp(&a.1));
+            sel.extend(hitters.into_iter().take(c.budget).map(|(i, _)| i));
+            sel.sort_unstable();
+            per_plane.push(sel);
+        }
+        Selection { per_plane }
+    }
+
+    fn on_prefill(&mut self, ctx: &SelectCtx, colsum: &[f32], p_used: usize, t0: usize, t1: usize) {
+        // colsum layout [L, H, P+T]: keys 0..t0 live in the past slots,
+        // chunk keys t0..t1 in slots p_used..p_used+T.
+        let c = ctx.cfg;
+        let width = p_used + (t1 - t0);
+        for p in 0..self.lh {
+            let row = &colsum[p * width..(p + 1) * width];
+            for j in 0..t0.min(p_used) {
+                if !self.evicted[p].contains(&(j as u32)) {
+                    *self.acc[p].entry(j as u32).or_insert(0.0) += row[j];
+                }
+            }
+            for (off, j) in (t0..t1).enumerate() {
+                *self.acc[p].entry(j as u32).or_insert(0.0) += row[p_used + off];
+            }
+            self.evict_overflow(p, c.budget + c.window + c.sinks);
+        }
+    }
+
+    fn on_decode(&mut self, ctx: &SelectCtx, sel: &Selection, probs: &[f32], bucket_s: usize) {
+        // probs layout [L, H, S+1]; map slot -> global token via sel.
+        let c = ctx.cfg;
+        let width = bucket_s + 1;
+        for p in 0..self.lh {
+            let row = &probs[p * width..(p + 1) * width];
+            for (slot, &tok) in sel.per_plane[p].iter().enumerate() {
+                if !self.evicted[p].contains(&tok) {
+                    *self.acc[p].entry(tok).or_insert(0.0) += row[slot];
+                }
+            }
+            // The new self token enters with its self-attention mass.
+            *self.acc[p].entry((ctx.t - 1) as u32).or_insert(0.0) += row[bucket_s];
+            self.evict_overflow(p, c.budget + c.window + c.sinks);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SnapKV (Li et al. 2024): at the END of prefill, keep the prompt
+// tokens with the highest pooled attention (observed by the final
+// chunk's queries); frozen afterwards. Decode-time tokens join the
+// sliding window only.
+// ---------------------------------------------------------------------------
+
+pub struct SnapKVPolicy {
+    lh: usize,
+    /// Latest prefill colsum snapshot per plane (token idx -> mass).
+    snapshot: Vec<Vec<(u32, f32)>>,
+    /// Frozen prompt selection (set at first decode).
+    frozen: Option<Vec<Vec<u32>>>,
+    prompt_len: usize,
+}
+
+impl SnapKVPolicy {
+    pub fn new(lh: usize) -> Self {
+        Self { lh, snapshot: vec![Vec::new(); lh], frozen: None, prompt_len: 0 }
+    }
+}
+
+impl SelectionPolicy for SnapKVPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::SnapKV
+    }
+
+    fn select(&mut self, ctx: &SelectCtx) -> Selection {
+        let c = ctx.cfg;
+        if self.frozen.is_none() {
+            // Freeze: top-budget prompt tokens by the last chunk's pooling.
+            let frozen = (0..self.lh)
+                .map(|p| {
+                    let mut v = self.snapshot[p].clone();
+                    v.sort_by(|a, b| b.1.total_cmp(&a.1));
+                    let mut idx: Vec<u32> =
+                        v.into_iter().take(c.budget).map(|(i, _)| i).collect();
+                    idx.sort_unstable();
+                    idx
+                })
+                .collect();
+            self.frozen = Some(frozen);
+        }
+        let frozen = self.frozen.as_ref().unwrap();
+        let w_start = ctx.t.saturating_sub(c.window).max(self.prompt_len);
+        let mut per_plane = Vec::with_capacity(self.lh);
+        for p in 0..self.lh {
+            let mut sel = sinks_and_window(c.sinks, w_start, ctx.t);
+            sel.extend(
+                frozen[p]
+                    .iter()
+                    .filter(|&&i| (i as usize) >= c.sinks && (i as usize) < w_start),
+            );
+            sel.sort_unstable();
+            sel.dedup();
+            per_plane.push(sel);
+        }
+        Selection { per_plane }
+    }
+
+    fn on_prefill(&mut self, _ctx: &SelectCtx, colsum: &[f32], p_used: usize, t0: usize, t1: usize) {
+        // Keep only the latest chunk's pooling (SnapKV observes the
+        // final window of prompt queries).
+        let width = p_used + (t1 - t0);
+        self.prompt_len = t1;
+        for p in 0..self.lh {
+            let row = &colsum[p * width..(p + 1) * width];
+            let mut snap = Vec::with_capacity(t1);
+            for j in 0..t0.min(p_used) {
+                snap.push((j as u32, row[j]));
+            }
+            for (off, j) in (t0..t1).enumerate() {
+                snap.push((j as u32, row[p_used + off]));
+            }
+            self.snapshot[p] = snap;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SubGen-style (Zandieh et al. 2024), simplified: online k-means over
+// key vectors; keep the token nearest each centroid + the window.
+// Captures the cluster-then-sample KV compression idea.
+// ---------------------------------------------------------------------------
+
+pub struct SubGenPolicy {
+    lh: usize,
+    rng: SplitMix64,
+    /// Per plane: (centroid vec, representative token, member count).
+    centroids: Vec<Vec<(Vec<f32>, u32, usize)>>,
+}
+
+impl SubGenPolicy {
+    pub fn new(lh: usize) -> Self {
+        Self { lh, rng: SplitMix64::new(0xC0FFEE), centroids: vec![Vec::new(); lh] }
+    }
+
+    fn absorb(&mut self, ctx: &SelectCtx, t0: usize, t1: usize) {
+        let cfg = ctx.pool.config();
+        let max_c = ctx.cfg.budget.max(1);
+        for l in 0..cfg.n_layers {
+            for h in 0..cfg.n_heads {
+                let p = l * cfg.n_heads + h;
+                for tok in t0..t1 {
+                    let key = ctx.seq.key(ctx.pool, l, h, tok).to_vec();
+                    let cs = &mut self.centroids[p];
+                    // Nearest centroid.
+                    let mut best = None;
+                    let mut best_d = f32::INFINITY;
+                    for (i, (c, _, _)) in cs.iter().enumerate() {
+                        let d: f32 =
+                            c.iter().zip(&key).map(|(a, b)| (a - b) * (a - b)).sum();
+                        if d < best_d {
+                            best_d = d;
+                            best = Some(i);
+                        }
+                    }
+                    let spawn = cs.len() < max_c
+                        && (cs.is_empty() || self.rng.below(4) == 0 || best_d > 2.0);
+                    if spawn {
+                        cs.push((key, tok as u32, 1));
+                    } else if let Some(i) = best {
+                        // Running-mean update; representative = closest seen.
+                        let (c, rep, n) = &mut cs[i];
+                        *n += 1;
+                        let lr = 1.0 / *n as f32;
+                        for (a, b) in c.iter_mut().zip(&key) {
+                            *a += lr * (b - *a);
+                        }
+                        let d_rep: f32 = {
+                            let rk = ctx.seq.key(ctx.pool, l, h, *rep as usize);
+                            c.iter().zip(rk).map(|(a, b)| (a - b) * (a - b)).sum()
+                        };
+                        if best_d < d_rep {
+                            *rep = tok as u32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl SelectionPolicy for SubGenPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::SubGen
+    }
+
+    fn select(&mut self, ctx: &SelectCtx) -> Selection {
+        let c = ctx.cfg;
+        let w_start = ctx.t.saturating_sub(c.window);
+        let mut per_plane = Vec::with_capacity(self.lh);
+        for p in 0..self.lh {
+            let mut sel = sinks_and_window(c.sinks, w_start, ctx.t);
+            sel.extend(
+                self.centroids[p]
+                    .iter()
+                    .map(|(_, rep, _)| *rep)
+                    .filter(|&i| (i as usize) >= c.sinks && (i as usize) < w_start),
+            );
+            sel.sort_unstable();
+            sel.dedup();
+            per_plane.push(sel);
+        }
+        Selection { per_plane }
+    }
+
+    fn on_prefill(&mut self, ctx: &SelectCtx, _colsum: &[f32], _p: usize, t0: usize, t1: usize) {
+        self.absorb(ctx, t0, t1);
+    }
+
+    fn on_decode(&mut self, ctx: &SelectCtx, _sel: &Selection, _probs: &[f32], _s: usize) {
+        self.absorb(ctx, ctx.t - 1, ctx.t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ServingConfig};
+    use crate::kvcache::{BlockPool, SeqCache};
+
+    fn setup(t: usize) -> (BlockPool, SeqCache, ServingConfig) {
+        let mc = ModelConfig {
+            name: "t".into(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ffn: 16,
+            n_feat: 8,
+            max_train_len: 64,
+            vocab: 16,
+        };
+        let mut pool = BlockPool::new(&mc, 8, 1000);
+        let mut seq = SeqCache::new(8);
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..t {
+            let k: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
+            let f: Vec<f32> = (0..32).map(|_| rng.next_f32()).collect();
+            seq.append(&mut pool, &k, &k.clone(), &f).unwrap();
+        }
+        let mut sc = ServingConfig::default();
+        sc.sinks = 2;
+        sc.window = 8;
+        sc.budget = 4;
+        (pool, seq, sc)
+    }
+
+    fn ctx<'a>(pool: &'a BlockPool, seq: &'a SeqCache, cfg: &'a ServingConfig, t: usize) -> SelectCtx<'a> {
+        SelectCtx { pool, seq, t, cfg }
+    }
+
+    #[test]
+    fn vanilla_selects_all() {
+        let (pool, seq, sc) = setup(40);
+        let mut p = VanillaPolicy::new(4);
+        let s = p.select(&ctx(&pool, &seq, &sc, 40));
+        assert_eq!(s.per_plane[0].len(), 40);
+        assert_eq!(s.max_len(), 40);
+    }
+
+    #[test]
+    fn streaming_is_sinks_plus_window() {
+        let (pool, seq, sc) = setup(100);
+        let mut p = StreamingPolicy::new(4);
+        let s = p.select(&ctx(&pool, &seq, &sc, 100));
+        // sinks 2 + span (window 8 + budget 4) = 14
+        assert_eq!(s.per_plane[0].len(), 14);
+        assert_eq!(&s.per_plane[0][..2], &[0, 1]);
+        assert_eq!(*s.per_plane[0].last().unwrap(), 99);
+        // never selects middle tokens
+        assert!(!s.per_plane[0].contains(&50));
+    }
+
+    #[test]
+    fn h2o_keeps_heavy_hitters_and_never_readmits() {
+        let (pool, seq, sc) = setup(100);
+        let mut p = H2OPolicy::new(4);
+        let c = ctx(&pool, &seq, &sc, 100);
+        // Fake decode feedback: token 30 gets huge mass on plane 0.
+        let sel = Selection::uniform(4, (0..100u32).collect());
+        let mut probs = vec![0.0f32; 4 * 101];
+        probs[30] = 5.0;       // plane 0, slot 30 (= token 30)
+        probs[101 + 60] = 3.0; // plane 1, token 60
+        p.on_decode(&c, &sel, &probs, 100);
+        let s = p.select(&c);
+        assert!(s.per_plane[0].contains(&30), "heavy hitter kept on plane 0");
+        assert!(s.per_plane[1].contains(&60), "plane-specific hitters");
+        assert!(!s.per_plane[1].contains(&30) || probs[101 + 30] > 0.0);
+        // Evict: flood with stronger hitters, then 30 must stay out.
+        for step in 0..40 {
+            let mut pr = vec![0.0f32; 4 * 101];
+            pr[70 + (step % 10)] = 10.0;
+            p.on_decode(&c, &sel, &pr, 100);
+        }
+        let evicted_contains_30 = p.evicted[0].contains(&30);
+        if evicted_contains_30 {
+            let mut pr = vec![0.0f32; 4 * 101];
+            pr[30] = 100.0;
+            p.on_decode(&c, &sel, &pr, 100);
+            assert!(!p.acc[0].contains_key(&30), "evicted token must not re-enter");
+        }
+    }
+
+    #[test]
+    fn snapkv_freezes_prompt_selection() {
+        let (pool, seq, sc) = setup(100);
+        let mut p = SnapKVPolicy::new(4);
+        let c = ctx(&pool, &seq, &sc, 100);
+        // Prefill feedback: width = p_used 64 + chunk 16 = 80; token 10 hot.
+        let mut colsum = vec![0.01f32; 4 * 80];
+        colsum[10] = 9.0;
+        p.on_prefill(&c, &colsum, 64, 64, 80);
+        let s1 = p.select(&c);
+        assert!(s1.per_plane[0].contains(&10));
+        // Later feedback must NOT change the frozen selection.
+        let mut colsum2 = vec![0.01f32; 4 * 80];
+        colsum2[20] = 99.0;
+        p.on_prefill(&c, &colsum2, 64, 64, 80);
+        let s2 = p.select(&c);
+        assert_eq!(s1.per_plane[0], s2.per_plane[0]);
+    }
+
+    #[test]
+    fn subgen_selects_representatives_within_budget() {
+        let (pool, seq, sc) = setup(100);
+        let mut p = SubGenPolicy::new(4);
+        let c = ctx(&pool, &seq, &sc, 100);
+        p.on_prefill(&c, &[], 0, 0, 90);
+        let s = p.select(&c);
+        // window+sinks plus at most budget representatives
+        assert!(s.per_plane[0].len() <= 2 + 8 + sc.budget);
+        // all indices valid
+        assert!(s.per_plane.iter().flatten().all(|&i| (i as usize) < 100));
+    }
+
+    #[test]
+    fn all_selections_are_sorted_unique_valid() {
+        let (pool, seq, sc) = setup(64);
+        let c = ctx(&pool, &seq, &sc, 64);
+        let sel = Selection::uniform(4, (0..64u32).collect());
+        let probs = vec![0.001f32; 4 * 65];
+        let colsum = vec![0.01f32; 4 * 64];
+        let mut policies: Vec<Box<dyn SelectionPolicy>> = vec![
+            Box::new(VanillaPolicy::new(4)),
+            Box::new(StreamingPolicy::new(4)),
+            Box::new(H2OPolicy::new(4)),
+            Box::new(SnapKVPolicy::new(4)),
+            Box::new(SubGenPolicy::new(4)),
+        ];
+        for p in &mut policies {
+            p.on_prefill(&c, &colsum, 0, 0, 64);
+            p.on_decode(&c, &sel, &probs, 64);
+            let s = p.select(&c);
+            for plane in &s.per_plane {
+                let mut sorted = plane.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(&sorted, plane, "{:?} selection must be sorted+unique", p.kind());
+                assert!(plane.iter().all(|&i| (i as usize) < 64));
+                assert!(!plane.is_empty());
+            }
+        }
+    }
+}

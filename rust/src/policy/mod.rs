@@ -1,0 +1,140 @@
+//! Token-selection policies. Every serving method — the paper's Radar
+//! and all baselines — is a policy deciding, per (layer, head), which
+//! cached token indices the next decode step attends to. The engine
+//! gathers exactly those rows and runs the shared artifacts, so methods
+//! differ *only* here (DESIGN.md §2).
+//!
+//! Two classes:
+//! - query-independent (`select`): vanilla, StreamingLLM, H2O, SnapKV,
+//!   SubGen — one selection for all layers/heads before the fused
+//!   decode dispatch;
+//! - query-dependent (`select_layer`): Radar and its ablations — called
+//!   per layer with phi(q) (or q) in the per-layer pipeline.
+
+mod baselines;
+mod radar_policy;
+
+pub use baselines::{H2OPolicy, SnapKVPolicy, StreamingPolicy, SubGenPolicy, VanillaPolicy};
+pub use radar_policy::{RadarPolicy, RadarVariant};
+
+use crate::config::{PolicyKind, ServingConfig};
+use crate::kvcache::{BlockPool, SeqCache};
+
+/// A per-(layer, head) index selection for one decode step.
+/// `per_plane[p]` lists cache indices (ascending not required); all
+/// planes attend through one padded buffer, masked per plane.
+#[derive(Debug, Clone, Default)]
+pub struct Selection {
+    pub per_plane: Vec<Vec<u32>>,
+}
+
+impl Selection {
+    pub fn uniform(lh: usize, idx: Vec<u32>) -> Self {
+        Self { per_plane: vec![idx; lh] }
+    }
+
+    /// Max plane length == required S bucket.
+    pub fn max_len(&self) -> usize {
+        self.per_plane.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+/// Context handed to policies at selection time.
+pub struct SelectCtx<'a> {
+    pub pool: &'a BlockPool,
+    pub seq: &'a SeqCache,
+    /// Tokens currently cached (the next token gets position t).
+    pub t: usize,
+    pub cfg: &'a ServingConfig,
+}
+
+/// Query-independent policies (fused decode path).
+pub trait SelectionPolicy: Send {
+    fn kind(&self) -> PolicyKind;
+
+    /// Selection for the next decode step (same for all planes or not —
+    /// policy's choice), given the cache state.
+    fn select(&mut self, ctx: &SelectCtx) -> Selection;
+
+    /// Feedback: prefill chunk processed. `colsum[l][h][j]` is attention
+    /// mass received by key j (layout [L, H, P+T]), `p_used` the past
+    /// bucket, `t0`/`t1` the chunk's token range.
+    fn on_prefill(&mut self, _ctx: &SelectCtx, _colsum: &[f32], _p_used: usize, _t0: usize, _t1: usize) {}
+
+    /// Feedback: decode step done. `sel` is the selection that produced
+    /// `probs` (layout [L, H, S+1], slot S = the new self token).
+    fn on_decode(&mut self, _ctx: &SelectCtx, _sel: &Selection, _probs: &[f32], _bucket_s: usize) {}
+}
+
+/// Instantiate the policy object for a request.
+pub fn make_policy(cfg: &ServingConfig, lh: usize) -> Box<dyn SelectionPolicy> {
+    match cfg.policy {
+        PolicyKind::Vanilla => Box::new(VanillaPolicy::new(lh)),
+        PolicyKind::Streaming => Box::new(StreamingPolicy::new(lh)),
+        PolicyKind::H2O => Box::new(H2OPolicy::new(lh)),
+        PolicyKind::SnapKV => Box::new(SnapKVPolicy::new(lh)),
+        PolicyKind::SubGen => Box::new(SubGenPolicy::new(lh)),
+        // Radar variants run on the per-layer pipeline and are
+        // constructed separately (RadarPolicy::new); the engine checks
+        // `is_query_dependent` first. This arm exists so harnesses can
+        // still construct them uniformly for non-decode bookkeeping.
+        PolicyKind::Radar | PolicyKind::RadarExact | PolicyKind::RadarRandom
+        | PolicyKind::RadarLowest => {
+            unreachable!("radar policies use the per-layer pipeline")
+        }
+    }
+}
+
+pub fn is_query_dependent(kind: PolicyKind) -> bool {
+    matches!(
+        kind,
+        PolicyKind::Radar
+            | PolicyKind::RadarExact
+            | PolicyKind::RadarRandom
+            | PolicyKind::RadarLowest
+    )
+}
+
+/// Shared helper: sinks [0, sinks) plus window [w_start, t).
+pub fn sinks_and_window(sinks: usize, w_start: usize, t: usize) -> Vec<u32> {
+    let s_end = sinks.min(t).min(w_start);
+    let mut out: Vec<u32> = (0..s_end as u32).collect();
+    out.extend(w_start as u32..t as u32);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_uniform_and_maxlen() {
+        let s = Selection::uniform(3, vec![1, 2, 3]);
+        assert_eq!(s.per_plane.len(), 3);
+        assert_eq!(s.max_len(), 3);
+        let mut s2 = s.clone();
+        s2.per_plane[1].push(9);
+        assert_eq!(s2.max_len(), 4);
+    }
+
+    #[test]
+    fn sinks_window_no_overlap() {
+        // window starts inside the sink range -> sinks truncated
+        assert_eq!(sinks_and_window(4, 2, 6), vec![0, 1, 2, 3, 4, 5]);
+        // normal case
+        assert_eq!(sinks_and_window(2, 8, 10), vec![0, 1, 8, 9]);
+        // tiny context
+        assert_eq!(sinks_and_window(4, 0, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn query_dependence_partition() {
+        use crate::config::PolicyKind::*;
+        for k in [Vanilla, Streaming, H2O, SnapKV, SubGen] {
+            assert!(!is_query_dependent(k));
+        }
+        for k in [Radar, RadarExact, RadarRandom, RadarLowest] {
+            assert!(is_query_dependent(k));
+        }
+    }
+}

@@ -1,0 +1,388 @@
+//! The paper's contribution: the Radar hierarchical index.
+//!
+//! Per sequence, per (layer, head), maintain segment summaries
+//! `mean(phi(k_j), j in segment)` (Eq. 5) over the covered prefix
+//! [0, boundary); tokens [boundary, t) form the unregistered buffer W
+//! (Alg. 1 line 13), always attended as a sliding window.
+//!
+//! Restructure trigger (Alg. 1 line 8): whenever sqrt(t) is an integer,
+//! set c = sqrt(t) and rebuild all c segments of length c from the
+//! per-token features stored in the KV cache — O(t) work, amortized
+//! O(sqrt(t))/step.
+//!
+//! Query (Alg. 1 lines 16-21): score every segment with
+//! `phi(q)^T seg_feat` (Eq. 6), take the top-k, attend to their tokens
+//! plus W plus the sinks.
+
+use crate::kvcache::{BlockPool, SeqCache};
+
+/// Integer square root (floor).
+pub fn isqrt(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let mut x = (n as f64).sqrt() as usize;
+    while (x + 1) * (x + 1) <= n {
+        x += 1;
+    }
+    while x * x > n {
+        x -= 1;
+    }
+    x
+}
+
+/// Per-sequence segment index for all (layer, head) planes.
+pub struct RadarIndex {
+    lh: usize,
+    n_feat: usize,
+    /// Current segment length c (0 before the first restructure).
+    pub c: usize,
+    /// Number of segments; they cover tokens [0, c * n_segs).
+    pub n_segs: usize,
+    /// Segment summaries, layout [lh, n_segs, n_feat].
+    seg_feats: Vec<f32>,
+    /// Tokens covered by segments (== c * n_segs).
+    pub boundary: usize,
+    /// Restructure count (telemetry / tests).
+    pub restructures: usize,
+}
+
+impl RadarIndex {
+    pub fn new(lh: usize, n_feat: usize) -> Self {
+        Self {
+            lh,
+            n_feat,
+            c: 0,
+            n_segs: 0,
+            seg_feats: Vec::new(),
+            boundary: 0,
+            restructures: 0,
+        }
+    }
+
+    /// Window W = tokens [boundary, t).
+    pub fn window_start(&self) -> usize {
+        self.boundary
+    }
+
+    /// Alg. 1 line 8: called after the cache holds `t` tokens.
+    /// Returns true if a restructure happened.
+    pub fn maybe_restructure(&mut self, seq: &SeqCache, pool: &BlockPool, t: usize) -> bool {
+        let r = isqrt(t);
+        if r * r != t || r == 0 {
+            return false;
+        }
+        self.restructure(seq, pool, r, t);
+        true
+    }
+
+    /// Post-prefill initialization: restructure at c = isqrt(t) even if
+    /// t is not a perfect square (segments cover [0, (t/c)*c), the
+    /// remainder becomes the window W).
+    pub fn force_restructure(&mut self, seq: &SeqCache, pool: &BlockPool) {
+        let t = seq.len();
+        let c = isqrt(t);
+        if c > 0 {
+            self.restructure(seq, pool, c, t);
+        }
+    }
+
+    /// Rebuild segments with length c covering [0, n_segs * c).
+    fn restructure(&mut self, seq: &SeqCache, pool: &BlockPool, c: usize, t: usize) {
+        let n_segs = t / c;
+        let nf = self.n_feat;
+        self.seg_feats.clear();
+        self.seg_feats.resize(self.lh * n_segs * nf, 0.0);
+        let n_heads = pool_heads(pool);
+        let inv_c = 1.0 / c as f32;
+        for p in 0..self.lh {
+            let (l, h) = (p / n_heads, p % n_heads);
+            for s in 0..n_segs {
+                let dst = (p * n_segs + s) * nf;
+                for tok in s * c..(s + 1) * c {
+                    let f = seq.feat(pool, l, h, tok);
+                    let acc = &mut self.seg_feats[dst..dst + nf];
+                    for (a, &x) in acc.iter_mut().zip(f) {
+                        *a += x;
+                    }
+                }
+                for a in &mut self.seg_feats[dst..dst + nf] {
+                    *a *= inv_c;
+                }
+            }
+        }
+        self.c = c;
+        self.n_segs = n_segs;
+        self.boundary = n_segs * c;
+        self.restructures += 1;
+    }
+
+    /// Segment scores for plane (l, h) against phi(q) — Eq. 6.
+    /// `out` must have length n_segs.
+    pub fn scores(&self, p: usize, q_feat: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(q_feat.len(), self.n_feat);
+        out.clear();
+        let nf = self.n_feat;
+        for s in 0..self.n_segs {
+            let seg = &self.seg_feats[(p * self.n_segs + s) * nf..][..nf];
+            let mut dot = 0.0f32;
+            for i in 0..nf {
+                dot += seg[i] * q_feat[i];
+            }
+            out.push(dot);
+        }
+    }
+
+    /// Raw summary access (tests / Fig. 7 harness).
+    pub fn seg_feat(&self, p: usize, s: usize) -> &[f32] {
+        &self.seg_feats[(p * self.n_segs + s) * self.n_feat..][..self.n_feat]
+    }
+}
+
+fn pool_heads(pool: &BlockPool) -> usize {
+    pool.config().n_heads
+}
+
+/// Indices of the top-k values (k <= scores.len()), unordered.
+/// O(n log k) via a small binary heap of (score, idx).
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    if k == 0 || scores.is_empty() {
+        return Vec::new();
+    }
+    let k = k.min(scores.len());
+    // f32 isn't Ord; map to an order-preserving i64 via the sign-folded
+    // bit pattern (total order; NaN-free inputs by construction).
+    let mut heap: BinaryHeap<Reverse<(i64, usize)>> = BinaryHeap::with_capacity(k + 1);
+    let to_ord = |x: f32| -> i64 {
+        let b = x.to_bits() as i32;
+        (if b >= 0 { b as i64 } else { i32::MIN as i64 - b as i64 }) as i64
+    };
+    for (i, &s) in scores.iter().enumerate() {
+        heap.push(Reverse((to_ord(s), i)));
+        if heap.len() > k {
+            heap.pop();
+        }
+    }
+    heap.into_iter().map(|Reverse((_, i))| i).collect()
+}
+
+/// Exact segment scores (the Fig. 5 "exact top-k" ablation):
+/// sum over the segment of exp(q . k_j / sqrt(d)).
+pub fn exact_segment_scores(
+    seq: &SeqCache,
+    pool: &BlockPool,
+    l: usize,
+    h: usize,
+    q: &[f32],
+    c: usize,
+    n_segs: usize,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    let d = q.len();
+    let scale = 1.0 / (d as f32).sqrt();
+    for s in 0..n_segs {
+        let mut acc = 0.0f32;
+        for tok in s * c..(s + 1) * c {
+            let k = seq.key(pool, l, h, tok);
+            let mut dot = 0.0f32;
+            for i in 0..d {
+                dot += q[i] * k[i];
+            }
+            acc += (dot * scale).exp();
+        }
+        out.push(acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::util::prng::SplitMix64;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ffn: 16,
+            n_feat: 6,
+            max_train_len: 64,
+            vocab: 16,
+        }
+    }
+
+    fn build_seq(t: usize) -> (BlockPool, SeqCache) {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 6, 1000);
+        let mut seq = SeqCache::new(6);
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..t {
+            let k: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
+            let v = k.clone();
+            let f: Vec<f32> = (0..24).map(|_| rng.next_f32()).collect();
+            seq.append(&mut pool, &k, &v, &f).unwrap();
+        }
+        (pool, seq)
+    }
+
+    #[test]
+    fn isqrt_exact() {
+        for t in 0..2000usize {
+            let r = isqrt(t);
+            assert!(r * r <= t && (r + 1) * (r + 1) > t, "isqrt({t}) = {r}");
+        }
+    }
+
+    #[test]
+    fn restructures_only_at_perfect_squares() {
+        let (pool, seq) = build_seq(150);
+        let mut idx = RadarIndex::new(4, 6);
+        let mut events = Vec::new();
+        for t in 1..=150 {
+            if idx.maybe_restructure(&seq, &pool, t) {
+                events.push(t);
+            }
+        }
+        assert_eq!(events, vec![1, 4, 9, 16, 25, 36, 49, 64, 81, 100, 121, 144]);
+        assert_eq!(idx.c, 12);
+        assert_eq!(idx.n_segs, 12);
+        assert_eq!(idx.boundary, 144);
+        // Window = tokens [144, 150): length <= 2*sqrt(t)+1
+        assert!(150 - idx.window_start() <= 2 * 12 + 1);
+    }
+
+    #[test]
+    fn summaries_equal_feature_means() {
+        let (pool, seq) = build_seq(64);
+        let mut idx = RadarIndex::new(4, 6);
+        assert!(idx.maybe_restructure(&seq, &pool, 64));
+        assert_eq!((idx.c, idx.n_segs), (8, 8));
+        // plane (l=1,h=0) = p2, segment 3 covers tokens 24..32
+        let got = idx.seg_feat(2, 3);
+        let mut want = vec![0.0f32; 6];
+        for tok in 24..32 {
+            for (w, &x) in want.iter_mut().zip(seq.feat(&pool, 1, 0, tok)) {
+                *w += x;
+            }
+        }
+        for w in &mut want {
+            *w /= 8.0;
+        }
+        for i in 0..6 {
+            assert!((got[i] - want[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scores_are_dot_products() {
+        let (pool, seq) = build_seq(16);
+        let mut idx = RadarIndex::new(4, 6);
+        idx.maybe_restructure(&seq, &pool, 16);
+        let q = vec![1.0f32, 0.0, 0.5, 0.0, 0.0, 2.0];
+        let mut out = Vec::new();
+        idx.scores(1, &q, &mut out);
+        assert_eq!(out.len(), 4);
+        let seg0 = idx.seg_feat(1, 0);
+        let want: f32 = seg0.iter().zip(&q).map(|(a, b)| a * b).sum();
+        assert!((out[0] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_k_correct_vs_sort() {
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..50 {
+            let n = 1 + rng.below(40) as usize;
+            let k = 1 + rng.below(10) as usize;
+            let scores: Vec<f32> =
+                (0..n).map(|_| (rng.next_f64() * 10.0 - 5.0) as f32).collect();
+            let mut got = top_k_indices(&scores, k);
+            got.sort_unstable();
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+            let mut want = order[..k.min(n)].to_vec();
+            want.sort_unstable();
+            // Compare score multisets (ties may pick different indices).
+            let gs: Vec<f32> = got.iter().map(|&i| scores[i]).collect();
+            let ws: Vec<f32> = want.iter().map(|&i| scores[i]).collect();
+            let mut gs2 = gs.clone();
+            let mut ws2 = ws.clone();
+            gs2.sort_by(f32::total_cmp);
+            ws2.sort_by(f32::total_cmp);
+            assert_eq!(gs2, ws2, "scores {scores:?} k {k}");
+        }
+    }
+
+    #[test]
+    fn top_k_handles_negative_scores() {
+        let scores = vec![-5.0f32, -1.0, -3.0];
+        let mut got = top_k_indices(&scores, 2);
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+    }
+
+    #[test]
+    fn exact_scores_monotone_in_alignment() {
+        // A segment whose keys align with q must outscore an orthogonal one.
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 6, 100);
+        let mut seq = SeqCache::new(6);
+        let f = vec![0.0f32; 24];
+        // 4 tokens aligned with q, then 4 anti-aligned.
+        for i in 0..8 {
+            let sign = if i < 4 { 1.0 } else { -1.0 };
+            let k: Vec<f32> = (0..16).map(|_| sign).collect();
+            seq.append(&mut pool, &k, &k, &f).unwrap();
+        }
+        let q = vec![1.0f32; 4];
+        let mut out = Vec::new();
+        exact_segment_scores(&seq, &pool, 0, 0, &q, 4, 2, &mut out);
+        assert!(out[0] > out[1]);
+    }
+
+    #[test]
+    fn prop_restructure_from_scratch_matches_incremental_state() {
+        // Property: after any number of appends, a restructure at a
+        // perfect square yields summaries equal to recomputing from the
+        // raw features (which `summaries_equal_feature_means` checks for
+        // one case); here we sweep random sizes.
+        use crate::util::minitest::check;
+        check(
+            7,
+            20,
+            |r: &mut SplitMix64| 1 + r.below(12) as usize,
+            |&root| {
+                let t = root * root;
+                let (pool, seq) = build_seq(t);
+                let mut idx = RadarIndex::new(4, 6);
+                idx.maybe_restructure(&seq, &pool, t);
+                if idx.c != root || idx.n_segs != root {
+                    return Err(format!("c={} n_segs={} want {root}", idx.c, idx.n_segs));
+                }
+                for p in 0..4 {
+                    for s in 0..root {
+                        let got = idx.seg_feat(p, s);
+                        let (l, h) = (p / 2, p % 2);
+                        let mut want = vec![0.0f32; 6];
+                        for tok in s * root..(s + 1) * root {
+                            for (w, &x) in want.iter_mut().zip(seq.feat(&pool, l, h, tok)) {
+                                *w += x;
+                            }
+                        }
+                        for i in 0..6 {
+                            if (got[i] - want[i] / root as f32).abs() > 1e-4 {
+                                return Err(format!("plane {p} seg {s} dim {i}"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,220 @@
+//! Artifact registry: what was AOT-compiled, and bucket resolution.
+//!
+//! The scheduler asks "I have a batch of b rows each needing s selected
+//! tokens" and the registry answers with the smallest compiled
+//! `decode_b{B}_s{S}` artifact with B >= b and S >= s (mask padding
+//! absorbs the slack) — the same shape-bucketing trick vLLM uses for
+//! cudagraphs.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Fused all-layer decode step (one dispatch/token; policies whose
+    /// selection does not depend on the current query).
+    Decode,
+    /// Chunked prefill.
+    Prefill,
+    /// Per-layer QKV projection + phi features (Radar pipeline, 1/2).
+    Qkv,
+    /// Per-layer attention-over-gather + MLP (Radar pipeline, 2/2).
+    AttnMlp,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Decode: batch bucket. Prefill: unused (1).
+    pub batch: usize,
+    /// Decode: selected-KV bucket S. Prefill: past bucket P.
+    pub len: usize,
+    /// Prefill chunk length T (prefill only).
+    pub chunk: usize,
+    /// Random-feature dimension baked into this artifact's phi output.
+    pub n_feat: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Registry {
+    artifacts: Vec<ArtifactMeta>,
+    pub prefill_chunk: usize,
+}
+
+impl Registry {
+    pub fn from_manifest(manifest: &Json) -> Result<Self> {
+        let list = manifest
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = Vec::new();
+        for a in list {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let kind = match a.get("kind").and_then(Json::as_str) {
+                Some("decode") => ArtifactKind::Decode,
+                Some("prefill") => ArtifactKind::Prefill,
+                Some("qkv") => ArtifactKind::Qkv,
+                Some("attn_mlp") => ArtifactKind::AttnMlp,
+                k => return Err(anyhow!("artifact {name}: bad kind {k:?}")),
+            };
+            let g = |k: &str| a.get(k).and_then(Json::as_usize).unwrap_or(0);
+            let len = match kind {
+                ArtifactKind::Decode | ArtifactKind::AttnMlp => g("S"),
+                ArtifactKind::Prefill => g("P"),
+                ArtifactKind::Qkv => 0,
+            };
+            artifacts.push(ArtifactMeta {
+                name,
+                kind,
+                batch: g("B").max(1),
+                len,
+                chunk: g("T"),
+                n_feat: g("n"),
+            });
+        }
+        let prefill_chunk = manifest
+            .get("prefill_chunk")
+            .and_then(Json::as_usize)
+            .unwrap_or(128);
+        Ok(Self { artifacts, prefill_chunk })
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn all(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    /// Smallest decode bucket with batch >= b, len >= s, n_feat == n.
+    pub fn resolve_decode(&self, b: usize, s: usize, n: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Decode
+                    && a.batch >= b
+                    && a.len >= s
+                    && a.n_feat == n
+            })
+            .min_by_key(|a| (a.len, a.batch))
+            .ok_or_else(|| {
+                anyhow!("no decode artifact for b={b} s={s} n={n} (largest compiled: {:?})",
+                    self.max_decode_s(n))
+            })
+    }
+
+    /// Smallest prefill bucket with past P >= p, n_feat == n.
+    pub fn resolve_prefill(&self, p: usize, n: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Prefill && a.len >= p && a.n_feat == n)
+            .min_by_key(|a| a.len)
+            .ok_or_else(|| anyhow!("no prefill artifact for p={p} n={n}"))
+    }
+
+    /// Exact-batch qkv artifact for the per-layer pipeline.
+    pub fn resolve_qkv(&self, b: usize, n: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Qkv && a.batch >= b && a.n_feat == n)
+            .min_by_key(|a| a.batch)
+            .ok_or_else(|| anyhow!("no qkv artifact for b={b} n={n}"))
+    }
+
+    /// Smallest attn_mlp bucket with batch >= b, len >= s.
+    pub fn resolve_attn_mlp(&self, b: usize, s: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::AttnMlp && a.batch >= b && a.len >= s)
+            .min_by_key(|a| (a.len, a.batch))
+            .ok_or_else(|| anyhow!("no attn_mlp artifact for b={b} s={s}"))
+    }
+
+    /// Largest compiled decode S for a given n (vanilla's context cap).
+    pub fn max_decode_s(&self, n: usize) -> Option<usize> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Decode && a.n_feat == n)
+            .map(|a| a.len)
+            .max()
+    }
+
+    pub fn max_batch(&self, n: usize) -> usize {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Decode && a.n_feat == n)
+            .map(|a| a.batch)
+            .max()
+            .unwrap_or(1)
+    }
+
+    pub fn decode_names(&self, n: usize) -> Vec<String> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Decode && a.n_feat == n)
+            .map(|a| a.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Registry {
+        let manifest = Json::parse(
+            r#"{"prefill_chunk":128,"artifacts":[
+                {"name":"decode_b1_s128_n128","kind":"decode","B":1,"S":128,"n":128},
+                {"name":"decode_b1_s256_n128","kind":"decode","B":1,"S":256,"n":128},
+                {"name":"decode_b4_s256_n128","kind":"decode","B":4,"S":256,"n":128},
+                {"name":"decode_b1_s256_n64","kind":"decode","B":1,"S":256,"n":64},
+                {"name":"prefill_t128_p0_n128","kind":"prefill","T":128,"P":0,"n":128},
+                {"name":"prefill_t128_p256_n128","kind":"prefill","T":128,"P":256,"n":128}
+            ]}"#,
+        )
+        .unwrap();
+        Registry::from_manifest(&manifest).unwrap()
+    }
+
+    #[test]
+    fn resolves_smallest_fitting_decode() {
+        let r = registry();
+        assert_eq!(r.resolve_decode(1, 100, 128).unwrap().name, "decode_b1_s128_n128");
+        assert_eq!(r.resolve_decode(1, 129, 128).unwrap().name, "decode_b1_s256_n128");
+        assert_eq!(r.resolve_decode(2, 100, 128).unwrap().name, "decode_b4_s256_n128");
+        assert_eq!(r.resolve_decode(1, 200, 64).unwrap().name, "decode_b1_s256_n64");
+    }
+
+    #[test]
+    fn resolve_failure_is_error() {
+        let r = registry();
+        assert!(r.resolve_decode(8, 128, 128).is_err());
+        assert!(r.resolve_decode(1, 512, 128).is_err());
+        assert!(r.resolve_decode(1, 128, 999).is_err());
+    }
+
+    #[test]
+    fn resolves_prefill() {
+        let r = registry();
+        assert_eq!(r.resolve_prefill(0, 128).unwrap().name, "prefill_t128_p0_n128");
+        assert_eq!(r.resolve_prefill(1, 128).unwrap().name, "prefill_t128_p256_n128");
+        assert!(r.resolve_prefill(300, 128).is_err());
+    }
+
+    #[test]
+    fn max_decode_s() {
+        let r = registry();
+        assert_eq!(r.max_decode_s(128), Some(256));
+        assert_eq!(r.max_batch(128), 4);
+    }
+}

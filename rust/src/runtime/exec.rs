@@ -1,0 +1,297 @@
+//! Typed execution of decode/prefill artifacts.
+//!
+//! Argument order per artifact (the L2<->L3 ABI, DESIGN.md §8):
+//!   [weights..., omega, tokens, pos, K, V, mask]          (decode)
+//!   [weights..., omega, tokens, pos0, pastK, pastV, mask] (prefill)
+//! Weights/omega are persistent device buffers; the per-call inputs are
+//! uploaded here. Outputs come back as one tuple literal and are
+//! unpacked into flat `Vec<f32>`s with documented layouts.
+
+use super::artifacts::ArtifactMeta;
+use super::Runtime;
+use anyhow::{anyhow, Result};
+use xla::PjRtBuffer;
+
+/// Decode outputs. Layouts (row-major):
+/// logits [B, V]; k_new/v_new [B, L, H, dh]; feat_new [B, L, H, n];
+/// probs [B, L, H, S+1] (slot S = the just-written self token).
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+    pub feat_new: Vec<f32>,
+    pub probs: Vec<f32>,
+    pub bucket_s: usize,
+    pub bucket_b: usize,
+}
+
+/// Per-layer qkv outputs. Layouts: q/k/v [B, H, dh] (post-RoPE);
+/// phi_q/phi_k [B, H, n].
+pub struct QkvOut {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub phi_q: Vec<f32>,
+    pub phi_k: Vec<f32>,
+}
+
+/// Per-layer attend+mlp outputs: x_out [B, d]; probs [B, H, S+1].
+pub struct AttnMlpOut {
+    pub x: Vec<f32>,
+    pub probs: Vec<f32>,
+}
+
+/// Prefill outputs. Layouts: logits [T, V]; k_c/v_c [L, H, T, dh];
+/// feat_c [L, H, T, n]; colsum [L, H, P+T].
+pub struct PrefillOut {
+    pub logits: Vec<f32>,
+    pub k_c: Vec<f32>,
+    pub v_c: Vec<f32>,
+    pub feat_c: Vec<f32>,
+    pub colsum: Vec<f32>,
+    pub bucket_p: usize,
+}
+
+impl Runtime {
+    /// Execute one decode step. Input slices must already be padded to
+    /// the artifact's (B, S) bucket:
+    /// tokens/pos len B; k/v [B,L,H,S,dh]; mask [B,S].
+    pub fn decode(
+        &self,
+        meta: &ArtifactMeta,
+        omega: &PjRtBuffer,
+        tokens: &[i32],
+        pos: &[i32],
+        k: &[f32],
+        v: &[f32],
+        mask: &[f32],
+    ) -> Result<DecodeOut> {
+        let cfg = &self.config;
+        let (b, s) = (meta.batch, meta.len);
+        let (l, h, dh, nf) = (cfg.n_layers, cfg.n_heads, cfg.d_head, meta.n_feat);
+        debug_assert_eq!(tokens.len(), b);
+        debug_assert_eq!(k.len(), b * l * h * s * dh);
+        debug_assert_eq!(mask.len(), b * l * h * s, "mask is per (layer, head)");
+
+        let c = &self.client;
+        let up = |data: &[f32], dims: &[usize]| -> Result<PjRtBuffer> {
+            c.buffer_from_host_buffer(data, dims, None)
+                .map_err(|e| anyhow!("upload: {e}"))
+        };
+        let tok_b = c
+            .buffer_from_host_buffer(tokens, &[b], None)
+            .map_err(|e| anyhow!("upload tokens: {e}"))?;
+        let pos_b = c
+            .buffer_from_host_buffer(pos, &[b], None)
+            .map_err(|e| anyhow!("upload pos: {e}"))?;
+        let k_b = up(k, &[b, l, h, s, dh])?;
+        let v_b = up(v, &[b, l, h, s, dh])?;
+        let m_b = up(mask, &[b, l, h, s])?;
+
+        let mut args: Vec<&PjRtBuffer> = self.weights.buffers().iter().collect();
+        args.push(omega);
+        args.push(&tok_b);
+        args.push(&pos_b);
+        args.push(&k_b);
+        args.push(&v_b);
+        args.push(&m_b);
+
+        let exe = self.executable(&meta.name)?;
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {}: {e}", meta.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let mut parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        if parts.len() != 5 {
+            return Err(anyhow!("decode returned {} outputs, want 5", parts.len()));
+        }
+        let probs = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let feat_new = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let v_new = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let k_new = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let logits = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        debug_assert_eq!(logits.len(), b * cfg.vocab);
+        debug_assert_eq!(feat_new.len(), b * l * h * nf);
+        debug_assert_eq!(probs.len(), b * l * h * (s + 1));
+        Ok(DecodeOut { logits, k_new, v_new, feat_new, probs, bucket_s: s, bucket_b: b })
+    }
+
+    /// Per-layer QKV projection (+ phi features) — the first half of the
+    /// Radar per-layer pipeline. x: [B, d]; pos: [B].
+    pub fn qkv(
+        &self,
+        meta: &ArtifactMeta,
+        layer: usize,
+        omega: &PjRtBuffer,
+        x: &[f32],
+        pos: &[i32],
+    ) -> Result<QkvOut> {
+        let cfg = &self.config;
+        let b = meta.batch;
+        debug_assert_eq!(x.len(), b * cfg.d_model);
+        let c = &self.client;
+        let x_b = c
+            .buffer_from_host_buffer(x, &[b, cfg.d_model], None)
+            .map_err(|e| anyhow!("upload x: {e}"))?;
+        let pos_b = c
+            .buffer_from_host_buffer(pos, &[b], None)
+            .map_err(|e| anyhow!("upload pos: {e}"))?;
+        let w = |suffix: &str| -> Result<&PjRtBuffer> {
+            let name = format!("layers.{layer}.{suffix}");
+            self.weights
+                .buffer(&name)
+                .ok_or_else(|| anyhow!("missing weight {name}"))
+        };
+        let args: Vec<&PjRtBuffer> =
+            vec![w("wq")?, w("wk")?, w("wv")?, w("ln1")?, omega, &x_b, &pos_b];
+        let exe = self.executable(&meta.name)?;
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {}: {e}", meta.name))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| anyhow!("{e}"))?;
+        let mut parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        if parts.len() != 5 {
+            return Err(anyhow!("qkv returned {} outputs, want 5", parts.len()));
+        }
+        let phi_k = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let phi_q = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let v = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let k = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let q = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        Ok(QkvOut { q, k, v, phi_q, phi_k })
+    }
+
+    /// Per-layer attention + MLP over the gathered KV — the second half
+    /// of the Radar pipeline. K/V: [B,H,S,dh]; mask: [B,H,S].
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_mlp(
+        &self,
+        meta: &ArtifactMeta,
+        layer: usize,
+        x: &[f32],
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        gk: &[f32],
+        gv: &[f32],
+        mask: &[f32],
+    ) -> Result<AttnMlpOut> {
+        let cfg = &self.config;
+        let (b, s) = (meta.batch, meta.len);
+        let (h, dh) = (cfg.n_heads, cfg.d_head);
+        debug_assert_eq!(gk.len(), b * h * s * dh);
+        debug_assert_eq!(mask.len(), b * h * s);
+        let c = &self.client;
+        let up = |data: &[f32], dims: &[usize]| -> Result<PjRtBuffer> {
+            c.buffer_from_host_buffer(data, dims, None)
+                .map_err(|e| anyhow!("upload: {e}"))
+        };
+        let x_b = up(x, &[b, cfg.d_model])?;
+        let q_b = up(q, &[b, h, dh])?;
+        let k_b = up(k, &[b, h, dh])?;
+        let v_b = up(v, &[b, h, dh])?;
+        let gk_b = up(gk, &[b, h, s, dh])?;
+        let gv_b = up(gv, &[b, h, s, dh])?;
+        let m_b = up(mask, &[b, h, s])?;
+        let w = |suffix: &str| -> Result<&PjRtBuffer> {
+            let name = format!("layers.{layer}.{suffix}");
+            self.weights
+                .buffer(&name)
+                .ok_or_else(|| anyhow!("missing weight {name}"))
+        };
+        let args: Vec<&PjRtBuffer> = vec![
+            w("wo")?, w("w1")?, w("w2")?, w("ln2")?,
+            &x_b, &q_b, &k_b, &v_b, &gk_b, &gv_b, &m_b,
+        ];
+        let exe = self.executable(&meta.name)?;
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {}: {e}", meta.name))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| anyhow!("{e}"))?;
+        let mut parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        if parts.len() != 2 {
+            return Err(anyhow!("attn_mlp returned {} outputs, want 2", parts.len()));
+        }
+        let probs = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let x_out = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        Ok(AttnMlpOut { x: x_out, probs })
+    }
+
+    /// Execute one prefill chunk. tokens len T; past k/v [L,H,P,dh];
+    /// past_mask [P] — all padded to the artifact's P bucket.
+    pub fn prefill(
+        &self,
+        meta: &ArtifactMeta,
+        omega: &PjRtBuffer,
+        tokens: &[i32],
+        pos0: i32,
+        past_k: &[f32],
+        past_v: &[f32],
+        past_mask: &[f32],
+    ) -> Result<PrefillOut> {
+        let cfg = &self.config;
+        let (t, p) = (meta.chunk, meta.len);
+        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+        debug_assert_eq!(tokens.len(), t);
+        debug_assert_eq!(past_k.len(), l * h * p * dh);
+        debug_assert_eq!(past_mask.len(), p);
+
+        let c = &self.client;
+        let tok_b = c
+            .buffer_from_host_buffer(tokens, &[t], None)
+            .map_err(|e| anyhow!("upload tokens: {e}"))?;
+        let pos_b = c
+            .buffer_from_host_buffer(&[pos0], &[], None)
+            .map_err(|e| anyhow!("upload pos0: {e}"))?;
+        // P=0: jax drops the zero-sized pastK/pastV/mask parameters
+        // during lowering, so the compiled program doesn't take them.
+        let past_bufs = if p > 0 {
+            let k_b = c
+                .buffer_from_host_buffer(past_k, &[l, h, p, dh], None)
+                .map_err(|e| anyhow!("upload pastK: {e}"))?;
+            let v_b = c
+                .buffer_from_host_buffer(past_v, &[l, h, p, dh], None)
+                .map_err(|e| anyhow!("upload pastV: {e}"))?;
+            let m_b = c
+                .buffer_from_host_buffer(past_mask, &[p], None)
+                .map_err(|e| anyhow!("upload mask: {e}"))?;
+            Some((k_b, v_b, m_b))
+        } else {
+            None
+        };
+
+        let mut args: Vec<&PjRtBuffer> = self.weights.buffers().iter().collect();
+        args.push(omega);
+        args.push(&tok_b);
+        args.push(&pos_b);
+        if let Some((k_b, v_b, m_b)) = &past_bufs {
+            args.push(k_b);
+            args.push(v_b);
+            args.push(m_b);
+        }
+
+        let exe = self.executable(&meta.name)?;
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {}: {e}", meta.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let mut parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        if parts.len() != 5 {
+            return Err(anyhow!("prefill returned {} outputs, want 5", parts.len()));
+        }
+        let colsum = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let feat_c = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let v_c = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let k_c = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let logits = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        debug_assert_eq!(logits.len(), t * cfg.vocab);
+        debug_assert_eq!(colsum.len(), l * h * (p + t));
+        Ok(PrefillOut { logits, k_c, v_c, feat_c, colsum, bucket_p: p })
+    }
+}

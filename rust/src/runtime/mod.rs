@@ -1,0 +1,119 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python is never involved here — this module plus the artifact files
+//! are the entire model runtime. Weights and Omega are uploaded to the
+//! device **once** at startup (`buffer_from_host_buffer`) and passed by
+//! reference on every call (`execute_b`), so the per-token hot path
+//! copies only the gathered KV buffers.
+
+mod artifacts;
+mod exec;
+mod weights;
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, Registry};
+pub use exec::{AttnMlpOut, DecodeOut, PrefillOut, QkvOut};
+pub use weights::WeightSet;
+
+use crate::config::{ArtifactPaths, ModelConfig};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// One loaded model: client + device-resident weights + executable cache.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub config: ModelConfig,
+    pub paths: ArtifactPaths,
+    pub registry: Registry,
+    pub weights: WeightSet,
+    omegas: Mutex<HashMap<usize, Arc<PjRtBuffer>>>,
+    executables: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load manifest + weights and upload them to the device.
+    pub fn load(paths: ArtifactPaths) -> Result<Self> {
+        let manifest = paths.load_manifest()?;
+        let config = ModelConfig::from_json(
+            manifest
+                .get("config")
+                .ok_or_else(|| anyhow!("manifest missing config"))?,
+        )?;
+        let registry = Registry::from_manifest(&manifest)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let weights = WeightSet::load(&client, &paths, &manifest)?;
+        crate::info!(
+            "runtime up: model={} platform={} artifacts={} tensors={}",
+            config.name,
+            client.platform_name(),
+            registry.len(),
+            weights.n_tensors(),
+        );
+        Ok(Self {
+            client,
+            config,
+            paths,
+            registry,
+            weights,
+            omegas: Mutex::new(HashMap::new()),
+            executables: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Device-resident Omega for feature dimension n (uploaded once).
+    pub fn omega(&self, n: usize) -> Result<Arc<PjRtBuffer>> {
+        if let Some(o) = self.omegas.lock().unwrap().get(&n) {
+            return Ok(o.clone());
+        }
+        let npz = xla::Literal::read_npz(self.paths.omega(n), &())
+            .map_err(|e| anyhow!("read {:?}: {e}", self.paths.omega(n)))?;
+        let (_, lit) = npz
+            .into_iter()
+            .find(|(k, _)| k.starts_with("omega"))
+            .ok_or_else(|| anyhow!("omega npz missing 'omega' entry"))?;
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("omega data: {e}"))?;
+        let buf = self
+            .client
+            .buffer_from_host_buffer(&data, &[n, self.config.d_head], None)
+            .map_err(|e| anyhow!("upload omega: {e}"))?;
+        let arc = Arc::new(buf);
+        self.omegas.lock().unwrap().insert(n, arc.clone());
+        Ok(arc)
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn executable(&self, name: &str) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.paths.hlo(name);
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        crate::debug!("compiled {name} in {:.2}s", t.elapsed().as_secs_f64());
+        let arc = Arc::new(exe);
+        self.executables.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Pre-compile a set of artifacts (server warmup).
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.executable(n).with_context(|| format!("warming {n}"))?;
+        }
+        Ok(())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.executables.lock().unwrap().len()
+    }
+}
+
+use xla::FromRawBytes as _;

@@ -1,0 +1,100 @@
+//! Weight loading: `weights.npz` + the manifest tensor ABI -> one
+//! device-resident `PjRtBuffer` per tensor, uploaded once at startup.
+
+use crate::config::ArtifactPaths;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient};
+
+pub struct WeightSet {
+    /// Tensors in manifest order (the artifact parameter order).
+    buffers: Vec<PjRtBuffer>,
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+    /// Host copies kept for rust-side math (exact-score ablation etc.).
+    host: HashMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl WeightSet {
+    pub fn load(client: &PjRtClient, paths: &ArtifactPaths, manifest: &Json) -> Result<Self> {
+        let tensor_specs = manifest
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing tensors"))?;
+
+        // Read the npz once; reorder into manifest order.
+        let npz = Literal::read_npz(paths.weights(), &())
+            .map_err(|e| anyhow!("read {:?}: {e}", paths.weights()))?;
+        let mut by_name: HashMap<String, Literal> = npz
+            .into_iter()
+            .map(|(name, lit)| (name.trim_end_matches(".npy").to_string(), lit))
+            .collect();
+
+        let mut buffers = Vec::new();
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut host = HashMap::new();
+        for spec in tensor_specs {
+            let name = spec
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing name"))?;
+            let shape: Vec<usize> = spec
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let lit = by_name
+                .remove(name)
+                .ok_or_else(|| anyhow!("weights.npz missing tensor '{name}'"))?;
+            let want: usize = shape.iter().product();
+            if lit.element_count() != want {
+                return Err(anyhow!(
+                    "tensor '{name}': npz has {} elements, manifest wants {want}",
+                    lit.element_count()
+                ));
+            }
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("tensor '{name}': {e}"))?;
+            let buf = client
+                .buffer_from_host_buffer(&data, &shape, None)
+                .map_err(|e| anyhow!("upload '{name}': {e}"))?;
+            buffers.push(buf);
+            names.push(name.to_string());
+            shapes.push(shape.clone());
+            host.insert(name.to_string(), (shape, data));
+        }
+
+        Ok(Self { buffers, names, shapes, host })
+    }
+
+    pub fn buffers(&self) -> &[PjRtBuffer] {
+        &self.buffers
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn buffer(&self, name: &str) -> Option<&PjRtBuffer> {
+        self.names.iter().position(|n| n == name).map(|i| &self.buffers[i])
+    }
+
+    pub fn shape(&self, name: &str) -> Option<&[usize]> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| self.shapes[i].as_slice())
+    }
+
+    /// Host copy of a tensor (for rust-side math / debugging).
+    pub fn host_tensor(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.host.get(name).map(|(s, d)| (s.as_slice(), d.as_slice()))
+    }
+}

@@ -1,0 +1,250 @@
+//! Minimal HTTP/1.1 serving front-end over std::net + the in-tree
+//! threadpool (tokio is unavailable offline).
+//!
+//! Endpoints:
+//!   GET  /health            -> {"status":"ok", ...}
+//!   GET  /metrics           -> text exposition
+//!   POST /generate          -> {"prompt": str, "max_new_tokens": n,
+//!                               "temperature"?: f, "greedy"?: b}
+//!                           <- {"text": str, "tokens": n, latency fields}
+//!
+//! Requests are funneled through a channel to the single engine thread
+//! (the engine owns the PJRT client and block pool); responses return
+//! through per-request channels — the standard leader/worker shape.
+
+use crate::engine::{Engine, GenRequest};
+use crate::metrics::Metrics;
+use crate::model::tokenizer;
+use crate::util::json::Json;
+use crate::util::threadpool::{Channel, ThreadPool};
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Parse one HTTP/1.1 request from the stream.
+pub fn parse_request(stream: &mut impl Read) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length.min(16 << 20)];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest { method, path, body })
+}
+
+pub fn write_response(stream: &mut impl Write, status: u16, content_type: &str, body: &[u8]) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    Ok(())
+}
+
+/// A pending generation: request + response channel.
+struct Pending {
+    req: GenRequest,
+    reply: Channel<Result<Json, String>>,
+}
+
+/// Serve until `stop` flips. Engine runs on the caller's thread;
+/// connections are handled by a small pool.
+pub fn serve(mut engine: Engine, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    crate::info!("serving on http://{addr}");
+    let queue: Channel<Pending> = Channel::new();
+    let metrics = engine.metrics.clone();
+    let pool = ThreadPool::new(4, "http");
+    let q2 = queue.clone();
+    let m2 = metrics.clone();
+    let stop2 = stop.clone();
+    let accept_thread = std::thread::spawn(move || {
+        while !stop2.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let q = q2.clone();
+                    let m = m2.clone();
+                    pool.execute(move || handle_conn(stream, q, m));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    eprintln!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+        q2.close();
+    });
+
+    // Engine loop: drain admissions, then step active sequences.
+    let mut inflight: Vec<(crate::engine::SeqId, Channel<Result<Json, String>>)> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        // Admit pending requests (non-blocking when busy, blocking briefly when idle).
+        let next = if inflight.is_empty() {
+            queue.recv_timeout(std::time::Duration::from_millis(50))
+        } else {
+            queue.try_recv()
+        };
+        if let Some(p) = next {
+            match engine.add(p.req) {
+                Ok(id) => inflight.push((id, p.reply)),
+                Err(e) => {
+                    p.reply.send(Err(format!("admission failed: {e}")));
+                }
+            }
+        }
+        if inflight.is_empty() {
+            continue;
+        }
+        if let Err(e) = engine.step() {
+            for (_, reply) in inflight.drain(..) {
+                reply.send(Err(format!("engine error: {e}")));
+            }
+            continue;
+        }
+        // Complete finished sequences.
+        let done: Vec<_> = engine.finished();
+        for id in done {
+            if let Some(pos) = inflight.iter().position(|(i, _)| *i == id) {
+                let (_, reply) = inflight.remove(pos);
+                let res = engine.remove(id).unwrap();
+                let text = tokenizer::decode(&res.tokens[res.tokens.len() - res.logprobs.len()..]);
+                let j = Json::obj()
+                    .with("text", text)
+                    .with("tokens", res.logprobs.len())
+                    .with("prefill_ms", res.prefill_ms)
+                    .with("decode_ms", res.decode_ms);
+                reply.send(Ok(j));
+            } else {
+                engine.remove(id);
+            }
+        }
+    }
+    queue.close();
+    let _ = accept_thread.join();
+    Ok(())
+}
+
+fn handle_conn(mut stream: TcpStream, queue: Channel<Pending>, metrics: Arc<Metrics>) {
+    let req = match parse_request(&mut stream) {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+    metrics.inc("http_requests");
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            let body = Json::obj().with("status", "ok").to_string();
+            let _ = write_response(&mut stream, 200, "application/json", body.as_bytes());
+        }
+        ("GET", "/metrics") => {
+            let body = metrics.render();
+            let _ = write_response(&mut stream, 200, "text/plain", body.as_bytes());
+        }
+        ("POST", "/generate") => {
+            let parsed = std::str::from_utf8(&req.body)
+                .ok()
+                .and_then(|s| Json::parse(s).ok());
+            let Some(j) = parsed else {
+                let _ = write_response(&mut stream, 400, "application/json",
+                    br#"{"error":"invalid json"}"#);
+                return;
+            };
+            let Some(prompt) = j.get("prompt").and_then(Json::as_str) else {
+                let _ = write_response(&mut stream, 400, "application/json",
+                    br#"{"error":"missing prompt"}"#);
+                return;
+            };
+            let max_new = j.get("max_new_tokens").and_then(Json::as_usize).unwrap_or(64);
+            let gen = GenRequest::new(tokenizer::encode(prompt), max_new);
+            let reply: Channel<Result<Json, String>> = Channel::new();
+            queue.send(Pending { req: gen, reply: reply.clone() });
+            match reply.recv() {
+                Some(Ok(body)) => {
+                    let _ = write_response(&mut stream, 200, "application/json",
+                        body.to_string().as_bytes());
+                }
+                Some(Err(e)) => {
+                    let body = Json::obj().with("error", e).to_string();
+                    let _ = write_response(&mut stream, 500, "application/json", body.as_bytes());
+                }
+                None => {
+                    let _ = write_response(&mut stream, 500, "application/json",
+                        br#"{"error":"server shutting down"}"#);
+                }
+            }
+        }
+        _ => {
+            let _ = write_response(&mut stream, 404, "application/json",
+                br#"{"error":"not found"}"#);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_post_with_body() {
+        let raw = b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"prompt\":\"a\"}";
+        let mut cursor = std::io::Cursor::new(raw.to_vec());
+        let r = parse_request(&mut cursor).unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/generate");
+        assert_eq!(r.body.len(), 13);
+    }
+
+    #[test]
+    fn parse_get_no_body() {
+        let raw = b"GET /health HTTP/1.1\r\n\r\n";
+        let mut cursor = std::io::Cursor::new(raw.to_vec());
+        let r = parse_request(&mut cursor).unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/health");
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn response_format() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 2"));
+        assert!(s.ends_with("{}"));
+    }
+}

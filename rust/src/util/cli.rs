@@ -1,0 +1,130 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; typed getters with defaults; auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Self { flags, positional }
+    }
+
+    pub fn from_env() -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).map(|v| v == "true" || v == "1").unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--lens 512,1024,2048`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = args("serve --port 8080 --verbose --model=sm extra");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0), 8080);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.str_or("model", "md"), "sm");
+        assert_eq!(a.positional(), &["serve", "extra"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("run");
+        assert_eq!(a.usize_or("k", 8), 8);
+        assert_eq!(a.f64_or("temp", 0.7), 0.7);
+        assert!(!a.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn lists() {
+        let a = args("x --lens 128,256, 512 --names a,b");
+        assert_eq!(a.usize_list_or("lens", &[]), vec![128, 256]);
+        assert_eq!(a.str_list_or("names", &[]), vec!["a", "b"]);
+        assert_eq!(a.usize_list_or("missing", &[7]), vec![7]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = args("x --offset=-5");
+        assert_eq!(a.f64_or("offset", 0.0), -5.0);
+    }
+}

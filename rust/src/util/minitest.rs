@@ -1,0 +1,168 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it performs greedy shrinking via the input's
+//! `Shrink` implementation and panics with the minimal counterexample.
+//! Coordinator invariants (paged allocator, radar index, batcher)
+//! use this for their property tests.
+
+use super::prng::SplitMix64;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized {
+    /// Candidate smaller inputs; empty when fully shrunk.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Drop halves, drop single elements, shrink single elements.
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() <= 16 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+            for i in 0..self.len() {
+                for s in self[i].shrink() {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over generated inputs with shrinking on failure.
+///
+/// `gen` draws an input from the PRNG; `prop` returns `Err(reason)` on
+/// violation. Panics with the (shrunk) counterexample.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Clone + Debug,
+    G: FnMut(&mut SplitMix64) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (case {case}, seed {seed}): {min_msg}\n\
+                 minimal counterexample: {min_input:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink + Clone + Debug>(
+    mut input: T,
+    mut msg: String,
+    prop: &impl Fn(&T) -> Result<(), String>,
+) -> (T, String) {
+    let mut budget = 500;
+    'outer: while budget > 0 {
+        for cand in input.shrink() {
+            budget -= 1;
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                continue 'outer;
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        break;
+    }
+    (input, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check(1, 100, |r| r.below(100) as usize, |x| {
+            if *x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics() {
+        check(2, 100, |r| r.below(1000) as usize, |x| {
+            if *x < 500 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property fails for any x >= 10; shrinker should reach exactly 10.
+        let result = std::panic::catch_unwind(|| {
+            check(3, 200, |r| r.below(10_000) as usize, |x| {
+                if *x < 10 {
+                    Ok(())
+                } else {
+                    Err("ge 10".into())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("counterexample: 10"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_len() {
+        let v = vec![5usize, 6, 7, 8];
+        assert!(v.shrink().iter().any(|s| s.len() < v.len()));
+    }
+}

@@ -1,0 +1,39 @@
+//! Infrastructure substrates built in-tree (the usual crates — tokio,
+//! serde, clap, criterion, proptest — are unavailable offline).
+
+pub mod cli;
+pub mod json;
+pub mod minitest;
+pub mod prng;
+pub mod stats;
+pub mod threadpool;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(1) {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(2) {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}

@@ -1,0 +1,197 @@
+//! Measurement substrate (criterion is unavailable offline).
+//!
+//! `Series` accumulates raw samples and reports mean/stddev/percentiles;
+//! `Timer` wraps wallclock sections; `bench_loop` is the
+//! warmup-then-measure harness the `cargo bench` targets use.
+
+use std::time::{Duration, Instant};
+
+/// A sample series with order-preserving percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<f64>,
+}
+
+impl Series {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile in [0, 100] by nearest-rank on a sorted copy.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Wallclock section timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Benchmark result for one named case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub per_iter: Series,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>10.1} us/iter (p50 {:>9.1}, p99 {:>9.1}, n={})",
+            self.name,
+            self.per_iter.mean(),
+            self.per_iter.p50(),
+            self.per_iter.p99(),
+            self.iters,
+        )
+    }
+}
+
+/// Warmup-then-measure loop: runs `f` for `warmup` iterations, then
+/// measures per-iteration wallclock (in microseconds) until either
+/// `max_iters` iterations or `max_secs` seconds of measurement.
+pub fn bench_loop<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    max_iters: usize,
+    max_secs: f64,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut per_iter = Series::new();
+    let start = Instant::now();
+    let mut iters = 0;
+    while iters < max_iters && start.elapsed().as_secs_f64() < max_secs {
+        let t = Instant::now();
+        f();
+        per_iter.push(t.elapsed().as_secs_f64() * 1e6);
+        iters += 1;
+    }
+    BenchResult { name: name.to_string(), iters, per_iter }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_basic() {
+        let mut s = Series::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.stddev() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let mut s = Series::new();
+        for i in 0..100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 99.0);
+        assert_eq!(s.p99(), 98.0);
+    }
+
+    #[test]
+    fn empty_series_nan() {
+        let s = Series::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn bench_loop_runs() {
+        let mut count = 0;
+        let r = bench_loop("t", 2, 10, 1.0, || count += 1);
+        assert_eq!(r.iters, 10);
+        assert_eq!(count, 12);
+        assert_eq!(r.per_iter.len(), 10);
+    }
+}

@@ -1,0 +1,222 @@
+//! Thread pool + mpmc channel substrate (tokio is unavailable offline).
+//!
+//! The serving stack is thread-based: the HTTP server and the engine
+//! loop exchange work through `Channel<T>` (a Mutex+Condvar mpmc queue)
+//! and blocking sections run on `ThreadPool` workers. On this 1-core
+//! box the pool mostly provides isolation, not parallelism — but the
+//! architecture is the standard leader/worker shape.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Unbounded mpmc channel. `recv` blocks; `try_recv` doesn't.
+/// Closing wakes all receivers, which then drain and get `None`.
+pub struct Channel<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+struct ChannelInner<T> {
+    queue: Mutex<VecDeque<T>>,
+    cond: Condvar,
+    closed: AtomicBool,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Self { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Default for Channel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Channel<T> {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(ChannelInner {
+                queue: Mutex::new(VecDeque::new()),
+                cond: Condvar::new(),
+                closed: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    pub fn send(&self, item: T) -> bool {
+        if self.inner.closed.load(Ordering::Acquire) {
+            return false;
+        }
+        self.inner.queue.lock().unwrap().push_back(item);
+        self.inner.cond.notify_one();
+        true
+    }
+
+    pub fn recv(&self) -> Option<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                return Some(item);
+            }
+            if self.inner.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            q = self.inner.cond.wait(q).unwrap();
+        }
+    }
+
+    pub fn try_recv(&self) -> Option<T> {
+        self.inner.queue.lock().unwrap().pop_front()
+    }
+
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                return Some(item);
+            }
+            if self.inner.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _res) =
+                self.inner.cond.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+        self.inner.cond.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::Acquire)
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool executing boxed jobs from a shared channel.
+pub struct ThreadPool {
+    jobs: Channel<Job>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n_workers: usize, name: &str) -> Self {
+        let jobs: Channel<Job> = Channel::new();
+        let workers = (0..n_workers.max(1))
+            .map(|i| {
+                let rx = jobs.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { jobs, workers }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.jobs.send(Box::new(f));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn channel_fifo() {
+        let ch = Channel::new();
+        ch.send(1);
+        ch.send(2);
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), Some(2));
+        assert_eq!(ch.try_recv(), None);
+    }
+
+    #[test]
+    fn channel_close_drains_then_none() {
+        let ch = Channel::new();
+        ch.send(1);
+        ch.close();
+        assert!(!ch.send(2));
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn channel_cross_thread() {
+        let ch = Channel::new();
+        let tx = ch.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i);
+            }
+            tx.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = ch.recv() {
+            got.push(x);
+        }
+        h.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let ch: Channel<u32> = Channel::new();
+        let t = std::time::Instant::now();
+        assert_eq!(ch.recv_timeout(std::time::Duration::from_millis(30)), None);
+        assert!(t.elapsed().as_millis() >= 25);
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(2, "test");
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+}

@@ -1,0 +1,91 @@
+//! Workloads: evaluation corpora readers, needle tests, the
+//! LongBench-S synthetic benchmark (16 subtasks / 6 categories), and
+//! metric scorers — the rust-side substitutes for PG-19 / The Stack /
+//! LongBench (DESIGN.md §4).
+
+pub mod score;
+pub mod tasks;
+
+use crate::config::ArtifactPaths;
+use anyhow::{Context, Result};
+
+/// Byte corpus dumped by `python/compile/data.py` at `make artifacts`.
+pub fn load_corpus(paths: &ArtifactPaths, name: &str) -> Result<Vec<u8>> {
+    let p = paths.corpus(name);
+    std::fs::read(&p).with_context(|| format!("reading corpus {p:?} (run `make artifacts`)"))
+}
+
+/// Needle-in-a-haystack workload: filler text with one key/value
+/// binding planted `depth_back` bytes before the end, followed by the
+/// probe. The model must emit the value; eviction policies that drop
+/// the binding fail. Uses the training corpus' exact `<<kNN:vMM>>`
+/// surface form so trained models recognize it.
+pub struct Needle {
+    pub prompt: Vec<u8>,
+    pub answer: String,
+}
+
+pub fn make_needle(filler: &[u8], total_len: usize, depth_back: usize, seed: u64) -> Needle {
+    use crate::util::prng::SplitMix64;
+    let mut rng = SplitMix64::new(seed);
+    let key = format!("k{:02}", rng.below(64));
+    let val = format!("v{:02}", rng.below(64));
+    let binding = format!("<<{key}={val}>> ");
+    let probe = format!("<<{key}=");
+    let body_len = total_len.saturating_sub(probe.len());
+    let mut prompt = Vec::with_capacity(total_len);
+    let start = (rng.below(1024) as usize) % filler.len().max(1);
+    let insert_at = body_len.saturating_sub(depth_back.min(body_len - binding.len()));
+    while prompt.len() < body_len {
+        let i = (start + prompt.len()) % filler.len();
+        // Splice the binding at the target depth.
+        if prompt.len() == insert_at {
+            prompt.extend_from_slice(binding.as_bytes());
+        }
+        prompt.push(filler[i]);
+    }
+    prompt.truncate(body_len);
+    prompt.extend_from_slice(probe.as_bytes());
+    Needle { prompt, answer: val }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needle_places_binding_at_depth() {
+        let filler: Vec<u8> = (0..4096).map(|i| b'a' + (i % 26) as u8).collect();
+        let n = make_needle(&filler, 2048, 700, 7);
+        assert_eq!(n.prompt.len(), 2048);
+        let text = String::from_utf8_lossy(&n.prompt);
+        let bind_pos = text.find("<<k").unwrap();
+        let probe_pos = text.rfind("<<k").unwrap();
+        assert!(probe_pos > bind_pos);
+        let distance = probe_pos - bind_pos;
+        assert!(
+            (550..900).contains(&distance),
+            "binding should be ~700 bytes back, got {distance}"
+        );
+        assert!(text.ends_with("="));
+    }
+
+    #[test]
+    fn needle_answer_matches_binding() {
+        let filler: Vec<u8> = (0..4096).map(|i| b'x' + (i % 3) as u8).collect();
+        let n = make_needle(&filler, 1024, 300, 9);
+        let text = String::from_utf8_lossy(&n.prompt);
+        let key_start = text.find("<<k").unwrap();
+        let bound = &text[key_start..key_start + 12];
+        assert!(bound.contains(&n.answer), "{bound} vs {}", n.answer);
+    }
+
+    #[test]
+    fn needle_deterministic() {
+        let filler: Vec<u8> = (0..1000).map(|i| b'a' + (i % 26) as u8).collect();
+        let a = make_needle(&filler, 512, 100, 3);
+        let b = make_needle(&filler, 512, 100, 3);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.answer, b.answer);
+    }
+}

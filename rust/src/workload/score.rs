@@ -1,0 +1,170 @@
+//! Metric scorers mirroring LongBench's per-task metrics:
+//! token-level F1 (QA), LCS-based Rouge-L (summarization), exact
+//! accuracy (synthetic/few-shot), and edit similarity (code).
+
+/// Whitespace token F1 between prediction and reference (QA metric).
+pub fn qa_f1(pred: &str, reference: &str) -> f64 {
+    let p: Vec<&str> = pred.split_whitespace().collect();
+    let r: Vec<&str> = reference.split_whitespace().collect();
+    if p.is_empty() || r.is_empty() {
+        return if p.is_empty() && r.is_empty() { 1.0 } else { 0.0 };
+    }
+    let mut rcount = std::collections::HashMap::new();
+    for w in &r {
+        *rcount.entry(*w).or_insert(0usize) += 1;
+    }
+    let mut overlap = 0usize;
+    for w in &p {
+        if let Some(c) = rcount.get_mut(w) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let prec = overlap as f64 / p.len() as f64;
+    let rec = overlap as f64 / r.len() as f64;
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Longest common subsequence length (word-level).
+fn lcs(a: &[&str], b: &[&str]) -> usize {
+    let mut dp = vec![0usize; b.len() + 1];
+    for &wa in a {
+        let mut prev = 0usize;
+        for (j, &wb) in b.iter().enumerate() {
+            let cur = dp[j + 1];
+            dp[j + 1] = if wa == wb { prev + 1 } else { dp[j + 1].max(dp[j]) };
+            prev = cur;
+        }
+    }
+    dp[b.len()]
+}
+
+/// Rouge-L F-measure (word-level LCS), the summarization metric.
+pub fn rouge_l(pred: &str, reference: &str) -> f64 {
+    let p: Vec<&str> = pred.split_whitespace().collect();
+    let r: Vec<&str> = reference.split_whitespace().collect();
+    if p.is_empty() || r.is_empty() {
+        return if p.is_empty() && r.is_empty() { 1.0 } else { 0.0 };
+    }
+    let l = lcs(&p, &r) as f64;
+    if l == 0.0 {
+        return 0.0;
+    }
+    let prec = l / p.len() as f64;
+    let rec = l / r.len() as f64;
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Exact-match accuracy after trimming (synthetic / few-shot metric).
+pub fn exact(pred: &str, reference: &str) -> f64 {
+    if pred.trim() == reference.trim() {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Substring accuracy: reference appears anywhere in the prediction
+/// (LongBench uses this for retrieval-style tasks).
+pub fn contains(pred: &str, reference: &str) -> f64 {
+    if pred.contains(reference.trim()) {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Levenshtein edit similarity in [0, 1] (code metric).
+pub fn edit_sim(pred: &str, reference: &str) -> f64 {
+    let a: Vec<char> = pred.chars().collect();
+    let b: Vec<char> = reference.chars().collect();
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let mut dp: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut prev = dp[0];
+        dp[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let cur = dp[j + 1];
+            dp[j + 1] = if ca == cb {
+                prev
+            } else {
+                1 + prev.min(dp[j]).min(dp[j + 1])
+            };
+            prev = cur;
+        }
+    }
+    1.0 - dp[b.len()] as f64 / a.len().max(b.len()) as f64
+}
+
+/// Average percentile rank of each method's scores within a task row
+/// (the paper's Table 1 "Avg. Perc." column): for method m, the
+/// fraction of other methods it strictly beats, averaged over tasks.
+pub fn percentile_ranks(rows: &[Vec<f64>]) -> Vec<f64> {
+    // rows[task][method]
+    if rows.is_empty() {
+        return Vec::new();
+    }
+    let m = rows[0].len();
+    let mut out = vec![0.0f64; m];
+    for row in rows {
+        for i in 0..m {
+            let beaten = (0..m).filter(|&j| j != i && row[i] > row[j]).count();
+            out[i] += beaten as f64 / (m - 1).max(1) as f64;
+        }
+    }
+    for o in &mut out {
+        *o = *o / rows.len() as f64 * 100.0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f1_cases() {
+        assert_eq!(qa_f1("the cat", "the cat"), 1.0);
+        assert_eq!(qa_f1("dog", "cat"), 0.0);
+        let f = qa_f1("the black cat", "the cat");
+        assert!(f > 0.7 && f < 1.0);
+    }
+
+    #[test]
+    fn rouge_cases() {
+        assert_eq!(rouge_l("a b c", "a b c"), 1.0);
+        assert!(rouge_l("a x b y c", "a b c") > 0.7);
+        assert_eq!(rouge_l("z", "a b"), 0.0);
+    }
+
+    #[test]
+    fn exact_and_contains() {
+        assert_eq!(exact(" v17 ", "v17"), 1.0);
+        assert_eq!(exact("v17x", "v17"), 0.0);
+        assert_eq!(contains("answer: v17.", "v17"), 1.0);
+        assert_eq!(contains("nope", "v17"), 0.0);
+    }
+
+    #[test]
+    fn edit_sim_cases() {
+        assert_eq!(edit_sim("abc", "abc"), 1.0);
+        assert!((edit_sim("abc", "abd") - (1.0 - 1.0 / 3.0)).abs() < 1e-9);
+        assert_eq!(edit_sim("", ""), 1.0);
+        assert!(edit_sim("abcd", "") < 0.01);
+    }
+
+    #[test]
+    fn percentile_ranks_ordering() {
+        // 2 tasks, 3 methods; method 2 always best, 0 always worst.
+        let rows = vec![vec![1.0, 5.0, 9.0], vec![0.1, 0.5, 0.9]];
+        let p = percentile_ranks(&rows);
+        assert_eq!(p, vec![0.0, 50.0, 100.0]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Engine integration: every policy serves a request end-to-end, the
+//! vanilla policy equals the model oracle (teacher-forced PPL finite,
+//! monotone context growth), batching equals sequential execution, and
+//! caches are reclaimed.
+
+use radar_serve::config::{ArtifactPaths, PolicyKind, ServingConfig};
+use radar_serve::engine::{Engine, GenRequest};
+use radar_serve::model::tokenizer;
+use radar_serve::runtime::Runtime;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let paths = ArtifactPaths::new("artifacts", "sm");
+    if !paths.manifest().exists() {
+        eprintln!("skipping engine tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Runtime::load(paths).unwrap()))
+}
+
+fn engine(rt: Arc<Runtime>, policy: PolicyKind) -> Engine {
+    let mut cfg = ServingConfig::default();
+    cfg.policy = policy;
+    cfg.window = 32;
+    cfg.budget = 64;
+    Engine::new(rt, cfg).unwrap()
+}
+
+const PROMPT: &str = "the stream carries old light towards dawn. quiet hills answer slowly ";
+
+#[test]
+fn every_policy_generates() {
+    let Some(rt) = runtime() else { return };
+    for &p in PolicyKind::all() {
+        let mut e = engine(rt.clone(), p);
+        let id = e.add(GenRequest::new(tokenizer::encode(PROMPT), 8)).unwrap();
+        let results = e.run_to_completion().unwrap();
+        let r = results.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(r.logprobs.len(), 8, "{p:?}");
+        assert!(r.logprobs.iter().all(|lp| lp.is_finite()), "{p:?}");
+        assert!(r.ppl().is_finite() && r.ppl() > 0.0, "{p:?}");
+    }
+}
+
+#[test]
+fn teacher_forcing_records_logprobs() {
+    let Some(rt) = runtime() else { return };
+    // In-distribution text: the actual evaluation corpus.
+    let corpus = std::fs::read("artifacts/corpus/book_eval.bin").unwrap();
+    let mut e = engine(rt, PolicyKind::Vanilla);
+    let toks = tokenizer::encode_bytes(&corpus[..160]);
+    let (prompt, teacher) = toks.split_at(64);
+    let id = e
+        .add(GenRequest::teacher_forced(prompt.to_vec(), teacher.to_vec()))
+        .unwrap();
+    let results = e.run_to_completion().unwrap();
+    let r = results.iter().find(|r| r.id == id).unwrap();
+    assert_eq!(r.logprobs.len(), teacher.len());
+    // Trained model must beat uniform (PPL 256) on in-distribution text.
+    assert!(r.ppl() < 100.0, "ppl {}", r.ppl());
+}
+
+#[test]
+fn radar_matches_vanilla_at_short_context() {
+    // With t < budget every policy sees the whole cache, so greedy
+    // generations must agree token-for-token.
+    let Some(rt) = runtime() else { return };
+    let gen = |p: PolicyKind| {
+        let mut e = engine(rt.clone(), p);
+        let id = e.add(GenRequest::new(tokenizer::encode("quiet hills "), 12)).unwrap();
+        let results = e.run_to_completion().unwrap();
+        results.into_iter().find(|r| r.id == id).unwrap().tokens
+    };
+    let v = gen(PolicyKind::Vanilla);
+    let r = gen(PolicyKind::Radar);
+    assert_eq!(v, r, "greedy tokens must agree at short context");
+}
+
+#[test]
+fn batched_equals_sequential() {
+    let Some(rt) = runtime() else { return };
+    let prompts = ["the stream carries ", "old light towards ", "quiet hills answer "];
+    // Sequential.
+    let mut seq_out = Vec::new();
+    for p in prompts {
+        let mut e = engine(rt.clone(), PolicyKind::Streaming);
+        let id = e.add(GenRequest::new(tokenizer::encode(p), 6)).unwrap();
+        let results = e.run_to_completion().unwrap();
+        seq_out.push(results.into_iter().find(|r| r.id == id).unwrap().tokens);
+    }
+    // Batched in one engine.
+    let mut e = engine(rt, PolicyKind::Streaming);
+    let ids: Vec<_> = prompts
+        .iter()
+        .map(|p| e.add(GenRequest::new(tokenizer::encode(p), 6)).unwrap())
+        .collect();
+    let results = e.run_to_completion().unwrap();
+    for (i, id) in ids.iter().enumerate() {
+        let r = results.iter().find(|r| r.id == *id).unwrap();
+        assert_eq!(r.tokens, seq_out[i], "batched row {i} differs from sequential");
+    }
+}
+
+#[test]
+fn cache_blocks_reclaimed_after_removal() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine(rt, PolicyKind::Vanilla);
+    let used0 = e.pool.used_blocks();
+    for _ in 0..3 {
+        let id = e.add(GenRequest::new(tokenizer::encode(PROMPT), 4)).unwrap();
+        e.run_to_completion().unwrap();
+        // run_to_completion removes finished sequences.
+        let _ = id;
+    }
+    assert_eq!(e.pool.used_blocks(), used0, "blocks leak across requests");
+}
+
+#[test]
+fn stop_token_halts_generation() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine(rt, PolicyKind::Vanilla);
+    let mut req = GenRequest::new(tokenizer::encode("the stream "), 64);
+    req.stop_token = Some(b' ' as i32);
+    let id = e.add(req).unwrap();
+    let results = e.run_to_completion().unwrap();
+    let r = results.iter().find(|r| r.id == id).unwrap();
+    assert!(r.logprobs.len() <= 64);
+    if r.logprobs.len() < 64 {
+        assert_eq!(*r.tokens.last().unwrap(), b' ' as i32);
+    }
+}
+
+#[test]
+fn long_context_crosses_restructure_boundaries() {
+    // Radar across several perfect squares (restructures at 169, 196, ...).
+    let Some(rt) = runtime() else { return };
+    let mut e = engine(rt, PolicyKind::Radar);
+    let long_prompt: String = PROMPT.repeat(4); // ~280 bytes
+    let id = e.add(GenRequest::new(tokenizer::encode(&long_prompt), 40)).unwrap();
+    let results = e.run_to_completion().unwrap();
+    let r = results.iter().find(|r| r.id == id).unwrap();
+    assert_eq!(r.logprobs.len(), 40);
+    assert!(r.logprobs.iter().all(|lp| lp.is_finite()));
+}

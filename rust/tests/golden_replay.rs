@@ -1,0 +1,174 @@
+//! Integration: execute the compiled artifacts on the exact inputs
+//! python used when writing `golden.npz`, and assert the outputs match
+//! the python (jax/pallas) results — the cross-language correctness
+//! contract for the whole AOT path.
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise).
+
+use radar_serve::config::ArtifactPaths;
+use radar_serve::runtime::Runtime;
+use std::collections::HashMap;
+use xla::{FromRawBytes, Literal};
+
+fn load_golden(paths: &ArtifactPaths) -> Option<HashMap<String, (Vec<usize>, Vec<f32>, Vec<i32>)>> {
+    let npz = Literal::read_npz(paths.golden(), &()).ok()?;
+    let mut out = HashMap::new();
+    for (name, lit) in npz {
+        let name = name.trim_end_matches(".npy").to_string();
+        let shape: Vec<usize> = lit
+            .array_shape()
+            .ok()?
+            .dims()
+            .iter()
+            .map(|d| *d as usize)
+            .collect();
+        match lit.ty().ok()? {
+            xla::ElementType::F32 => {
+                out.insert(name, (shape, lit.to_vec::<f32>().ok()?, vec![]));
+            }
+            xla::ElementType::S32 => {
+                out.insert(name, (shape, vec![], lit.to_vec::<i32>().ok()?));
+            }
+            xla::ElementType::S64 => {
+                let v64 = lit.to_vec::<i64>().ok()?;
+                out.insert(name, (shape, vec![], v64.iter().map(|&x| x as i32).collect()));
+            }
+            _ => {}
+        }
+    }
+    Some(out)
+}
+
+fn setup() -> Option<(Runtime, HashMap<String, (Vec<usize>, Vec<f32>, Vec<i32>)>)> {
+    let paths = ArtifactPaths::new("artifacts", "sm");
+    if !paths.manifest().exists() {
+        eprintln!("skipping golden tests: run `make artifacts` first");
+        return None;
+    }
+    let golden = load_golden(&paths)?;
+    let rt = Runtime::load(paths).ok()?;
+    Some((rt, golden))
+}
+
+fn assert_close(name: &str, got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len(), "{name}: length");
+    let mut max_diff = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        max_diff = max_diff.max((g - w).abs());
+    }
+    assert!(
+        max_diff <= tol,
+        "{name}: max |diff| = {max_diff} > {tol}"
+    );
+}
+
+/// Relative tolerance against the tensor's own scale — for exp()-based
+/// outputs (phi features) whose magnitude tracks the trained key norms.
+fn assert_close_rel(name: &str, got: &[f32], want: &[f32], rel: f32) {
+    assert_eq!(got.len(), want.len(), "{name}: length");
+    let scale = want.iter().fold(0.0f32, |m, w| m.max(w.abs())).max(1e-6);
+    let mut max_diff = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        max_diff = max_diff.max((g - w).abs());
+    }
+    assert!(
+        max_diff <= rel * scale,
+        "{name}: max |diff| = {max_diff} > {rel} * scale {scale}"
+    );
+}
+
+#[test]
+fn decode_artifact_matches_python() {
+    let Some((rt, g)) = setup() else { return };
+    let meta = rt.registry.resolve_decode(1, 128, 128).unwrap().clone();
+    assert_eq!(meta.len, 128, "golden was generated for the S=128 bucket");
+    let omega = rt.omega(128).unwrap();
+    let out = rt
+        .decode(
+            &meta,
+            &omega,
+            &g["dec_tokens"].2,
+            &g["dec_pos"].2,
+            &g["dec_K"].1,
+            &g["dec_V"].1,
+            &g["dec_mask"].1,
+        )
+        .unwrap();
+    assert_close("logits", &out.logits, &g["dec_out_logits"].1, 2e-3);
+    assert_close("k_new", &out.k_new, &g["dec_out_k_new"].1, 1e-4);
+    assert_close("v_new", &out.v_new, &g["dec_out_v_new"].1, 1e-4);
+    assert_close_rel("feat_new", &out.feat_new, &g["dec_out_feat_new"].1, 1e-3);
+    assert_close("probs", &out.probs, &g["dec_out_probs"].1, 1e-4);
+}
+
+#[test]
+fn prefill_artifact_matches_python() {
+    let Some((rt, g)) = setup() else { return };
+    let meta = rt.registry.resolve_prefill(256, 128).unwrap().clone();
+    assert_eq!(meta.len, 256);
+    let omega = rt.omega(128).unwrap();
+    let pos0 = g["pre_pos0"].2[0];
+    let out = rt
+        .prefill(
+            &meta,
+            &omega,
+            &g["pre_tokens"].2,
+            pos0,
+            &g["pre_K"].1,
+            &g["pre_V"].1,
+            &g["pre_mask"].1,
+        )
+        .unwrap();
+    assert_close("logits", &out.logits, &g["pre_out_logits"].1, 2e-3);
+    assert_close("k_c", &out.k_c, &g["pre_out_k_c"].1, 1e-4);
+    assert_close("v_c", &out.v_c, &g["pre_out_v_c"].1, 1e-4);
+    assert_close_rel("feat_c", &out.feat_c, &g["pre_out_feat_c"].1, 1e-3);
+    assert_close("colsum", &out.colsum, &g["pre_out_colsum"].1, 1e-3);
+}
+
+#[test]
+fn per_layer_pipeline_matches_python() {
+    let Some((rt, g)) = setup() else { return };
+    let qkv_meta = rt.registry.resolve_qkv(1, 128).unwrap().clone();
+    let omega = rt.omega(128).unwrap();
+    let q_out = rt
+        .qkv(&qkv_meta, 0, &omega, &g["lay_x"].1, &g["lay_pos"].2)
+        .unwrap();
+    assert_close("q", &q_out.q, &g["lay_out_q"].1, 1e-4);
+    assert_close("k", &q_out.k, &g["lay_out_k"].1, 1e-4);
+    assert_close("v", &q_out.v, &g["lay_out_v"].1, 1e-4);
+    assert_close_rel("phi_q", &q_out.phi_q, &g["lay_out_phi_q"].1, 1e-3);
+    assert_close_rel("phi_k", &q_out.phi_k, &g["lay_out_phi_k"].1, 1e-3);
+
+    let am_meta = rt.registry.resolve_attn_mlp(1, 128).unwrap().clone();
+    assert_eq!(am_meta.len, 128);
+    // golden dec_mask is [1, L, H, S]; the attn_mlp golden used layer 0
+    // slice [1, H, S].
+    let mask_full = &g["dec_mask"].1;
+    let (h, s) = (rt.config.n_heads, 128);
+    let mask_l0 = &mask_full[..h * s];
+    let out = rt
+        .attn_mlp(
+            &am_meta,
+            0,
+            &g["lay_x"].1,
+            &q_out.q,
+            &q_out.k,
+            &q_out.v,
+            &g["lay_K"].1,
+            &g["lay_V"].1,
+            mask_l0,
+        )
+        .unwrap();
+    assert_close("x_out", &out.x, &g["lay_out_x"].1, 1e-3);
+    assert_close("probs", &out.probs, &g["lay_out_probs"].1, 1e-4);
+}
+
+#[test]
+fn host_embed_and_head_match_python() {
+    let Some((rt, g)) = setup() else { return };
+    let x = radar_serve::model::embed(&rt, &[5, 250]);
+    assert_close("embed", &x, &g["emb_out"].1, 1e-6);
+    let logits = radar_serve::model::head(&rt, &rt.config, &g["head_x"].1);
+    assert_close("head", &logits, &g["head_out_logits"].1, 2e-3);
+}
