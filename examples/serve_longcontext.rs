@@ -1,7 +1,8 @@
 //! End-to-end serving driver (the DESIGN.md §6 "e2e validation" run):
 //! starts the HTTP server with the Radar policy, fires a batch of
-//! concurrent long-context requests at it over real sockets, and
-//! reports latency percentiles + throughput.
+//! concurrent long-context `/v1/completions` requests at it over real
+//! sockets (keep-alive, non-stream and SSE stream), and reports latency
+//! percentiles + throughput.
 //!
 //!   cargo run --release --offline --example serve_longcontext
 
@@ -11,29 +12,117 @@ use radar_serve::runtime::Runtime;
 use radar_serve::util::json::Json;
 use radar_serve::util::stats::Series;
 use radar_serve::workload::load_corpus;
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 const ADDR: &str = "127.0.0.1:18477";
 
-fn post_generate(prompt: &str, max_new: usize) -> anyhow::Result<Json> {
-    let body = Json::obj()
+/// Read one HTTP response off a keep-alive socket: status line +
+/// headers, then exactly Content-Length body bytes.
+fn read_response(reader: &mut BufReader<TcpStream>) -> anyhow::Result<(u16, String)> {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad status line: {status_line:?}"))?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim().is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn post_body(prompt: &str, max_tokens: usize, stream: bool) -> String {
+    Json::obj()
         .with("prompt", prompt)
-        .with("max_new_tokens", max_new)
-        .to_string();
-    let mut stream = TcpStream::connect(ADDR)?;
+        .with("max_tokens", max_tokens)
+        .with("stream", stream)
+        .to_string()
+}
+
+fn write_post(stream: &mut TcpStream, body: &str) -> anyhow::Result<()> {
     write!(
         stream,
-        "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+        "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
         body.len(),
         body
     )?;
+    Ok(())
+}
+
+/// One keep-alive socket, `n` sequential completions. Returns per-request
+/// latencies (proving socket reuse works).
+fn run_client(n: usize, client_id: usize, corpus: &[u8], prompt_len: usize, max_tokens: usize)
+    -> anyhow::Result<Vec<f64>> {
+    let stream = TcpStream::connect(ADDR)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut lat = Vec::new();
+    for r in 0..n {
+        let off = (client_id * 7919 + r * 104729) % (corpus.len() - prompt_len);
+        let prompt = String::from_utf8_lossy(&corpus[off..off + prompt_len]).into_owned();
+        let t = std::time::Instant::now();
+        write_post(&mut writer, &post_body(&prompt, max_tokens, false))?;
+        let (status, body) = read_response(&mut reader)?;
+        anyhow::ensure!(status == 200, "status {status}: {body}");
+        let j = Json::parse(&body)?;
+        anyhow::ensure!(
+            j.path("usage.completion_tokens").and_then(Json::as_usize) == Some(max_tokens),
+            "bad response: {body}"
+        );
+        lat.push(t.elapsed().as_secs_f64());
+    }
+    Ok(lat)
+}
+
+/// One SSE stream; returns the number of token chunks and the
+/// concatenated text.
+fn run_stream(prompt: &str, max_tokens: usize) -> anyhow::Result<(usize, String)> {
+    let mut stream = TcpStream::connect(ADDR)?;
+    write_post(&mut stream, &post_body(prompt, max_tokens, true))?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?; // SSE responses are close-delimited
+    let mut chunks = 0usize;
+    let mut text = String::new();
+    for line in raw.lines() {
+        let Some(payload) = line.strip_prefix("data: ") else { continue };
+        if payload == "[DONE]" {
+            break;
+        }
+        let j = Json::parse(payload)?;
+        let Some(choice) = j.get("choices").and_then(Json::as_arr).and_then(<[Json]>::first)
+        else {
+            continue;
+        };
+        text.push_str(choice.get("text").and_then(Json::as_str).unwrap_or(""));
+        if choice.get("finish_reason") == Some(&Json::Null) {
+            chunks += 1; // token chunk (terminal chunk carries a reason)
+        }
+    }
+    Ok((chunks, text))
+}
+
+fn http_get(path: &str) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(ADDR)?;
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")?;
     let mut resp = String::new();
-    stream.read_to_string(&mut resp)?;
-    let json_start = resp.find("\r\n\r\n").map(|i| i + 4).unwrap_or(0);
-    Ok(Json::parse(&resp[json_start..])?)
+    s.read_to_string(&mut resp)?;
+    Ok(resp)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -56,39 +145,21 @@ fn main() -> anyhow::Result<()> {
             }
             std::thread::sleep(std::time::Duration::from_millis(100));
         }
-        // Health check.
-        let mut s = TcpStream::connect(ADDR)?;
-        write!(s, "GET /health HTTP/1.1\r\n\r\n")?;
-        let mut health = String::new();
-        s.read_to_string(&mut health)?;
+        let health = http_get("/health")?;
         anyhow::ensure!(health.contains("\"status\":\"ok\""), "health: {health}");
         println!("server healthy at {ADDR}");
 
-        // Fire concurrent long-context requests from client threads.
+        // Concurrent clients, each reusing ONE keep-alive socket.
         let n_clients = 4;
         let reqs_per_client = 3;
         let prompt_len = 640usize;
-        let max_new = 32usize;
+        let max_tokens = 32usize;
         let t0 = std::time::Instant::now();
         let handles: Vec<_> = (0..n_clients)
             .map(|c| {
                 let corpus = corpus.clone();
-                std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
-                    let mut lat = Vec::new();
-                    for r in 0..reqs_per_client {
-                        let off = (c * 7919 + r * 104729) % (corpus.len() - prompt_len);
-                        let prompt = String::from_utf8_lossy(&corpus[off..off + prompt_len])
-                            .into_owned();
-                        let t = std::time::Instant::now();
-                        let resp = post_generate(&prompt, max_new)?;
-                        let el = t.elapsed().as_secs_f64();
-                        anyhow::ensure!(
-                            resp.get("tokens").and_then(Json::as_usize) == Some(max_new),
-                            "bad response: {resp}"
-                        );
-                        lat.push(el);
-                    }
-                    Ok(lat)
+                std::thread::spawn(move || {
+                    run_client(reqs_per_client, c, &corpus, prompt_len, max_tokens)
                 })
             })
             .collect();
@@ -102,7 +173,7 @@ fn main() -> anyhow::Result<()> {
         }
         let wall = t0.elapsed().as_secs_f64();
         println!(
-            "{n_ok} requests ({prompt_len} prompt bytes, {max_new} new tokens each) in {wall:.1}s"
+            "{n_ok} requests ({prompt_len} prompt bytes, {max_tokens} new tokens each, keep-alive) in {wall:.1}s"
         );
         println!(
             "request latency ms: mean {:.0}  p50 {:.0}  p99 {:.0}",
@@ -113,16 +184,29 @@ fn main() -> anyhow::Result<()> {
         println!(
             "throughput: {:.2} req/s, {:.1} generated tok/s",
             n_ok as f64 / wall,
-            (n_ok * max_new) as f64 / wall
+            (n_ok * max_tokens) as f64 / wall
         );
 
-        // Metrics endpoint.
-        let mut s = TcpStream::connect(ADDR)?;
-        write!(s, "GET /metrics HTTP/1.1\r\n\r\n")?;
-        let mut m = String::new();
-        s.read_to_string(&mut m)?;
-        let counters: Vec<&str> = m.lines().filter(|l| l.starts_with("counter")).collect();
-        println!("server counters: {counters:?}");
+        // One SSE stream: token chunks arrive incrementally.
+        let off = 1234 % (corpus.len() - prompt_len);
+        let prompt = String::from_utf8_lossy(&corpus[off..off + prompt_len]).into_owned();
+        let (chunks, text) = run_stream(&prompt, max_tokens)?;
+        anyhow::ensure!(chunks == max_tokens, "expected {max_tokens} chunks, got {chunks}");
+        println!("stream: {chunks} SSE chunks, {} bytes of text", text.len());
+
+        // Metrics endpoint: serving counters + session histograms.
+        let m = http_get("/metrics")?;
+        let interesting: Vec<&str> = m
+            .lines()
+            .filter(|l| {
+                l.starts_with("counter") || l.starts_with("gauge") || l.contains("ttft")
+                    || l.contains("inter_token")
+            })
+            .collect();
+        println!("server metrics:");
+        for l in interesting {
+            println!("  {l}");
+        }
         stop_driver.store(true, Ordering::Relaxed);
         Ok(())
     });

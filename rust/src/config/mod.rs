@@ -137,6 +137,9 @@ pub struct ServingConfig {
     pub window: usize,
     /// Max concurrent decode batch (must match a compiled B bucket).
     pub max_batch: usize,
+    /// Bounded admission queue: `Engine::submit` rejects (HTTP 429)
+    /// once this many requests are waiting for a decode slot.
+    pub max_pending: usize,
     /// Cap on tokens per sequence (cache capacity).
     pub max_seq_len: usize,
     /// Sampling.
@@ -155,6 +158,7 @@ impl Default for ServingConfig {
             budget: 256,
             window: 64,
             max_batch: 4,
+            max_pending: 32,
             max_seq_len: 4096,
             temperature: 1.0,
             greedy: true,
@@ -174,6 +178,7 @@ impl ServingConfig {
             "budget" => self.budget = val.parse()?,
             "window" => self.window = val.parse()?,
             "max_batch" => self.max_batch = val.parse()?,
+            "max_pending" => self.max_pending = val.parse()?,
             "max_seq_len" => self.max_seq_len = val.parse()?,
             "temperature" => self.temperature = val.parse()?,
             "greedy" => self.greedy = val == "true" || val == "1",
@@ -268,9 +273,11 @@ mod tests {
         s.apply_override("policy", "h2o").unwrap();
         s.apply_override("k", "16").unwrap();
         s.apply_override("budget", "512").unwrap();
+        s.apply_override("max_pending", "8").unwrap();
         assert_eq!(s.policy, PolicyKind::H2O);
         assert_eq!(s.radar_k, 16);
         assert_eq!(s.budget, 512);
+        assert_eq!(s.max_pending, 8);
         assert!(s.apply_override("bogus", "1").is_err());
     }
 

@@ -12,19 +12,33 @@
 //!   final head are host-side (verified against goldens).
 
 use super::batcher::group_by_bucket;
-use super::request::{GenRequest, GenResult, PolicyHolder, SeqId, Sequence};
+use super::request::{
+    FinishReason, GenRequest, GenResult, PolicyHolder, SeqId, Sequence, SessionEvent,
+    SessionHandle, SubmitError, Usage,
+};
 use crate::config::ServingConfig;
 use crate::kvcache::BlockPool;
 use crate::metrics::Metrics;
 use crate::model::{embed, head, log_prob};
 use crate::policy::{SelectCtx, Selection};
 use crate::runtime::Runtime;
+use crate::util::threadpool::Channel;
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Instant;
 
 const NEG: f32 = -1e30;
+
+/// A submitted-but-not-yet-admitted session (the bounded queue entry).
+struct PendingSession {
+    id: SeqId,
+    req: GenRequest,
+    events: Channel<SessionEvent>,
+    cancel: Arc<AtomicBool>,
+    queued_at: Instant,
+}
 
 pub struct Engine {
     pub rt: Arc<Runtime>,
@@ -32,6 +46,9 @@ pub struct Engine {
     pub pool: BlockPool,
     pub metrics: Arc<Metrics>,
     seqs: BTreeMap<SeqId, Sequence>,
+    /// Bounded admission queue; `submit` rejects once it is full so the
+    /// HTTP layer can answer 429 instead of buffering unboundedly.
+    pending: VecDeque<PendingSession>,
     next_id: SeqId,
     omega: Arc<xla::PjRtBuffer>,
     // Reused step staging buffers (values stay bounded; masked slots
@@ -60,6 +77,7 @@ impl Engine {
             pool,
             metrics: Arc::new(Metrics::new()),
             seqs: BTreeMap::new(),
+            pending: VecDeque::new(),
             next_id: 1,
             omega,
             buf_k: Vec::new(),
@@ -78,6 +96,163 @@ impl Engine {
 
     pub fn finished(&self) -> Vec<SeqId> {
         self.seqs.iter().filter(|(_, s)| s.done).map(|(&i, _)| i).collect()
+    }
+
+    /// No runnable work: nothing queued and nothing mid-decode.
+    /// (Finished-but-unremoved legacy sequences don't count.)
+    pub fn idle(&self) -> bool {
+        self.pending.is_empty() && self.seqs.values().all(|s| s.done)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.pending.len()
+    }
+
+    // -----------------------------------------------------------------
+    // Session API
+    // -----------------------------------------------------------------
+
+    /// Enqueue a request for admission and return its session handle.
+    ///
+    /// This is cheap (no prefill): the request waits in a bounded queue
+    /// until `step` admits it, so the batcher — not the socket layer —
+    /// owns backpressure. A full queue is an explicit rejection the
+    /// HTTP surface maps to 429.
+    pub fn submit(&mut self, req: GenRequest) -> Result<SessionHandle, SubmitError> {
+        let need = req.prompt.len() + req.max_new_tokens;
+        if need > self.cfg.max_seq_len {
+            self.metrics.inc("requests_rejected");
+            return Err(SubmitError::TooLong { need, max: self.cfg.max_seq_len });
+        }
+        if self.pending.len() >= self.cfg.max_pending {
+            self.metrics.inc("requests_rejected");
+            return Err(SubmitError::QueueFull { depth: self.pending.len() });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let events: Channel<SessionEvent> = Channel::new();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let handle = SessionHandle::new(id, events.clone(), cancel.clone());
+        self.pending.push_back(PendingSession {
+            id,
+            req,
+            events,
+            cancel,
+            queued_at: Instant::now(),
+        });
+        self.metrics.inc("requests_submitted");
+        self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
+        Ok(handle)
+    }
+
+    /// Move queued sessions into the active set (prefilling them) while
+    /// concurrency allows.
+    fn admit_pending(&mut self) {
+        while self.seqs.values().filter(|s| !s.done).count() < self.cfg.max_batch {
+            let Some(p) = self.pending.pop_front() else { break };
+            self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
+            if p.cancel.load(std::sync::atomic::Ordering::Acquire) {
+                // Cancelled while queued: never allocated anything.
+                p.events.send(SessionEvent::Done {
+                    usage: Usage::default(),
+                    finish: FinishReason::Cancelled,
+                });
+                p.events.close();
+                self.metrics.inc("requests_cancelled");
+                continue;
+            }
+            self.metrics.observe_us("queue_wait", p.queued_at.elapsed().as_secs_f64() * 1e6);
+            let mc = self.rt.config.clone();
+            let mut seq = Sequence::new(p.id, p.req, &self.cfg, mc.n_layers, mc.n_heads);
+            seq.emitter = Some(p.events.clone());
+            seq.cancel = p.cancel;
+            seq.queued_at = p.queued_at;
+            let t0 = Instant::now();
+            if !seq.tokens.is_empty() {
+                if let Err(e) = self.prefill(&mut seq) {
+                    seq.cache.free(&mut self.pool);
+                    p.events.send(SessionEvent::Error(format!("prefill failed: {e}")));
+                    p.events.close();
+                    self.metrics.inc("requests_failed");
+                    continue;
+                }
+            }
+            seq.prompt_len = seq.tokens.len();
+            seq.prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.metrics.inc("requests_admitted");
+            self.metrics.observe_us("prefill", seq.prefill_ms * 1e3);
+            self.seqs.insert(seq.id, seq);
+        }
+    }
+
+    /// Drop sequences whose cancel flag flipped, freeing their KV
+    /// blocks immediately (before any decode work this step).
+    fn sweep_cancelled(&mut self) {
+        let cancelled: Vec<SeqId> = self
+            .seqs
+            .iter()
+            .filter(|(_, s)| !s.done && s.is_cancelled())
+            .map(|(&i, _)| i)
+            .collect();
+        for id in cancelled {
+            let mut seq = self.seqs.remove(&id).unwrap();
+            seq.cache.free(&mut self.pool);
+            seq.finish = Some(FinishReason::Cancelled);
+            if let Some(em) = &seq.emitter {
+                em.send(SessionEvent::Done {
+                    usage: seq.usage(),
+                    finish: FinishReason::Cancelled,
+                });
+                em.close();
+            }
+            self.metrics.inc("requests_cancelled");
+        }
+    }
+
+    /// Deliver `Done` for finished session-backed sequences and free
+    /// their blocks. Legacy (`add`) sequences are left for `remove`.
+    fn reap_finished(&mut self) {
+        let done: Vec<SeqId> = self
+            .seqs
+            .iter()
+            .filter(|(_, s)| s.done && s.emitter.is_some())
+            .map(|(&i, _)| i)
+            .collect();
+        for id in done {
+            let mut seq = self.seqs.remove(&id).unwrap();
+            seq.cache.free(&mut self.pool);
+            if let Some(em) = &seq.emitter {
+                em.send(SessionEvent::Done {
+                    usage: seq.usage(),
+                    finish: seq.finish.unwrap_or(FinishReason::Length),
+                });
+                em.close();
+            }
+            self.metrics.inc("requests_completed");
+        }
+    }
+
+    /// Terminal shutdown path: fail every queued and active session and
+    /// release all cache blocks (used when the engine loop hits an
+    /// unrecoverable error or the server stops).
+    pub fn fail_all(&mut self, msg: &str) {
+        for p in self.pending.drain(..) {
+            p.events.send(SessionEvent::Error(msg.to_string()));
+            p.events.close();
+            self.metrics.inc("requests_failed");
+        }
+        let ids: Vec<SeqId> = self.seqs.keys().copied().collect();
+        for id in ids {
+            let mut seq = self.seqs.remove(&id).unwrap();
+            seq.cache.free(&mut self.pool);
+            if let Some(em) = &seq.emitter {
+                em.send(SessionEvent::Error(msg.to_string()));
+                em.close();
+                self.metrics.inc("requests_failed");
+            }
+        }
+        self.metrics.set_gauge("queue_depth", 0.0);
+        self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
     }
 
     /// Admit a request: allocate the sequence and run prefill on the
@@ -184,12 +359,17 @@ impl Engine {
     // Decode: public step API
     // -----------------------------------------------------------------
 
-    /// One engine step: advance every runnable sequence by one token.
-    /// Fused sequences are batched; radar sequences run per-layer.
+    /// One engine step: observe cancellations (freeing blocks before
+    /// any decode work), admit queued sessions, advance every runnable
+    /// sequence by one token, then deliver terminal events. Fused
+    /// sequences are batched; radar sequences run per-layer.
     pub fn step(&mut self) -> Result<StepStats> {
         let mut stats = StepStats::default();
+        self.sweep_cancelled();
+        self.admit_pending();
         let ids = self.active_ids();
         if ids.is_empty() {
+            self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
             return Ok(stats);
         }
         // Partition by pipeline.
@@ -212,12 +392,16 @@ impl Engine {
             stats.decoded += 1;
             stats.dispatches += 2 * self.rt.config.n_layers;
         }
+        self.reap_finished();
+        self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
         Ok(stats)
     }
 
-    /// Run all sequences to completion; returns finished results.
+    /// Run all queued + active sequences to completion; returns the
+    /// finished results of legacy (`add`) sequences. Session results
+    /// are delivered through their handles instead.
     pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
-        while !self.active_ids().is_empty() {
+        while !self.idle() {
             self.step()?;
         }
         let ids = self.finished();
@@ -512,34 +696,59 @@ impl Engine {
 
     fn finish_token(&self, seq: &mut Sequence, logits: &[f32]) {
         let pos = seq.cache.len(); // position of the NEXT token
+        let mut emitted: Option<(i32, f64)> = None;
         if let Some(teacher) = seq.teacher.clone() {
             // Teacher forcing: the next token is fixed; record log-prob.
             let step = seq.generated;
             if step < teacher.len() {
                 let tgt = teacher[step] as usize;
-                seq.logprobs.push(log_prob(logits, tgt));
+                let lp = log_prob(logits, tgt);
+                seq.logprobs.push(lp);
                 if seq.tokens.len() <= pos {
                     seq.tokens.push(teacher[step]);
                 }
                 seq.generated += 1;
+                emitted = Some((teacher[step], lp));
             }
             if seq.generated >= teacher.len().min(seq.max_new_tokens) {
                 seq.done = true;
+                seq.finish.get_or_insert(FinishReason::Length);
             }
         } else {
             let tok = seq.sampler.sample(logits);
-            seq.logprobs.push(log_prob(logits, tok as usize));
+            let lp = log_prob(logits, tok as usize);
+            seq.logprobs.push(lp);
             seq.tokens.push(tok);
             seq.generated += 1;
-            if seq.generated >= seq.max_new_tokens
-                || seq.stop_token == Some(tok)
+            emitted = Some((tok, lp));
+            if seq.stop_token == Some(tok) {
+                seq.done = true;
+                seq.finish.get_or_insert(FinishReason::Stop);
+            } else if seq.generated >= seq.max_new_tokens
                 || seq.tokens.len() >= self.cfg.max_seq_len
             {
                 seq.done = true;
+                seq.finish.get_or_insert(FinishReason::Length);
             }
         }
         if seq.tokens.len() >= self.cfg.max_seq_len {
             seq.done = true;
+            seq.finish.get_or_insert(FinishReason::Length);
+        }
+        // Per-token stream delivery + serving latency histograms.
+        if let Some((token, logprob)) = emitted {
+            let now = Instant::now();
+            if seq.generated == 1 {
+                self.metrics
+                    .observe_us("ttft", (now - seq.queued_at).as_secs_f64() * 1e6);
+            } else if let Some(prev) = seq.last_token_at {
+                self.metrics
+                    .observe_us("inter_token", (now - prev).as_secs_f64() * 1e6);
+            }
+            seq.last_token_at = Some(now);
+            if let Some(em) = &seq.emitter {
+                em.send(SessionEvent::Token { token, logprob, index: seq.generated - 1 });
+            }
         }
     }
 }

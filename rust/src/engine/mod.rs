@@ -8,4 +8,7 @@ mod request;
 
 pub use batcher::{group_by_bucket, BatchGroup};
 pub use core::{Engine, StepStats};
-pub use request::{GenRequest, GenResult, SeqId, Sequence};
+pub use request::{
+    FinishReason, GenRequest, GenResult, SeqId, Sequence, SessionEvent, SessionHandle,
+    SessionResult, SubmitError, Usage,
+};

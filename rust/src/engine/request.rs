@@ -1,9 +1,19 @@
-//! Request and per-sequence serving state.
+//! Request, session, and per-sequence serving state.
+//!
+//! The serving lifecycle is session-oriented: `Engine::submit` returns a
+//! `SessionHandle` carrying a per-token event stream (`Token`, `Done`,
+//! `Error`) plus a cancel flag the step loop checks every iteration.
+//! The legacy blocking path (`Engine::add` + `run_to_completion` +
+//! `GenResult`) remains for batch harnesses and tests.
 
 use crate::config::{PolicyKind, ServingConfig};
 use crate::kvcache::SeqCache;
 use crate::model::Sampler;
 use crate::policy::{RadarPolicy, RadarVariant, SelectionPolicy};
+use crate::util::threadpool::Channel;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 pub type SeqId = u64;
 
@@ -18,20 +28,35 @@ pub struct GenRequest {
     pub teacher: Option<Vec<i32>>,
     /// Stop generation at this byte (e.g. b'\n'), if any.
     pub stop_token: Option<i32>,
+    /// Per-request sampling overrides; `None` falls back to the
+    /// engine's `ServingConfig`.
+    pub temperature: Option<f32>,
+    pub greedy: Option<bool>,
+    pub seed: Option<u64>,
 }
 
 impl GenRequest {
     pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> Self {
-        Self { prompt, max_new_tokens, teacher: None, stop_token: None }
+        Self {
+            prompt,
+            max_new_tokens,
+            teacher: None,
+            stop_token: None,
+            temperature: None,
+            greedy: None,
+            seed: None,
+        }
     }
 
     pub fn teacher_forced(prompt: Vec<i32>, teacher: Vec<i32>) -> Self {
         let n = teacher.len();
-        Self { prompt, max_new_tokens: n, teacher: Some(teacher), stop_token: None }
+        let mut r = Self::new(prompt, n);
+        r.teacher = Some(teacher);
+        r
     }
 }
 
-/// Completed generation.
+/// Completed generation (legacy blocking API).
 #[derive(Debug, Clone)]
 pub struct GenResult {
     pub id: SeqId,
@@ -54,6 +79,155 @@ impl GenResult {
     }
 }
 
+// ---------------------------------------------------------------------
+// Session API
+// ---------------------------------------------------------------------
+
+/// Why a session stopped producing tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens` (or the teacher stream / max_seq_len ran out).
+    Length,
+    /// Emitted the request's stop token.
+    Stop,
+    /// The client cancelled; KV blocks were freed immediately.
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Length => "length",
+            Self::Stop => "stop",
+            Self::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Token accounting reported on `Done`.
+#[derive(Debug, Clone, Default)]
+pub struct Usage {
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+}
+
+impl Usage {
+    pub fn total_tokens(&self) -> usize {
+        self.prompt_tokens + self.completion_tokens
+    }
+}
+
+/// One event on a session's stream.
+#[derive(Debug, Clone)]
+pub enum SessionEvent {
+    /// One generated (or teacher-forced) token, emitted as soon as the
+    /// engine step that produced it completes.
+    Token { token: i32, logprob: f64, index: usize },
+    /// Terminal: the sequence finished and its blocks were freed.
+    Done { usage: Usage, finish: FinishReason },
+    /// Terminal: the sequence failed; blocks were freed.
+    Error(String),
+}
+
+/// Client half of a session: consume events, request cancellation.
+///
+/// The handle is cheap to clone and safe to move across threads; the
+/// engine owns the producer side and closes the channel after the
+/// terminal event, so `recv` drains remaining events then yields `None`.
+#[derive(Clone)]
+pub struct SessionHandle {
+    pub id: SeqId,
+    events: Channel<SessionEvent>,
+    cancel: Arc<AtomicBool>,
+}
+
+/// Accumulated view of a session's stream (from `drain`/`collect`).
+#[derive(Debug, Clone, Default)]
+pub struct SessionResult {
+    /// Generated tokens only (the prompt is not echoed).
+    pub tokens: Vec<i32>,
+    pub logprobs: Vec<f64>,
+    pub usage: Option<Usage>,
+    pub finish: Option<FinishReason>,
+    pub error: Option<String>,
+}
+
+impl SessionHandle {
+    pub(crate) fn new(id: SeqId, events: Channel<SessionEvent>, cancel: Arc<AtomicBool>) -> Self {
+        Self { id, events, cancel }
+    }
+
+    /// Blocking receive; `None` once the stream is closed and drained.
+    pub fn recv(&self) -> Option<SessionEvent> {
+        self.events.recv()
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<SessionEvent> {
+        self.events.try_recv()
+    }
+
+    /// Ask the engine to stop this sequence. The step loop observes the
+    /// flag at the top of the next step and frees the KV blocks there.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Acquire)
+    }
+
+    /// Fold `events` into `out` until the stream would block.
+    fn fold(&self, out: &mut SessionResult, blocking: bool) {
+        loop {
+            let ev = if blocking { self.events.recv() } else { self.events.try_recv() };
+            let Some(ev) = ev else { break };
+            match ev {
+                SessionEvent::Token { token, logprob, .. } => {
+                    out.tokens.push(token);
+                    out.logprobs.push(logprob);
+                }
+                SessionEvent::Done { usage, finish } => {
+                    out.usage = Some(usage);
+                    out.finish = Some(finish);
+                    break;
+                }
+                SessionEvent::Error(e) => {
+                    out.error = Some(e);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Consume currently queued events without blocking.
+    pub fn drain(&self) -> SessionResult {
+        let mut out = SessionResult::default();
+        self.fold(&mut out, false);
+        out
+    }
+
+    /// Block until the terminal event (or channel close) and return the
+    /// accumulated result. Only safe when another thread (or subsequent
+    /// `Engine::step` calls on this thread) drives the engine.
+    pub fn collect(&self) -> SessionResult {
+        let mut out = SessionResult::default();
+        self.fold(&mut out, true);
+        out
+    }
+}
+
+/// Admission failure surfaced by `Engine::submit` (maps to HTTP 429/400).
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    #[error("pending queue full ({depth} queued); retry later")]
+    QueueFull { depth: usize },
+    #[error("request needs {need} tokens > max_seq_len {max}")]
+    TooLong { need: usize, max: usize },
+}
+
 /// Which decode pipeline serves the sequence.
 pub enum PolicyHolder {
     Fused(Box<dyn SelectionPolicy>),
@@ -74,8 +248,15 @@ pub struct Sequence {
     pub generated: usize,
     pub logprobs: Vec<f64>,
     pub done: bool,
+    pub finish: Option<FinishReason>,
     pub prefill_ms: f64,
     pub decode_ms: f64,
+    /// Session plumbing: `None` for the legacy blocking path.
+    pub emitter: Option<Channel<SessionEvent>>,
+    pub cancel: Arc<AtomicBool>,
+    /// Submit time (queue wait + prefill count toward TTFT).
+    pub queued_at: Instant,
+    pub last_token_at: Option<Instant>,
 }
 
 impl Sequence {
@@ -95,11 +276,21 @@ impl Sequence {
             )),
             _ => PolicyHolder::Fused(crate::policy::make_policy(cfg, n_layers * n_heads)),
         };
+        let temperature = req.temperature.unwrap_or(cfg.temperature);
+        let greedy = req.greedy.unwrap_or(cfg.greedy);
+        // A request-supplied seed must be reproducible verbatim across
+        // resubmissions, so it is NOT mixed with the (monotonically
+        // increasing) session id; only the engine-wide default is,
+        // to decorrelate concurrent sequences.
+        let sampler_seed = match req.seed {
+            Some(s) => s,
+            None => cfg.seed ^ (id << 1),
+        };
         Self {
             id,
             cache: SeqCache::new(cfg.n_feat),
             policy,
-            sampler: Sampler::new(cfg.seed ^ (id << 1), cfg.temperature, cfg.greedy),
+            sampler: Sampler::new(sampler_seed, temperature, greedy),
             tokens: req.prompt,
             prompt_len: 0, // set after prefill
             teacher: req.teacher,
@@ -108,8 +299,13 @@ impl Sequence {
             generated: 0,
             logprobs: Vec::new(),
             done: false,
+            finish: None,
             prefill_ms: 0.0,
             decode_ms: 0.0,
+            emitter: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+            queued_at: Instant::now(),
+            last_token_at: None,
         }
     }
 
@@ -118,6 +314,19 @@ impl Sequence {
     pub fn next_input(&self) -> Option<i32> {
         let pos = self.cache.len();
         self.tokens.get(pos).copied()
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Acquire)
+    }
+
+    pub fn usage(&self) -> Usage {
+        Usage {
+            prompt_tokens: self.prompt_len,
+            completion_tokens: self.generated,
+            prefill_ms: self.prefill_ms,
+            decode_ms: self.decode_ms,
+        }
     }
 
     pub fn result(&self) -> GenResult {
@@ -152,5 +361,53 @@ mod tests {
         let r = GenRequest::teacher_forced(vec![1, 2], vec![3, 4, 5]);
         assert_eq!(r.max_new_tokens, 3);
         assert!(r.teacher.is_some());
+    }
+
+    #[test]
+    fn handle_drain_accumulates_tokens_then_done() {
+        let ch: Channel<SessionEvent> = Channel::new();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let h = SessionHandle::new(7, ch.clone(), cancel);
+        ch.send(SessionEvent::Token { token: 65, logprob: -0.5, index: 0 });
+        ch.send(SessionEvent::Token { token: 66, logprob: -0.25, index: 1 });
+        ch.send(SessionEvent::Done {
+            usage: Usage { prompt_tokens: 3, completion_tokens: 2, prefill_ms: 1.0, decode_ms: 2.0 },
+            finish: FinishReason::Length,
+        });
+        let out = h.drain();
+        assert_eq!(out.tokens, vec![65, 66]);
+        assert_eq!(out.logprobs, vec![-0.5, -0.25]);
+        assert_eq!(out.finish, Some(FinishReason::Length));
+        assert_eq!(out.usage.unwrap().total_tokens(), 5);
+        assert!(out.error.is_none());
+    }
+
+    #[test]
+    fn handle_collect_stops_on_error() {
+        let ch: Channel<SessionEvent> = Channel::new();
+        let h = SessionHandle::new(1, ch.clone(), Arc::new(AtomicBool::new(false)));
+        ch.send(SessionEvent::Token { token: 1, logprob: -1.0, index: 0 });
+        ch.send(SessionEvent::Error("boom".into()));
+        ch.close();
+        let out = h.collect();
+        assert_eq!(out.tokens, vec![1]);
+        assert_eq!(out.error.as_deref(), Some("boom"));
+    }
+
+    #[test]
+    fn cancel_flag_is_shared() {
+        let ch: Channel<SessionEvent> = Channel::new();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let h = SessionHandle::new(1, ch, cancel.clone());
+        assert!(!h.is_cancelled());
+        h.cancel();
+        assert!(cancel.load(Ordering::Acquire));
+    }
+
+    #[test]
+    fn finish_reason_strings() {
+        assert_eq!(FinishReason::Length.as_str(), "length");
+        assert_eq!(FinishReason::Stop.as_str(), "stop");
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
     }
 }

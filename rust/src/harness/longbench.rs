@@ -35,13 +35,17 @@ fn eval_method(
             let prompt = tokenizer::encode_bytes(&inst.prompt);
             let mut req = GenRequest::new(prompt, inst.max_new_tokens);
             req.stop_token = Some(b' ' as i32);
-            let id = engine.add(req)?;
-            while !engine.active_ids().is_empty() {
+            // Session stream: drive the engine, then drain the handle
+            // (the terminal Done closes the channel, so this can't block).
+            let handle = engine.submit(req)?;
+            while !engine.idle() {
                 engine.step()?;
             }
-            let res = engine.remove(id).unwrap();
-            let gen_tokens = &res.tokens[res.tokens.len() - res.logprobs.len()..];
-            let pred = tokenizer::decode(gen_tokens);
+            let out = handle.collect();
+            if let Some(e) = out.error {
+                anyhow::bail!("longbench session failed: {e}");
+            }
+            let pred = tokenizer::decode(&out.tokens);
             total += spec.metric.score(pred.trim(), &inst.reference);
         }
         per_task.push(100.0 * total / instances as f64);

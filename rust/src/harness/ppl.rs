@@ -3,7 +3,7 @@
 
 use super::Ctx;
 use crate::config::PolicyKind;
-use crate::engine::GenRequest;
+use crate::engine::{GenRequest, SessionEvent};
 use crate::model::tokenizer;
 use anyhow::Result;
 use std::time::Instant;
@@ -46,30 +46,40 @@ pub fn ppl_curve(
     let toks = tokenizer::encode_bytes(&corpus[..eval_len]);
     let prompt: Vec<i32> = toks[..prefill.max(1)].to_vec();
     let teacher: Vec<i32> = toks[prefill.max(1)..].to_vec();
+    let prompt_len = prompt.len();
     let req = GenRequest::teacher_forced(prompt, teacher);
-    let id = engine.add(req)?;
+    // Session stream: the engine pushes per-token events; we step the
+    // engine ourselves and drain the handle between steps.
+    let handle = engine.submit(req)?;
+    // Admission + prefill happen inside this first (untimed) step, so
+    // `elapsed` stays a pure-decode clock like the pre-session code
+    // (which prefilled inside `add`, outside the timed loop).
+    engine.step()?;
     let mut points = Vec::new();
     let mut nll_sum = 0.0f64;
     let mut n_eval = 0usize;
     let mut elapsed = 0.0f64;
     let mut last_mark = Instant::now();
     let mut last_count = 0usize;
-    while !engine.active_ids().is_empty() {
-        let t0 = Instant::now();
-        engine.step()?;
-        elapsed += t0.elapsed().as_secs_f64();
-        let seq = engine.seq(id).unwrap();
-        let new = &seq.logprobs[n_eval..];
-        for lp in new {
-            nll_sum -= lp;
+    let mut finished = false;
+    loop {
+        while let Some(ev) = handle.try_recv() {
+            match ev {
+                SessionEvent::Token { logprob, .. } => {
+                    nll_sum -= logprob;
+                    n_eval += 1;
+                }
+                SessionEvent::Done { .. } => finished = true,
+                SessionEvent::Error(e) => anyhow::bail!("ppl session failed: {e}"),
+            }
         }
-        n_eval = seq.logprobs.len();
-        let t = seq.cache.len();
-        if n_eval > 0 && (n_eval - last_count >= every || seq.done) {
+        if n_eval > last_count && (n_eval - last_count >= every || finished) {
             let dt = last_mark.elapsed().as_secs_f64();
             let tp = (n_eval - last_count) as f64 / dt.max(1e-9);
             points.push(PplPoint {
-                t,
+                // Context length: prefill covers prompt_len - 1
+                // positions, each evaluated token appends one more.
+                t: prompt_len.saturating_sub(1) + n_eval,
                 ppl: (nll_sum / n_eval as f64).exp(),
                 elapsed_s: elapsed,
                 throughput: tp,
@@ -77,9 +87,15 @@ pub fn ppl_curve(
             last_mark = Instant::now();
             last_count = n_eval;
         }
+        if engine.idle() {
+            break;
+        }
+        let t0 = Instant::now();
+        engine.step()?;
+        elapsed += t0.elapsed().as_secs_f64();
     }
-    let res = engine.remove(id).unwrap();
-    let final_ppl = res.ppl();
+    let final_ppl =
+        if n_eval == 0 { f64::NAN } else { (nll_sum / n_eval as f64).exp() };
     Ok(PplCurve {
         policy: format!("{}{}", policy.name(), fmt_overrides(overrides)),
         points,

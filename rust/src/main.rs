@@ -3,17 +3,20 @@
 
 use anyhow::{anyhow, Result};
 use radar_serve::config::PolicyKind;
-use radar_serve::engine::GenRequest;
+use radar_serve::engine::{GenRequest, SessionEvent};
 use radar_serve::harness::{flagrate, longbench, ppl, theorem2, Ctx};
 use radar_serve::model::tokenizer;
 use radar_serve::util::cli::Args;
 use radar_serve::workload::load_corpus;
+use std::io::Write;
 
 const USAGE: &str = "radar-serve <command> [--flags]
 
 serving:
-  serve       --model sm --addr 127.0.0.1:8080 --policy radar [--set k=v]
+  serve       --model sm --addr 127.0.0.1:8080 --policy radar [--seed N] [--set k=v]
   generate    --model sm --prompt '...' --max-new 64 --policy radar
+              [--stream]  print tokens as they decode (session stream)
+              [--seed N]  reproducible sampling
 
 experiments (paper artifacts):
   fig2        PPL + time curves: vanilla vs streaming vs radar
@@ -64,15 +67,20 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn serving_overrides(args: &Args) -> Vec<(String, String)> {
-    // --set k=v,k2=v2
-    args.get("set")
+    // --set k=v,k2=v2 plus first-class flags (--seed N).
+    let mut ov: Vec<(String, String)> = args
+        .get("set")
         .map(|s| {
             s.split(',')
                 .filter_map(|kv| kv.split_once('='))
                 .map(|(k, v)| (k.to_string(), v.to_string()))
                 .collect()
         })
-        .unwrap_or_default()
+        .unwrap_or_default();
+    if let Some(seed) = args.get("seed") {
+        ov.push(("seed".to_string(), seed.to_string()));
+    }
+    ov
 }
 
 fn serve(args: &Args, root: &str) -> Result<()> {
@@ -92,19 +100,47 @@ fn generate(args: &Args, root: &str) -> Result<()> {
     let ov_ref: Vec<(&str, &str)> = ov.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
     let mut engine = ctx.engine(policy, &ov_ref)?;
     let prompt = args.get("prompt").ok_or_else(|| anyhow!("--prompt required"))?;
+    let stream = args.bool_or("stream", false);
     let req = GenRequest::new(tokenizer::encode(prompt), args.usize_or("max-new", 64));
-    let id = engine.add(req)?;
-    let results = engine.run_to_completion()?;
-    let res = results.into_iter().find(|r| r.id == id).unwrap();
-    let text = tokenizer::decode(&res.tokens);
-    println!("{text}");
-    eprintln!(
-        "[{} tokens, prefill {:.1} ms, decode {:.1} ms, {:.1} tok/s]",
-        res.logprobs.len(),
-        res.prefill_ms,
-        res.decode_ms,
-        res.logprobs.len() as f64 / (res.decode_ms / 1e3).max(1e-9)
-    );
+    let handle = engine.submit(req)?;
+    // Single-threaded session consumption: step the engine ourselves
+    // and drain the handle between steps.
+    if stream {
+        print!("{prompt}");
+        std::io::stdout().flush()?;
+    }
+    let mut generated: Vec<i32> = Vec::new();
+    let mut usage = None;
+    while !engine.idle() {
+        engine.step()?;
+        while let Some(ev) = handle.try_recv() {
+            match ev {
+                SessionEvent::Token { token, .. } => {
+                    if stream {
+                        print!("{}", tokenizer::decode(&[token]));
+                        std::io::stdout().flush()?;
+                    }
+                    generated.push(token);
+                }
+                SessionEvent::Done { usage: u, .. } => usage = Some(u),
+                SessionEvent::Error(e) => return Err(anyhow!("generation failed: {e}")),
+            }
+        }
+    }
+    if stream {
+        println!();
+    } else {
+        println!("{prompt}{}", tokenizer::decode(&generated));
+    }
+    if let Some(u) = usage {
+        eprintln!(
+            "[{} tokens, prefill {:.1} ms, decode {:.1} ms, {:.1} tok/s]",
+            u.completion_tokens,
+            u.prefill_ms,
+            u.decode_ms,
+            u.completion_tokens as f64 / (u.decode_ms / 1e3).max(1e-9)
+        );
+    }
     Ok(())
 }
 

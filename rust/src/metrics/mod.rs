@@ -14,6 +14,7 @@ pub struct Metrics {
 #[derive(Default)]
 struct Inner {
     counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
     latencies_us: BTreeMap<String, Series>,
 }
 
@@ -29,6 +30,16 @@ impl Metrics {
     pub fn add(&self, name: &str, delta: u64) {
         let mut g = self.inner.lock().unwrap();
         *g.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set a point-in-time value (queue depth, blocks in use, ...).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().gauges.get(name).copied().unwrap_or(0.0)
     }
 
     pub fn observe_us(&self, name: &str, us: f64) {
@@ -75,6 +86,9 @@ impl Metrics {
         for (k, v) in &g.counters {
             out.push_str(&format!("counter {k} {v}\n"));
         }
+        for (k, v) in &g.gauges {
+            out.push_str(&format!("gauge {k} {v}\n"));
+        }
         for (k, s) in &g.latencies_us {
             out.push_str(&format!(
                 "latency_us {k} count {} mean {:.1} p50 {:.1} p99 {:.1}\n",
@@ -90,6 +104,7 @@ impl Metrics {
     pub fn reset(&self) {
         let mut g = self.inner.lock().unwrap();
         g.counters.clear();
+        g.gauges.clear();
         g.latencies_us.clear();
     }
 }
@@ -130,8 +145,19 @@ mod tests {
         let m = Metrics::new();
         m.inc("a");
         m.observe_us("b", 1.0);
+        m.set_gauge("c", 2.5);
         let r = m.render();
         assert!(r.contains("counter a 1"));
         assert!(r.contains("latency_us b"));
+        assert!(r.contains("gauge c 2.5"));
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        m.set_gauge("depth", 3.0);
+        m.set_gauge("depth", 1.0);
+        assert_eq!(m.gauge("depth"), 1.0);
+        assert_eq!(m.gauge("missing"), 0.0);
     }
 }

@@ -16,19 +16,29 @@
 
 use crate::kvcache::{BlockPool, SeqCache};
 
-/// Integer square root (floor).
+/// Integer square root (floor), exact for every `usize`.
+///
+/// Pure-integer Newton iteration seeded at `n/2 + 1` (always an
+/// over-approximation of sqrt(n) for n >= 2, so the sequence decreases
+/// monotonically onto the floor and cannot overflow). The previous
+/// float-seeded loop-correction relied on `f64::sqrt` rounding, which
+/// loses integer precision above 2^53.
 pub fn isqrt(n: usize) -> usize {
-    if n == 0 {
-        return 0;
+    if n < 2 {
+        return n;
     }
-    let mut x = (n as f64).sqrt() as usize;
-    while (x + 1) * (x + 1) <= n {
-        x += 1;
+    let mut x = (n >> 1) + 1;
+    loop {
+        let y = (x + n / x) / 2;
+        if y >= x {
+            debug_assert!(
+                x * x <= n && (x + 1).checked_mul(x + 1).map_or(true, |s| s > n),
+                "isqrt({n}) = {x} violates the floor invariant"
+            );
+            return x;
+        }
+        x = y;
     }
-    while x * x > n {
-        x -= 1;
-    }
-    x
 }
 
 /// Per-sequence segment index for all (layer, head) planes.
@@ -237,6 +247,45 @@ mod tests {
             let r = isqrt(t);
             assert!(r * r <= t && (r + 1) * (r + 1) > t, "isqrt({t}) = {r}");
         }
+    }
+
+    /// Overflow-safe floor-sqrt invariant: r^2 <= n < (r+1)^2.
+    fn isqrt_invariant(n: usize) -> Result<(), String> {
+        let r = isqrt(n);
+        if r.checked_mul(r).map_or(true, |s| s > n) {
+            return Err(format!("isqrt({n}) = {r}: r^2 > n (or overflows)"));
+        }
+        if (r + 1).checked_mul(r + 1).map_or(false, |s| s <= n) {
+            return Err(format!("isqrt({n}) = {r}: (r+1)^2 <= n"));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn isqrt_property_sweep() {
+        use crate::util::minitest::check;
+        // Boundary values where the old float-seeded version could go
+        // wrong: perfect squares and their neighbors across the whole
+        // width of usize, including above 2^53 where f64 is lossy.
+        for b in 0..=(usize::BITS / 2 - 1) {
+            let s = 1usize << b;
+            for sq in [s * s, s * s + 1, (s * s).wrapping_sub(1)] {
+                isqrt_invariant(sq).unwrap();
+            }
+        }
+        for n in [usize::MAX, usize::MAX - 1, (1 << 53) + 1, (1 << 60) + 3] {
+            isqrt_invariant(n).unwrap();
+        }
+        // Randomized sweep over the full usize range, with shrinking.
+        check(
+            17,
+            500,
+            |r| r.next_u64() as usize,
+            |&n| isqrt_invariant(n),
+        );
+        // And over small values, where off-by-ones would bite the
+        // restructure schedule.
+        check(19, 500, |r| r.below(4096) as usize, |&n| isqrt_invariant(n));
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! Typed `/v1` API layer: request validation, structured errors, and
+//! OpenAI-style completion / SSE chunk serialization. This replaces
+//! hand-rolled JSON poking in the HTTP handlers — everything the wire
+//! protocol says lives here, everything about sockets lives in `mod.rs`.
+
+use crate::config::ServingConfig;
+use crate::engine::{GenRequest, SubmitError, Usage};
+use crate::model::tokenizer;
+use crate::util::json::Json;
+
+/// Bodies larger than this are rejected with 413 instead of truncated.
+pub const MAX_BODY_BYTES: usize = 16 << 20;
+
+/// Hard ceiling on `max_tokens` regardless of engine config.
+pub const MAX_TOKENS_CAP: usize = 65_536;
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// A structured API error: HTTP status + machine-readable type +
+/// human-readable message, serialized as
+/// `{"error":{"type":...,"message":...}}`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ApiError {
+    pub status: u16,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn invalid_request(message: impl Into<String>) -> Self {
+        Self { status: 400, code: "invalid_request_error", message: message.into() }
+    }
+
+    pub fn not_found(path: &str) -> Self {
+        Self { status: 404, code: "not_found_error", message: format!("no route for {path}") }
+    }
+
+    pub fn method_not_allowed(method: &str) -> Self {
+        Self {
+            status: 405,
+            code: "method_not_allowed",
+            message: format!("method '{method}' not allowed"),
+        }
+    }
+
+    pub fn payload_too_large(len: usize) -> Self {
+        Self {
+            status: 413,
+            code: "payload_too_large",
+            message: format!("body of {len} bytes exceeds the {MAX_BODY_BYTES} byte limit"),
+        }
+    }
+
+    pub fn overloaded(message: impl Into<String>) -> Self {
+        Self { status: 429, code: "overloaded_error", message: message.into() }
+    }
+
+    pub fn internal(message: impl Into<String>) -> Self {
+        Self { status: 500, code: "internal_error", message: message.into() }
+    }
+
+    pub fn unavailable(message: impl Into<String>) -> Self {
+        Self { status: 503, code: "service_unavailable", message: message.into() }
+    }
+
+    pub fn body(&self) -> String {
+        Json::obj()
+            .with(
+                "error",
+                Json::obj()
+                    .with("type", self.code)
+                    .with("message", self.message.as_str()),
+            )
+            .to_string()
+    }
+}
+
+impl From<SubmitError> for ApiError {
+    fn from(e: SubmitError) -> Self {
+        match e {
+            SubmitError::QueueFull { .. } => Self::overloaded(e.to_string()),
+            SubmitError::TooLong { .. } => Self::invalid_request(e.to_string()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------
+
+/// A validated `POST /v1/completions` body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompletionRequest {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: Option<f32>,
+    pub greedy: Option<bool>,
+    pub seed: Option<u64>,
+    /// Stop at the first byte of this string (byte-level tokenizer).
+    pub stop: Option<i32>,
+    pub stream: bool,
+}
+
+impl CompletionRequest {
+    /// Parse + validate a JSON body. Unknown fields are ignored
+    /// (OpenAI-compatible); wrong types and out-of-range values are
+    /// structured 400s.
+    pub fn from_json(j: &Json) -> Result<Self, ApiError> {
+        if j.get("prompt").is_none() {
+            return Err(ApiError::invalid_request("missing required field 'prompt'"));
+        }
+        let prompt = j
+            .get("prompt")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::invalid_request("'prompt' must be a string"))?
+            .to_string();
+        if prompt.is_empty() {
+            return Err(ApiError::invalid_request("'prompt' must be non-empty"));
+        }
+        let max_tokens = match j.get("max_tokens") {
+            None => 64,
+            Some(v) => {
+                let n = v.as_f64().ok_or_else(|| {
+                    ApiError::invalid_request("'max_tokens' must be a number")
+                })?;
+                if n.fract() != 0.0 || n < 1.0 {
+                    return Err(ApiError::invalid_request(
+                        "'max_tokens' must be an integer >= 1",
+                    ));
+                }
+                n as usize
+            }
+        };
+        if max_tokens > MAX_TOKENS_CAP {
+            return Err(ApiError::invalid_request(format!(
+                "'max_tokens' {max_tokens} exceeds cap {MAX_TOKENS_CAP}"
+            )));
+        }
+        let temperature = match j.get("temperature") {
+            None => None,
+            Some(v) => {
+                let t = v.as_f64().ok_or_else(|| {
+                    ApiError::invalid_request("'temperature' must be a number")
+                })?;
+                if !(t > 0.0 && t <= 100.0) {
+                    return Err(ApiError::invalid_request(
+                        "'temperature' must be in (0, 100]",
+                    ));
+                }
+                Some(t as f32)
+            }
+        };
+        let greedy = match j.get("greedy") {
+            None => None,
+            Some(v) => Some(v.as_bool().ok_or_else(|| {
+                ApiError::invalid_request("'greedy' must be a boolean")
+            })?),
+        };
+        let seed = match j.get("seed") {
+            None => None,
+            Some(v) => {
+                let s = v.as_f64().ok_or_else(|| {
+                    ApiError::invalid_request("'seed' must be a number")
+                })?;
+                if s.fract() != 0.0 || s < 0.0 {
+                    return Err(ApiError::invalid_request(
+                        "'seed' must be a non-negative integer",
+                    ));
+                }
+                Some(s as u64)
+            }
+        };
+        let stop = match j.get("stop") {
+            None => None,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    ApiError::invalid_request("'stop' must be a string")
+                })?;
+                let b = s.as_bytes().first().ok_or_else(|| {
+                    ApiError::invalid_request("'stop' must be non-empty")
+                })?;
+                Some(*b as i32)
+            }
+        };
+        let stream = match j.get("stream") {
+            None => false,
+            Some(v) => v.as_bool().ok_or_else(|| {
+                ApiError::invalid_request("'stream' must be a boolean")
+            })?,
+        };
+        Ok(Self { prompt, max_tokens, temperature, greedy, seed, stop, stream })
+    }
+
+    /// Lower into an engine request, checking engine-level limits.
+    pub fn to_gen_request(&self, cfg: &ServingConfig) -> Result<GenRequest, ApiError> {
+        let prompt = tokenizer::encode(&self.prompt);
+        let need = prompt.len() + self.max_tokens;
+        if need > cfg.max_seq_len {
+            return Err(ApiError::invalid_request(format!(
+                "prompt ({}) + max_tokens ({}) = {need} exceeds max_seq_len {}",
+                prompt.len(),
+                self.max_tokens,
+                cfg.max_seq_len
+            )));
+        }
+        let mut req = GenRequest::new(prompt, self.max_tokens);
+        req.temperature = self.temperature;
+        req.greedy = self.greedy;
+        req.seed = self.seed;
+        req.stop_token = self.stop;
+        Ok(req)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------
+
+fn usage_json(u: &Usage) -> Json {
+    Json::obj()
+        .with("prompt_tokens", u.prompt_tokens)
+        .with("completion_tokens", u.completion_tokens)
+        .with("total_tokens", u.total_tokens())
+        .with("prefill_ms", u.prefill_ms)
+        .with("decode_ms", u.decode_ms)
+}
+
+/// Non-streaming `text_completion` response body.
+pub fn completion_json(
+    id: &str,
+    model: &str,
+    created: u64,
+    text: &str,
+    finish: &str,
+    usage: &Usage,
+) -> Json {
+    Json::obj()
+        .with("id", id)
+        .with("object", "text_completion")
+        .with("created", created as i64)
+        .with("model", model)
+        .with(
+            "choices",
+            vec![Json::obj()
+                .with("index", 0usize)
+                .with("text", text)
+                .with("finish_reason", finish)],
+        )
+        .with("usage", usage_json(usage))
+}
+
+/// One SSE chunk (`object: "text_completion.chunk"`). `finish` is
+/// `None` for token chunks and `Some(reason)` on the terminal chunk,
+/// which also carries usage when available.
+pub fn chunk_json(
+    id: &str,
+    model: &str,
+    created: u64,
+    text: &str,
+    finish: Option<&str>,
+    usage: Option<&Usage>,
+) -> Json {
+    let mut choice = Json::obj().with("index", 0usize).with("text", text);
+    choice = match finish {
+        Some(f) => choice.with("finish_reason", f),
+        None => choice.with("finish_reason", Json::Null),
+    };
+    let mut j = Json::obj()
+        .with("id", id)
+        .with("object", "text_completion.chunk")
+        .with("created", created as i64)
+        .with("model", model)
+        .with("choices", vec![choice]);
+    if let Some(u) = usage {
+        j = j.with("usage", usage_json(u));
+    }
+    j
+}
+
+/// Frame a JSON payload as one SSE event.
+pub fn sse_event(j: &Json) -> String {
+    format!("data: {j}\n\n")
+}
+
+/// Stream terminator, after the final chunk.
+pub const SSE_DONE: &str = "data: [DONE]\n\n";
+
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(body: &str) -> Result<CompletionRequest, ApiError> {
+        CompletionRequest::from_json(&Json::parse(body).unwrap())
+    }
+
+    #[test]
+    fn minimal_request_gets_defaults() {
+        let r = parse(r#"{"prompt":"hello"}"#).unwrap();
+        assert_eq!(r.prompt, "hello");
+        assert_eq!(r.max_tokens, 64);
+        assert!(!r.stream);
+        assert_eq!(r.temperature, None);
+        assert_eq!(r.seed, None);
+    }
+
+    #[test]
+    fn full_request_roundtrip() {
+        let r = parse(
+            r#"{"prompt":"a","max_tokens":8,"temperature":0.5,
+                "greedy":false,"seed":42,"stop":" ","stream":true}"#,
+        )
+        .unwrap();
+        assert_eq!(r.max_tokens, 8);
+        assert_eq!(r.seed, Some(42));
+        assert_eq!(r.stop, Some(b' ' as i32));
+        assert!(r.stream);
+        assert_eq!(r.greedy, Some(false));
+        assert!((r.temperature.unwrap() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn validation_rejects_bad_fields() {
+        assert_eq!(parse(r#"{}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":""}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":7}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":"a","max_tokens":0}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":"a","max_tokens":1.5}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":"a","temperature":-1}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":"a","stream":"yes"}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":"a","seed":-3}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":"a","stop":""}"#).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn unknown_fields_ignored() {
+        assert!(parse(r#"{"prompt":"a","model":"whatever","n":1}"#).is_ok());
+    }
+
+    #[test]
+    fn gen_request_respects_max_seq_len() {
+        let cfg = ServingConfig::default();
+        let r = parse(r#"{"prompt":"ab","max_tokens":16}"#).unwrap();
+        let g = r.to_gen_request(&cfg).unwrap();
+        assert_eq!(g.prompt.len(), 2);
+        assert_eq!(g.max_new_tokens, 16);
+        let mut small = cfg.clone();
+        small.max_seq_len = 10;
+        assert_eq!(r.to_gen_request(&small).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn error_body_shape() {
+        let e = ApiError::overloaded("queue full");
+        let j = Json::parse(&e.body()).unwrap();
+        assert_eq!(j.path("error.type").unwrap().as_str(), Some("overloaded_error"));
+        assert_eq!(j.path("error.message").unwrap().as_str(), Some("queue full"));
+    }
+
+    #[test]
+    fn submit_error_maps_to_http_status() {
+        let e: ApiError = SubmitError::QueueFull { depth: 4 }.into();
+        assert_eq!(e.status, 429);
+        let e: ApiError = SubmitError::TooLong { need: 10, max: 5 }.into();
+        assert_eq!(e.status, 400);
+    }
+
+    #[test]
+    fn completion_and_chunk_shapes() {
+        let u = Usage { prompt_tokens: 3, completion_tokens: 2, prefill_ms: 1.0, decode_ms: 2.0 };
+        let c = completion_json("cmpl-1", "sm", 123, "hi", "length", &u);
+        let j = Json::parse(&c.to_string()).unwrap();
+        assert_eq!(j.get("object").unwrap().as_str(), Some("text_completion"));
+        assert_eq!(
+            j.get("choices").unwrap().as_arr().unwrap()[0].get("text").unwrap().as_str(),
+            Some("hi")
+        );
+        assert_eq!(j.path("usage.total_tokens").unwrap().as_usize(), Some(5));
+
+        let mid = chunk_json("cmpl-1", "sm", 123, "h", None, None);
+        let j = Json::parse(&mid.to_string()).unwrap();
+        assert_eq!(j.get("object").unwrap().as_str(), Some("text_completion.chunk"));
+        assert_eq!(
+            j.get("choices").unwrap().as_arr().unwrap()[0].get("finish_reason").unwrap(),
+            &Json::Null
+        );
+
+        let fin = chunk_json("cmpl-1", "sm", 123, "", Some("stop"), Some(&u));
+        let j = Json::parse(&fin.to_string()).unwrap();
+        assert_eq!(
+            j.get("choices").unwrap().as_arr().unwrap()[0]
+                .get("finish_reason")
+                .unwrap()
+                .as_str(),
+            Some("stop")
+        );
+        assert_eq!(j.path("usage.prompt_tokens").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn sse_framing() {
+        let j = Json::obj().with("a", 1usize);
+        assert_eq!(sse_event(&j), "data: {\"a\":1}\n\n");
+        assert!(SSE_DONE.starts_with("data: [DONE]"));
+    }
+}

@@ -1,81 +1,170 @@
-//! Minimal HTTP/1.1 serving front-end over std::net + the in-tree
-//! threadpool (tokio is unavailable offline).
+//! HTTP/1.1 serving front-end over std::net + the in-tree threadpool
+//! (tokio is unavailable offline).
 //!
-//! Endpoints:
-//!   GET  /health            -> {"status":"ok", ...}
-//!   GET  /metrics           -> text exposition
-//!   POST /generate          -> {"prompt": str, "max_new_tokens": n,
-//!                               "temperature"?: f, "greedy"?: b}
-//!                           <- {"text": str, "tokens": n, latency fields}
+//! Endpoints (see README "Serving API"):
+//!   GET  /health            -> {"status":"ok","model":...}
+//!   GET  /metrics           -> text exposition (counters/gauges/latencies)
+//!   POST /v1/completions    -> OpenAI-style completions; `"stream":true`
+//!                              emits SSE chunks token-by-token
+//!   POST /generate          -> legacy one-shot JSON (kept for old clients)
 //!
-//! Requests are funneled through a channel to the single engine thread
-//! (the engine owns the PJRT client and block pool); responses return
-//! through per-request channels — the standard leader/worker shape.
+//! Connections are HTTP/1.1 keep-alive: one socket serves many requests
+//! (SSE responses are close-delimited, so streams end the connection).
+//! Requests funnel through a channel to the single engine thread (the
+//! engine owns the PJRT client and block pool); each accepted request
+//! becomes an engine *session* whose `SessionHandle` streams tokens
+//! back to the connection thread. Dropped connections cancel their
+//! session, which frees the sequence's KV blocks on the next step.
 
-use crate::engine::{Engine, GenRequest};
-use crate::metrics::Metrics;
+pub mod api;
+
+use crate::engine::{Engine, GenRequest, SessionEvent, SessionHandle};
 use crate::model::tokenizer;
 use crate::util::json::Json;
 use crate::util::threadpool::{Channel, ThreadPool};
 use anyhow::Result;
+use api::ApiError;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+#[derive(Debug)]
 pub struct HttpRequest {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    /// Client asked to reuse the socket (HTTP/1.1 default).
+    pub keep_alive: bool,
 }
 
-/// Parse one HTTP/1.1 request from the stream.
-pub fn parse_request(stream: &mut impl Read) -> Result<HttpRequest> {
-    let mut reader = BufReader::new(stream);
+const KNOWN_METHODS: &[&str] = &["GET", "POST", "HEAD", "PUT", "DELETE", "OPTIONS", "PATCH"];
+
+/// Parse one HTTP/1.1 request from a buffered stream.
+///
+/// `Ok(None)` is a clean end-of-stream (client closed between
+/// requests). Errors carry the HTTP status the caller should answer
+/// with: 405 for methods outside the HTTP verb set, 413 for bodies
+/// over `api::MAX_BODY_BYTES` (never silently truncated), 400 for
+/// everything malformed.
+pub fn parse_request(reader: &mut impl BufRead) -> Result<Option<HttpRequest>, ApiError> {
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    match reader.read_line(&mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        // Idle keep-alive socket hit the read timeout before sending a
+        // request line: close it quietly so it stops pinning a worker.
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            return Ok(None)
+        }
+        Err(e) => return Err(ApiError::invalid_request(format!("read error: {e}"))),
+    }
+    if line.trim().is_empty() {
+        return Ok(None);
+    }
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("/").to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    if !KNOWN_METHODS.contains(&method.as_str()) {
+        return Err(ApiError::method_not_allowed(&method));
+    }
+    let mut keep_alive = version != "HTTP/1.0";
     let mut content_length = 0usize;
     loop {
         let mut h = String::new();
-        reader.read_line(&mut h)?;
+        match reader.read_line(&mut h) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e) => return Err(ApiError::invalid_request(format!("read error: {e}"))),
+        }
         let h = h.trim();
         if h.is_empty() {
             break;
         }
-        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
+        let Some((name, value)) = h.split_once(':') else { continue };
+        let value = value.trim();
+        match name.to_ascii_lowercase().as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse()
+                    .map_err(|_| ApiError::invalid_request("bad content-length"))?;
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v == "close" {
+                    keep_alive = false;
+                } else if v == "keep-alive" {
+                    keep_alive = true;
+                }
+            }
+            _ => {}
         }
     }
-    let mut body = vec![0u8; content_length.min(16 << 20)];
-    if content_length > 0 {
-        reader.read_exact(&mut body)?;
+    if content_length > api::MAX_BODY_BYTES {
+        return Err(ApiError::payload_too_large(content_length));
     }
-    Ok(HttpRequest { method, path, body })
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader
+            .read_exact(&mut body)
+            .map_err(|e| ApiError::invalid_request(format!("short body: {e}")))?;
+    }
+    Ok(Some(HttpRequest { method, path, body, keep_alive }))
 }
 
-pub fn write_response(stream: &mut impl Write, status: u16, content_type: &str, body: &[u8]) -> Result<()> {
-    let reason = match status {
+fn status_reason(status: u16) -> &'static str {
+    match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
-    };
+    }
+}
+
+pub fn write_response(
+    stream: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     write!(
         stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
+        status_reason(status),
         body.len()
     )?;
     stream.write_all(body)?;
+    stream.flush()?;
     Ok(())
 }
 
-/// A pending generation: request + response channel.
-struct Pending {
-    req: GenRequest,
-    reply: Channel<Result<Json, String>>,
+fn write_error(stream: &mut impl Write, e: &ApiError, keep_alive: bool) -> Result<()> {
+    write_response(stream, e.status, "application/json", e.body().as_bytes(), keep_alive)
+}
+
+/// What connection threads need; the engine itself stays on the
+/// serving thread.
+struct ServerCtx {
+    queue: Channel<EngineMsg>,
+    metrics: Arc<crate::metrics::Metrics>,
+    cfg: crate::config::ServingConfig,
+    model: String,
+}
+
+enum EngineMsg {
+    Submit { req: GenRequest, reply: Channel<Result<SessionHandle, ApiError>> },
 }
 
 /// Serve until `stop` flips. Engine runs on the caller's thread;
@@ -84,19 +173,21 @@ pub fn serve(mut engine: Engine, addr: &str, stop: Arc<AtomicBool>) -> Result<()
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     crate::info!("serving on http://{addr}");
-    let queue: Channel<Pending> = Channel::new();
-    let metrics = engine.metrics.clone();
-    let pool = ThreadPool::new(4, "http");
-    let q2 = queue.clone();
-    let m2 = metrics.clone();
+    let ctx = Arc::new(ServerCtx {
+        queue: Channel::new(),
+        metrics: engine.metrics.clone(),
+        cfg: engine.cfg.clone(),
+        model: engine.rt.config.name.clone(),
+    });
+    let pool = ThreadPool::new(8, "http");
+    let ctx2 = ctx.clone();
     let stop2 = stop.clone();
     let accept_thread = std::thread::spawn(move || {
         while !stop2.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _)) => {
-                    let q = q2.clone();
-                    let m = m2.clone();
-                    pool.execute(move || handle_conn(stream, q, m));
+                    let c = ctx2.clone();
+                    pool.execute(move || handle_conn(stream, c));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(5));
@@ -107,144 +198,439 @@ pub fn serve(mut engine: Engine, addr: &str, stop: Arc<AtomicBool>) -> Result<()
                 }
             }
         }
-        q2.close();
+        ctx2.queue.close();
     });
 
-    // Engine loop: drain admissions, then step active sequences.
-    let mut inflight: Vec<(crate::engine::SeqId, Channel<Result<Json, String>>)> = Vec::new();
+    // Engine loop: admit new sessions, then step. Token delivery and
+    // completion flow through each session's handle, so the loop has no
+    // per-request bookkeeping.
     while !stop.load(Ordering::Relaxed) {
-        // Admit pending requests (non-blocking when busy, blocking briefly when idle).
-        let next = if inflight.is_empty() {
-            queue.recv_timeout(std::time::Duration::from_millis(50))
-        } else {
-            queue.try_recv()
-        };
-        if let Some(p) = next {
-            match engine.add(p.req) {
-                Ok(id) => inflight.push((id, p.reply)),
-                Err(e) => {
-                    p.reply.send(Err(format!("admission failed: {e}")));
-                }
+        // Drain ALL queued admissions (bounded by max_pending via
+        // submit's rejection), then advance decode by one step.
+        if engine.idle() {
+            if let Some(msg) = ctx.queue.recv_timeout(std::time::Duration::from_millis(50)) {
+                answer_submit(&mut engine, msg);
             }
         }
-        if inflight.is_empty() {
+        while let Some(msg) = ctx.queue.try_recv() {
+            answer_submit(&mut engine, msg);
+        }
+        if engine.idle() {
             continue;
         }
         if let Err(e) = engine.step() {
-            for (_, reply) in inflight.drain(..) {
-                reply.send(Err(format!("engine error: {e}")));
-            }
-            continue;
-        }
-        // Complete finished sequences.
-        let done: Vec<_> = engine.finished();
-        for id in done {
-            if let Some(pos) = inflight.iter().position(|(i, _)| *i == id) {
-                let (_, reply) = inflight.remove(pos);
-                let res = engine.remove(id).unwrap();
-                let text = tokenizer::decode(&res.tokens[res.tokens.len() - res.logprobs.len()..]);
-                let j = Json::obj()
-                    .with("text", text)
-                    .with("tokens", res.logprobs.len())
-                    .with("prefill_ms", res.prefill_ms)
-                    .with("decode_ms", res.decode_ms);
-                reply.send(Ok(j));
-            } else {
-                engine.remove(id);
-            }
+            // Unrecoverable (artifact/dispatch failure): fail the
+            // in-flight sessions but keep serving new requests.
+            engine.fail_all(&format!("engine error: {e}"));
         }
     }
-    queue.close();
+    ctx.queue.close();
+    // Answer any submit that raced with shutdown so no connection
+    // thread is left blocking on its reply channel.
+    while let Some(EngineMsg::Submit { reply, .. }) = ctx.queue.try_recv() {
+        reply.send(Err(ApiError::unavailable("server shutting down")));
+    }
+    engine.fail_all("server shutting down");
     let _ = accept_thread.join();
     Ok(())
 }
 
-fn handle_conn(mut stream: TcpStream, queue: Channel<Pending>, metrics: Arc<Metrics>) {
-    let req = match parse_request(&mut stream) {
-        Ok(r) => r,
-        Err(_) => return,
-    };
-    metrics.inc("http_requests");
+/// How long a keep-alive socket may sit idle between requests before
+/// its worker thread reclaims itself (the pool is small and fixed).
+const KEEP_ALIVE_IDLE: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// One connection: serve requests until the client closes, asks to,
+/// or idles past `KEEP_ALIVE_IDLE`.
+fn handle_conn(stream: TcpStream, ctx: Arc<ServerCtx>) {
+    let mut writer = stream;
+    let _ = writer.set_read_timeout(Some(KEEP_ALIVE_IDLE));
+    let Ok(read_half) = writer.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    loop {
+        let req = match parse_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => break,
+            Err(e) => {
+                // Framing is unknown after a parse error: answer, close.
+                let _ = write_error(&mut writer, &e, false);
+                break;
+            }
+        };
+        ctx.metrics.inc("http_requests");
+        let client_keep = req.keep_alive;
+        let server_keep = handle_request(&mut writer, req, &ctx).unwrap_or(false);
+        if !(client_keep && server_keep) {
+            break;
+        }
+    }
+}
+
+/// Route one request. Returns Ok(true) when the socket can be reused.
+fn handle_request(
+    stream: &mut TcpStream,
+    req: HttpRequest,
+    ctx: &ServerCtx,
+) -> Result<bool> {
+    const ROUTES: &[(&str, &str)] = &[
+        ("GET", "/health"),
+        ("GET", "/metrics"),
+        ("POST", "/v1/completions"),
+        ("POST", "/generate"),
+    ];
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => {
-            let body = Json::obj().with("status", "ok").to_string();
-            let _ = write_response(&mut stream, 200, "application/json", body.as_bytes());
+            let body = Json::obj()
+                .with("status", "ok")
+                .with("model", ctx.model.as_str())
+                .to_string();
+            write_response(stream, 200, "application/json", body.as_bytes(), true)?;
+            Ok(true)
         }
         ("GET", "/metrics") => {
-            let body = metrics.render();
-            let _ = write_response(&mut stream, 200, "text/plain", body.as_bytes());
+            let body = ctx.metrics.render();
+            write_response(stream, 200, "text/plain", body.as_bytes(), true)?;
+            Ok(true)
         }
-        ("POST", "/generate") => {
-            let parsed = std::str::from_utf8(&req.body)
-                .ok()
-                .and_then(|s| Json::parse(s).ok());
-            let Some(j) = parsed else {
-                let _ = write_response(&mut stream, 400, "application/json",
-                    br#"{"error":"invalid json"}"#);
-                return;
-            };
-            let Some(prompt) = j.get("prompt").and_then(Json::as_str) else {
-                let _ = write_response(&mut stream, 400, "application/json",
-                    br#"{"error":"missing prompt"}"#);
-                return;
-            };
-            let max_new = j.get("max_new_tokens").and_then(Json::as_usize).unwrap_or(64);
-            let gen = GenRequest::new(tokenizer::encode(prompt), max_new);
-            let reply: Channel<Result<Json, String>> = Channel::new();
-            queue.send(Pending { req: gen, reply: reply.clone() });
-            match reply.recv() {
-                Some(Ok(body)) => {
-                    let _ = write_response(&mut stream, 200, "application/json",
-                        body.to_string().as_bytes());
-                }
-                Some(Err(e)) => {
-                    let body = Json::obj().with("error", e).to_string();
-                    let _ = write_response(&mut stream, 500, "application/json", body.as_bytes());
-                }
-                None => {
-                    let _ = write_response(&mut stream, 500, "application/json",
-                        br#"{"error":"server shutting down"}"#);
+        ("POST", "/v1/completions") => handle_completions(stream, &req.body, ctx),
+        ("POST", "/generate") => handle_generate_legacy(stream, &req.body, ctx),
+        (m, p) if ROUTES.iter().any(|&(_, rp)| rp == p) => {
+            write_error(stream, &ApiError::method_not_allowed(m), true)?;
+            Ok(true)
+        }
+        (_, p) => {
+            write_error(stream, &ApiError::not_found(p), true)?;
+            Ok(true)
+        }
+    }
+}
+
+/// Run one submit on the engine and deliver the handle. If the
+/// requester gave up (reply channel closed), cancel the session so the
+/// engine doesn't decode for nobody.
+fn answer_submit(engine: &mut Engine, msg: EngineMsg) {
+    let EngineMsg::Submit { req, reply } = msg;
+    let res = engine.submit(req).map_err(ApiError::from);
+    if let Some(unclaimed) = reply.send_or_return(res) {
+        if let Ok(handle) = unclaimed {
+            handle.cancel();
+        }
+    }
+}
+
+/// Submit through the engine thread and wait for the session handle.
+/// The timeout is a shutdown-race backstop: the engine loop answers
+/// within one step in normal operation.
+fn open_session(ctx: &ServerCtx, req: GenRequest) -> Result<SessionHandle, ApiError> {
+    let reply: Channel<Result<SessionHandle, ApiError>> = Channel::new();
+    if !ctx.queue.send(EngineMsg::Submit { req, reply: reply.clone() }) {
+        return Err(ApiError::unavailable("server shutting down"));
+    }
+    match reply.recv_timeout(std::time::Duration::from_secs(30)) {
+        Some(r) => r,
+        None => {
+            // Stop waiting; reclaim (and cancel) a handle that may have
+            // been delivered in the race window.
+            reply.close();
+            if let Some(Ok(handle)) = reply.try_recv() {
+                handle.cancel();
+            }
+            Err(ApiError::unavailable("engine did not respond"))
+        }
+    }
+}
+
+fn handle_completions(stream: &mut TcpStream, body: &[u8], ctx: &ServerCtx) -> Result<bool> {
+    let parsed = std::str::from_utf8(body)
+        .map_err(|_| ApiError::invalid_request("body is not UTF-8"))
+        .and_then(|s| {
+            Json::parse(s).map_err(|e| ApiError::invalid_request(format!("invalid json: {e}")))
+        })
+        .and_then(|j| api::CompletionRequest::from_json(&j));
+    let creq = match parsed {
+        Ok(c) => c,
+        Err(e) => {
+            write_error(stream, &e, true)?;
+            return Ok(true);
+        }
+    };
+    let gen = match creq.to_gen_request(&ctx.cfg) {
+        Ok(g) => g,
+        Err(e) => {
+            write_error(stream, &e, true)?;
+            return Ok(true);
+        }
+    };
+    let handle = match open_session(ctx, gen) {
+        Ok(h) => h,
+        Err(e) => {
+            write_error(stream, &e, true)?;
+            return Ok(true);
+        }
+    };
+    let id = format!("cmpl-{}", handle.id);
+    let created = api::unix_now();
+    if creq.stream {
+        stream_completion(stream, ctx, &handle, &id, created)
+    } else {
+        let out = handle.collect();
+        if let Some(e) = out.error {
+            write_error(stream, &ApiError::internal(e), true)?;
+            return Ok(true);
+        }
+        let text = tokenizer::decode(&out.tokens);
+        let finish = out.finish.map(|f| f.as_str()).unwrap_or("length");
+        let usage = out.usage.unwrap_or_default();
+        let body = api::completion_json(&id, &ctx.model, created, &text, finish, &usage);
+        write_response(stream, 200, "application/json", body.to_string().as_bytes(), true)?;
+        Ok(true)
+    }
+}
+
+/// Incremental UTF-8 reassembly for the byte-level token stream:
+/// returns the longest cleanly-decodable prefix of `buf` (invalid
+/// sequences become U+FFFD), leaving an incomplete trailing sequence
+/// buffered for the next token. Without this, a multi-byte character
+/// split across token chunks would decode to replacement characters
+/// and streamed text would diverge from the non-streaming response.
+fn take_utf8_prefix(buf: &mut Vec<u8>) -> String {
+    let mut out = String::new();
+    loop {
+        match std::str::from_utf8(buf) {
+            Ok(s) => {
+                out.push_str(s);
+                buf.clear();
+                return out;
+            }
+            Err(e) => {
+                let valid = e.valid_up_to();
+                out.push_str(std::str::from_utf8(&buf[..valid]).unwrap());
+                match e.error_len() {
+                    Some(bad) => {
+                        out.push('\u{fffd}');
+                        buf.drain(..valid + bad);
+                    }
+                    None => {
+                        buf.drain(..valid);
+                        return out;
+                    }
                 }
             }
         }
-        _ => {
-            let _ = write_response(&mut stream, 404, "application/json",
-                br#"{"error":"not found"}"#);
+    }
+}
+
+/// Token-by-token SSE. The response is close-delimited (no
+/// Content-Length), so this always ends the connection. A failed
+/// write means the client went away: cancel the session so the engine
+/// frees its blocks on the next step.
+fn stream_completion(
+    stream: &mut TcpStream,
+    ctx: &ServerCtx,
+    handle: &SessionHandle,
+    id: &str,
+    created: u64,
+) -> Result<bool> {
+    if stream
+        .write_all(
+            b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+        )
+        .and_then(|_| stream.flush())
+        .is_err()
+    {
+        handle.cancel();
+        ctx.metrics.inc("stream_disconnects");
+        return Ok(false);
+    }
+    let mut pending_bytes: Vec<u8> = Vec::new();
+    loop {
+        let Some(ev) = handle.recv() else { break };
+        let frame = match ev {
+            SessionEvent::Token { token, .. } => {
+                pending_bytes.push(token.clamp(0, 255) as u8); // byte-level vocab
+                let text = take_utf8_prefix(&mut pending_bytes);
+                api::sse_event(&api::chunk_json(id, &ctx.model, created, &text, None, None))
+            }
+            SessionEvent::Done { usage, finish } => {
+                // Flush any buffered partial character into the
+                // terminal chunk (lossily: the stream is over).
+                let tail = if pending_bytes.is_empty() {
+                    String::new()
+                } else {
+                    String::from_utf8_lossy(&pending_bytes).into_owned()
+                };
+                let fin = api::sse_event(&api::chunk_json(
+                    id,
+                    &ctx.model,
+                    created,
+                    &tail,
+                    Some(finish.as_str()),
+                    Some(&usage),
+                ));
+                let _ = stream
+                    .write_all(fin.as_bytes())
+                    .and_then(|_| stream.write_all(api::SSE_DONE.as_bytes()))
+                    .and_then(|_| stream.flush());
+                break;
+            }
+            SessionEvent::Error(e) => {
+                let _ = stream
+                    .write_all(api::sse_event(&Json::obj().with(
+                        "error",
+                        Json::obj().with("type", "internal_error").with("message", e),
+                    ))
+                    .as_bytes())
+                    .and_then(|_| stream.flush());
+                break;
+            }
+        };
+        if stream.write_all(frame.as_bytes()).and_then(|_| stream.flush()).is_err() {
+            // Client disconnected mid-stream.
+            handle.cancel();
+            ctx.metrics.inc("stream_disconnects");
+            break;
         }
     }
+    Ok(false)
+}
+
+/// Pre-`/v1` response shape, now served through a session internally.
+fn handle_generate_legacy(stream: &mut TcpStream, body: &[u8], ctx: &ServerCtx) -> Result<bool> {
+    let parsed = std::str::from_utf8(body).ok().and_then(|s| Json::parse(s).ok());
+    let Some(j) = parsed else {
+        write_error(stream, &ApiError::invalid_request("invalid json"), true)?;
+        return Ok(true);
+    };
+    let Some(prompt) = j.get("prompt").and_then(Json::as_str) else {
+        write_error(stream, &ApiError::invalid_request("missing prompt"), true)?;
+        return Ok(true);
+    };
+    let max_new = j.get("max_new_tokens").and_then(Json::as_usize).unwrap_or(64);
+    let gen = GenRequest::new(tokenizer::encode(prompt), max_new);
+    let handle = match open_session(ctx, gen) {
+        Ok(h) => h,
+        Err(e) => {
+            write_error(stream, &e, true)?;
+            return Ok(true);
+        }
+    };
+    let out = handle.collect();
+    if let Some(e) = out.error {
+        write_error(stream, &ApiError::internal(e), true)?;
+        return Ok(true);
+    }
+    let usage = out.usage.unwrap_or_default();
+    let body = Json::obj()
+        .with("text", tokenizer::decode(&out.tokens))
+        .with("tokens", out.tokens.len())
+        .with("prefill_ms", usage.prefill_ms)
+        .with("decode_ms", usage.decode_ms);
+    write_response(stream, 200, "application/json", body.to_string().as_bytes(), true)?;
+    Ok(true)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<Option<HttpRequest>, ApiError> {
+        parse_request(&mut Cursor::new(raw.to_vec()))
+    }
 
     #[test]
     fn parse_post_with_body() {
         let raw = b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"prompt\":\"a\"}";
-        let mut cursor = std::io::Cursor::new(raw.to_vec());
-        let r = parse_request(&mut cursor).unwrap();
+        let r = parse(raw).unwrap().unwrap();
         assert_eq!(r.method, "POST");
         assert_eq!(r.path, "/generate");
         assert_eq!(r.body.len(), 13);
+        assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
     }
 
     #[test]
     fn parse_get_no_body() {
         let raw = b"GET /health HTTP/1.1\r\n\r\n";
-        let mut cursor = std::io::Cursor::new(raw.to_vec());
-        let r = parse_request(&mut cursor).unwrap();
+        let r = parse(raw).unwrap().unwrap();
         assert_eq!(r.method, "GET");
         assert_eq!(r.path, "/health");
         assert!(r.body.is_empty());
     }
 
     #[test]
+    fn parse_eof_is_clean_close() {
+        assert!(parse(b"").unwrap().is_none());
+    }
+
+    #[test]
+    fn unknown_method_is_405() {
+        let e = parse(b"BREW /coffee HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 405);
+        assert!(e.message.contains("BREW"));
+    }
+
+    #[test]
+    fn oversized_body_is_413_not_truncated() {
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            api::MAX_BODY_BYTES + 1
+        );
+        let e = parse(raw.as_bytes()).unwrap_err();
+        assert_eq!(e.status, 413);
+        // Exactly at the limit is still accepted framing-wise (the body
+        // itself is missing here, which is a 400 short-read instead).
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            api::MAX_BODY_BYTES
+        );
+        let e = parse(raw.as_bytes()).unwrap_err();
+        assert_eq!(e.status, 400);
+    }
+
+    #[test]
+    fn bad_content_length_is_400() {
+        let e = parse(b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 400);
+    }
+
+    #[test]
+    fn connection_close_header_disables_keep_alive() {
+        let r = parse(b"GET /health HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!r.keep_alive);
+        let r = parse(b"GET /health HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive, "HTTP/1.0 defaults to close");
+        let r = parse(b"GET /health HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(r.keep_alive);
+    }
+
+    #[test]
+    fn two_requests_on_one_buffered_stream() {
+        let raw = b"GET /health HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\n\r\n";
+        let mut cursor = Cursor::new(raw.to_vec());
+        let a = parse_request(&mut cursor).unwrap().unwrap();
+        let b = parse_request(&mut cursor).unwrap().unwrap();
+        assert_eq!(a.path, "/health");
+        assert_eq!(b.path, "/metrics");
+        assert!(parse_request(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
     fn response_format() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, "application/json", b"{}").unwrap();
+        write_response(&mut out, 200, "application/json", b"{}", true).unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(s.contains("Content-Length: 2"));
+        assert!(s.contains("Connection: keep-alive"));
         assert!(s.ends_with("{}"));
+
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", b"{}", false).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(s.contains("Connection: close"));
     }
 }

@@ -91,7 +91,7 @@ impl Json {
     // -- parse -------------------------------------------------------------
 
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), pos: 0 };
+        let mut p = Parser { b: text.as_bytes(), pos: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -210,9 +210,15 @@ impl fmt::Display for Json {
     }
 }
 
+/// Containers deeper than this are rejected: the parser is recursive,
+/// so an adversarial request body of `[[[[…` would otherwise overflow
+/// the stack (the HTTP layer feeds untrusted bodies straight in).
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -337,12 +343,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut kv = Vec::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(kv));
         }
         loop {
@@ -358,6 +374,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(kv));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -367,10 +384,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut a = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(a));
         }
         loop {
@@ -381,6 +400,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(a));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -438,6 +458,77 @@ mod tests {
     fn errors_carry_position() {
         let e = Json::parse("{\"a\": }").unwrap_err();
         assert!(e.pos > 0);
+    }
+
+    #[test]
+    fn escaped_unicode_edge_cases() {
+        // \uXXXX escapes decode to the same text as literal UTF-8,
+        // in values and in object keys.
+        assert_eq!(Json::parse(r#""\u00e9x\u0041""#).unwrap().as_str(), Some("éxA"));
+        assert_eq!(Json::parse(r#""\u4e2d\u6587""#).unwrap().as_str(), Some("中文"));
+        assert_eq!(Json::parse(r#""中文""#).unwrap().as_str(), Some("中文"));
+        let j = Json::parse(r#"{"k\u00e9y": 1}"#).unwrap();
+        assert_eq!(j.get("kéy").and_then(Json::as_usize), Some(1));
+        // A lone surrogate is not a scalar value: replaced, not crashed.
+        assert_eq!(Json::parse(r#""\ud800""#).unwrap().as_str(), Some("\u{fffd}"));
+        // Truncated escapes are errors, not panics.
+        assert!(Json::parse(r#""\u12"#).is_err());
+        assert!(Json::parse(r#""\u12G4""#).is_err());
+    }
+
+    #[test]
+    fn nested_objects_in_arrays() {
+        let j = Json::parse(
+            r#"[{"a":[{"b":[1,2]},{"c":{"d":null}}]},[],[[{"e":"f"}]]]"#,
+        )
+        .unwrap();
+        let top = j.as_arr().unwrap();
+        assert_eq!(top.len(), 3);
+        let a = top[0].get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a[0].path("b").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(a[1].path("c.d").unwrap(), &Json::Null);
+        assert!(top[1].as_arr().unwrap().is_empty());
+        assert_eq!(
+            top[2].as_arr().unwrap()[0].as_arr().unwrap()[0].path("e").unwrap().as_str(),
+            Some("f")
+        );
+        // Round-trips through the serializer.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        for src in [
+            "{\"a\":1}garbage",
+            "{\"a\":1} {}",
+            "[1,2]]",
+            "123abc",
+            "null null",
+            "\"s\"x",
+        ] {
+            assert!(Json::parse(src).is_err(), "accepted: {src}");
+        }
+        // Trailing whitespace is fine.
+        assert!(Json::parse("{\"a\":1}  \n").is_ok());
+    }
+
+    #[test]
+    fn deep_nesting_bounded() {
+        // Within bounds: parses and round-trips.
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+        // Past the bound: a structured error (not a stack overflow),
+        // for arrays, objects, and mixes.
+        let deep_arr = format!("{}1{}", "[".repeat(4096), "]".repeat(4096));
+        assert!(Json::parse(&deep_arr).is_err());
+        let deep_obj =
+            format!("{}1{}", "{\"k\":".repeat(4096), "}".repeat(4096));
+        assert!(Json::parse(&deep_obj).is_err());
+        let mixed = format!("{}1{}", "[{\"k\":".repeat(2048), "}]".repeat(2048));
+        assert!(Json::parse(&mixed).is_err());
+        // Depth is tracked, not just counted: siblings don't accumulate.
+        let wide = format!("[{}1]", "[1],".repeat(1000));
+        assert!(Json::parse(&wide).is_ok());
     }
 
     #[test]

@@ -47,12 +47,24 @@ impl<T> Channel<T> {
     }
 
     pub fn send(&self, item: T) -> bool {
+        self.send_or_return(item).is_none()
+    }
+
+    /// Like `send`, but hands the item back instead of dropping it when
+    /// the channel is closed — for senders that must dispose of it
+    /// deliberately (e.g. cancelling a session handle the receiver
+    /// will never collect). The closed check runs under the queue lock,
+    /// so a `close(); try_recv()` receiver either drains the item or
+    /// the sender gets it back; it is never silently lost.
+    pub fn send_or_return(&self, item: T) -> Option<T> {
+        let mut q = self.inner.queue.lock().unwrap();
         if self.inner.closed.load(Ordering::Acquire) {
-            return false;
+            return Some(item);
         }
-        self.inner.queue.lock().unwrap().push_back(item);
+        q.push_back(item);
+        drop(q);
         self.inner.cond.notify_one();
-        true
+        None
     }
 
     pub fn recv(&self) -> Option<T> {
@@ -176,6 +188,16 @@ mod tests {
         ch.send(1);
         ch.close();
         assert!(!ch.send(2));
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn send_or_return_hands_back_after_close() {
+        let ch = Channel::new();
+        assert_eq!(ch.send_or_return(1), None);
+        ch.close();
+        assert_eq!(ch.send_or_return(2), Some(2));
         assert_eq!(ch.recv(), Some(1));
         assert_eq!(ch.recv(), None);
     }

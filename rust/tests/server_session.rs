@@ -1,0 +1,344 @@
+//! Session + /v1 HTTP surface integration (skipped without artifacts):
+//! streaming equals non-streaming for the same seeded request, a
+//! cancelled session frees its KV blocks within one engine step, the
+//! bounded queue rejects with QueueFull, and a mid-stream client
+//! disconnect is observed through the metrics/pool counters.
+
+use radar_serve::config::{ArtifactPaths, PolicyKind, ServingConfig};
+use radar_serve::engine::{Engine, FinishReason, GenRequest, SubmitError};
+use radar_serve::model::tokenizer;
+use radar_serve::runtime::Runtime;
+use radar_serve::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let paths = ArtifactPaths::new("artifacts", "sm");
+    if !paths.manifest().exists() {
+        eprintln!("skipping server tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Runtime::load(paths).unwrap()))
+}
+
+fn engine(rt: Arc<Runtime>) -> Engine {
+    let mut cfg = ServingConfig::default();
+    cfg.policy = PolicyKind::Radar;
+    Engine::new(rt, cfg).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Engine-level session semantics (no sockets)
+// ---------------------------------------------------------------------
+
+#[test]
+fn cancel_frees_blocks_within_one_step() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine(rt);
+    let h = e
+        .submit(GenRequest::new(tokenizer::encode("the stream carries old light "), 64))
+        .unwrap();
+    e.step().unwrap(); // admission + prefill + first token
+    assert!(e.pool.used_blocks() > 0, "prefill should hold blocks");
+    h.cancel();
+    e.step().unwrap(); // the cancel sweep runs before any decode work
+    assert_eq!(e.pool.used_blocks(), 0, "cancel must free blocks in one step");
+    assert_eq!(e.metrics.counter("requests_cancelled"), 1);
+    let out = h.collect();
+    assert_eq!(out.finish, Some(FinishReason::Cancelled));
+    assert!(out.tokens.len() < 64, "must not have run to completion");
+}
+
+#[test]
+fn bounded_queue_rejects_when_full() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = ServingConfig::default();
+    cfg.policy = PolicyKind::Radar;
+    cfg.max_pending = 2;
+    let mut e = Engine::new(rt, cfg).unwrap();
+    let prompt = tokenizer::encode("quiet hills ");
+    let h1 = e.submit(GenRequest::new(prompt.clone(), 4)).unwrap();
+    let h2 = e.submit(GenRequest::new(prompt.clone(), 4)).unwrap();
+    match e.submit(GenRequest::new(prompt.clone(), 4)) {
+        Err(SubmitError::QueueFull { depth }) => assert_eq!(depth, 2),
+        other => panic!("expected QueueFull, got {:?}", other.map(|h| h.id)),
+    }
+    assert_eq!(e.metrics.counter("requests_rejected"), 1);
+    // Over-long requests are rejected up front, before any allocation.
+    match e.submit(GenRequest::new(vec![1; 10], 8192)) {
+        Err(SubmitError::TooLong { .. }) => {}
+        other => panic!("expected TooLong, got {:?}", other.map(|h| h.id)),
+    }
+    // The queued sessions still run to completion and free everything.
+    while !e.idle() {
+        e.step().unwrap();
+    }
+    for h in [h1, h2] {
+        let out = h.collect();
+        assert!(out.error.is_none());
+        assert_eq!(out.tokens.len(), 4);
+        assert_eq!(out.finish, Some(FinishReason::Length));
+    }
+    assert_eq!(e.pool.used_blocks(), 0, "finished sessions must be reaped");
+}
+
+#[test]
+fn session_stream_matches_legacy_blocking_path() {
+    let Some(rt) = runtime() else { return };
+    let prompt = "the stream carries old light towards dawn ";
+    // Legacy add/run_to_completion.
+    let mut e1 = engine(rt.clone());
+    let id = e1.add(GenRequest::new(tokenizer::encode(prompt), 12)).unwrap();
+    let results = e1.run_to_completion().unwrap();
+    let legacy = results.into_iter().find(|r| r.id == id).unwrap();
+    let legacy_tail = legacy.tokens[legacy.tokens.len() - 12..].to_vec();
+    // Session stream (greedy default, same engine config).
+    let mut e2 = engine(rt);
+    let h = e2.submit(GenRequest::new(tokenizer::encode(prompt), 12)).unwrap();
+    while !e2.idle() {
+        e2.step().unwrap();
+    }
+    let out = h.collect();
+    assert!(out.error.is_none());
+    assert_eq!(out.tokens, legacy_tail, "session tokens must match blocking path");
+    assert_eq!(out.logprobs.len(), 12);
+    let usage = out.usage.unwrap();
+    assert_eq!(usage.completion_tokens, 12);
+    assert!(usage.prompt_tokens > 0);
+}
+
+// ---------------------------------------------------------------------
+// HTTP surface (server on the test thread, client on a driver thread)
+// ---------------------------------------------------------------------
+
+const ADDR: &str = "127.0.0.1:18911";
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> anyhow::Result<(u16, String)> {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad status line {status_line:?}"))?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim().is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn post_completions(writer: &mut TcpStream, body: &str) -> anyhow::Result<()> {
+    write!(
+        writer,
+        "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    Ok(())
+}
+
+fn http_get(path: &str) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(ADDR)?;
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    Ok(out)
+}
+
+fn sse_text(raw: &str) -> (String, Option<String>) {
+    let mut text = String::new();
+    let mut finish = None;
+    for line in raw.lines() {
+        let Some(payload) = line.strip_prefix("data: ") else { continue };
+        if payload == "[DONE]" {
+            break;
+        }
+        let j = Json::parse(payload).unwrap();
+        let choice = &j.get("choices").unwrap().as_arr().unwrap()[0];
+        text.push_str(choice.get("text").and_then(Json::as_str).unwrap_or(""));
+        if let Some(f) = choice.get("finish_reason").and_then(Json::as_str) {
+            finish = Some(f.to_string());
+        }
+    }
+    (text, finish)
+}
+
+fn driver() -> anyhow::Result<()> {
+    for _ in 0..200 {
+        if TcpStream::connect(ADDR).is_ok() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    // Protocol edges: unknown method -> 405, oversized body -> 413,
+    // wrong method on a known route -> 405, unknown route -> 404.
+    {
+        let mut s = TcpStream::connect(ADDR)?;
+        write!(s, "BREW /health HTTP/1.1\r\n\r\n")?;
+        let mut out = String::new();
+        s.read_to_string(&mut out)?;
+        anyhow::ensure!(out.starts_with("HTTP/1.1 405"), "BREW: {out}");
+    }
+    {
+        let mut s = TcpStream::connect(ADDR)?;
+        write!(s, "POST /v1/completions HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n")?;
+        let mut out = String::new();
+        s.read_to_string(&mut out)?;
+        anyhow::ensure!(out.starts_with("HTTP/1.1 413"), "oversized: {out}");
+        anyhow::ensure!(out.contains("payload_too_large"), "oversized body: {out}");
+    }
+    {
+        let mut s = TcpStream::connect(ADDR)?;
+        write!(s, "GET /v1/completions HTTP/1.1\r\nConnection: close\r\n\r\n")?;
+        let mut out = String::new();
+        s.read_to_string(&mut out)?;
+        anyhow::ensure!(out.starts_with("HTTP/1.1 405"), "GET completions: {out}");
+    }
+    {
+        let resp = http_get("/nope")?;
+        anyhow::ensure!(resp.starts_with("HTTP/1.1 404"), "404: {resp}");
+    }
+    // Validation: structured 400 with an error body.
+    {
+        let stream = TcpStream::connect(ADDR)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        post_completions(&mut writer, r#"{"max_tokens":4}"#)?;
+        let (status, body) = read_response(&mut reader)?;
+        anyhow::ensure!(status == 400, "missing prompt: {status} {body}");
+        let j = Json::parse(&body)?;
+        anyhow::ensure!(
+            j.path("error.type").and_then(Json::as_str) == Some("invalid_request_error"),
+            "error shape: {body}"
+        );
+    }
+
+    // Keep-alive: non-stream completion, then a second request on the
+    // SAME socket; then the stream/non-stream equality check.
+    let prompt = "the stream carries old light towards dawn. quiet hills ";
+    let req_body = Json::obj()
+        .with("prompt", prompt)
+        .with("max_tokens", 12usize)
+        .with("seed", 7usize)
+        .to_string();
+    let non_stream_text;
+    {
+        let stream = TcpStream::connect(ADDR)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        post_completions(&mut writer, &req_body)?;
+        let (status, body) = read_response(&mut reader)?;
+        anyhow::ensure!(status == 200, "completion: {status} {body}");
+        let j = Json::parse(&body)?;
+        non_stream_text = j.get("choices").unwrap().as_arr().unwrap()[0]
+            .get("text")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        anyhow::ensure!(
+            j.path("usage.completion_tokens").and_then(Json::as_usize) == Some(12),
+            "usage: {body}"
+        );
+        // Socket reuse (HTTP/1.1 keep-alive).
+        post_completions(&mut writer, &req_body)?;
+        let (status2, body2) = read_response(&mut reader)?;
+        anyhow::ensure!(status2 == 200, "keep-alive reuse: {status2} {body2}");
+    }
+    // Streaming: concatenated SSE chunks == the non-streaming text.
+    {
+        let mut s = TcpStream::connect(ADDR)?;
+        let stream_body = Json::obj()
+            .with("prompt", prompt)
+            .with("max_tokens", 12usize)
+            .with("seed", 7usize)
+            .with("stream", true)
+            .to_string();
+        post_completions(&mut s, &stream_body)?;
+        let mut raw = String::new();
+        s.read_to_string(&mut raw)?; // SSE is close-delimited
+        anyhow::ensure!(raw.starts_with("HTTP/1.1 200"), "stream: {raw}");
+        anyhow::ensure!(raw.contains("text/event-stream"), "stream headers: {raw}");
+        anyhow::ensure!(raw.trim_end().ends_with("data: [DONE]"), "stream end: {raw}");
+        let (text, finish) = sse_text(&raw);
+        anyhow::ensure!(
+            text == non_stream_text,
+            "stream text {text:?} != non-stream {non_stream_text:?}"
+        );
+        anyhow::ensure!(finish.as_deref() == Some("length"), "finish: {finish:?}");
+    }
+
+    // Mid-stream disconnect: start a long stream, read one chunk, drop
+    // the socket. The engine must observe the cancel and free the
+    // sequence's blocks (kv_blocks_used gauge returns to 0, cancelled
+    // counter increments).
+    {
+        let mut s = TcpStream::connect(ADDR)?;
+        let body = Json::obj()
+            .with("prompt", prompt)
+            .with("max_tokens", 512usize)
+            .with("stream", true)
+            .to_string();
+        post_completions(&mut s, &body)?;
+        let mut first = [0u8; 1];
+        s.read_exact(&mut first)?; // at least the headers started
+        drop(s); // client goes away mid-stream
+    }
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let m = http_get("/metrics")?;
+        let cancelled = m
+            .lines()
+            .any(|l| l.starts_with("counter requests_cancelled") && !l.ends_with(" 0"));
+        let blocks_free = m.lines().any(|l| l.trim() == "gauge kv_blocks_used 0");
+        if cancelled && blocks_free {
+            anyhow::ensure!(
+                m.contains("latency_us ttft"),
+                "ttft histogram missing: {m}"
+            );
+            anyhow::ensure!(
+                m.contains("latency_us inter_token"),
+                "inter_token histogram missing: {m}"
+            );
+            break;
+        }
+        anyhow::ensure!(
+            std::time::Instant::now() < deadline,
+            "disconnect not observed; metrics:\n{m}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    Ok(())
+}
+
+#[test]
+fn v1_http_surface_end_to_end() {
+    let Some(rt) = runtime() else { return };
+    let e = engine(rt);
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let client = std::thread::spawn(move || {
+        let res = std::panic::catch_unwind(driver);
+        stop2.store(true, Ordering::Relaxed); // always release the server
+        match res {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("driver panicked")),
+        }
+    });
+    radar_serve::server::serve(e, ADDR, stop).unwrap();
+    client.join().unwrap().unwrap();
+}
