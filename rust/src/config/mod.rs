@@ -142,6 +142,12 @@ pub struct ServingConfig {
     pub max_pending: usize,
     /// Cap on tokens per sequence (cache capacity).
     pub max_seq_len: usize,
+    /// Shared-prefix KV reuse (the radix prefix index). Per-request
+    /// opt-out via the API's `cache: off`.
+    pub prefix_cache: bool,
+    /// Byte budget for the prefix index (KV blocks + frozen Radar
+    /// summaries); LRU leaf eviction keeps the tree under it.
+    pub prefix_cache_mb: usize,
     /// Sampling.
     pub temperature: f32,
     pub greedy: bool,
@@ -160,6 +166,8 @@ impl Default for ServingConfig {
             max_batch: 4,
             max_pending: 32,
             max_seq_len: 4096,
+            prefix_cache: true,
+            prefix_cache_mb: 64,
             temperature: 1.0,
             greedy: true,
             seed: 0,
@@ -180,6 +188,14 @@ impl ServingConfig {
             "max_batch" => self.max_batch = val.parse()?,
             "max_pending" => self.max_pending = val.parse()?,
             "max_seq_len" => self.max_seq_len = val.parse()?,
+            "prefix_cache" => {
+                self.prefix_cache = match val {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => return Err(anyhow!("prefix_cache: expected on/off, got '{other}'")),
+                }
+            }
+            "prefix_cache_mb" => self.prefix_cache_mb = val.parse()?,
             "temperature" => self.temperature = val.parse()?,
             "greedy" => self.greedy = val == "true" || val == "1",
             "seed" => self.seed = val.parse()?,
@@ -279,6 +295,23 @@ mod tests {
         assert_eq!(s.budget, 512);
         assert_eq!(s.max_pending, 8);
         assert!(s.apply_override("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn prefix_cache_overrides() {
+        let mut s = ServingConfig::default();
+        assert!(s.prefix_cache, "reuse is on by default");
+        assert_eq!(s.prefix_cache_mb, 64);
+        s.apply_override("prefix_cache", "off").unwrap();
+        assert!(!s.prefix_cache);
+        s.apply_override("prefix_cache", "1").unwrap();
+        assert!(s.prefix_cache);
+        s.apply_override("prefix_cache", "false").unwrap();
+        assert!(!s.prefix_cache);
+        assert!(s.apply_override("prefix_cache", "maybe").is_err());
+        s.apply_override("prefix_cache_mb", "128").unwrap();
+        assert_eq!(s.prefix_cache_mb, 128);
+        assert!(s.apply_override("prefix_cache_mb", "lots").is_err());
     }
 
     #[test]

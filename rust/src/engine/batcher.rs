@@ -51,6 +51,17 @@ pub fn group_by_bucket(
     out
 }
 
+/// Admission order for queued sequences: shortest uncached prefill
+/// first (prefix-cache hits jump the queue — their remaining work is
+/// tiny, so serving them first lowers mean TTFT without starving cold
+/// prompts, whose wait is bounded by the queue cap). Ties break FIFO by
+/// sequence id, which increases monotonically with submit order.
+pub fn admission_order(costs: &[(SeqId, usize)]) -> Vec<SeqId> {
+    let mut sorted = costs.to_vec();
+    sorted.sort_by_key(|&(id, cost)| (cost, id));
+    sorted.into_iter().map(|(id, _)| id).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +105,16 @@ mod tests {
         let mut seen: Vec<SeqId> = groups.iter().flat_map(|g| g.seq_ids.clone()).collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn admission_prefers_cheap_prefills_fifo_on_ties() {
+        // Seq 3 hit the prefix cache (16 uncached tokens) and jumps
+        // ahead of the earlier-but-colder 1 and 2; equal costs keep
+        // submit order.
+        let costs = vec![(1, 512), (2, 512), (3, 16), (4, 128)];
+        assert_eq!(admission_order(&costs), vec![3, 4, 1, 2]);
+        assert!(admission_order(&[]).is_empty());
     }
 
     #[test]

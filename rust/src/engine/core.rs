@@ -11,16 +11,17 @@
 //!   `qkv -> select -> gather -> attn_mlp`; embedding lookup and the
 //!   final head are host-side (verified against goldens).
 
-use super::batcher::group_by_bucket;
+use super::batcher::{admission_order, group_by_bucket};
 use super::request::{
     FinishReason, GenRequest, GenResult, PolicyHolder, SeqId, Sequence, SessionEvent,
     SessionHandle, SubmitError, Usage,
 };
 use crate::config::ServingConfig;
-use crate::kvcache::BlockPool;
+use crate::kvcache::{BlockPool, SeqCache, BLOCK_TOKENS};
 use crate::metrics::Metrics;
 use crate::model::{embed, head, log_prob};
 use crate::policy::{SelectCtx, Selection};
+use crate::prefix::PrefixIndex;
 use crate::runtime::Runtime;
 use crate::util::threadpool::Channel;
 use anyhow::{anyhow, Result};
@@ -45,6 +46,9 @@ pub struct Engine {
     pub cfg: ServingConfig,
     pub pool: BlockPool,
     pub metrics: Arc<Metrics>,
+    /// Shared-prefix radix index (KV block runs + frozen Radar
+    /// summaries keyed by prompt prefix).
+    pub prefix: PrefixIndex,
     seqs: BTreeMap<SeqId, Sequence>,
     /// Bounded admission queue; `submit` rejects once it is full so the
     /// HTTP layer can answer 429 instead of buffering unboundedly.
@@ -70,12 +74,14 @@ impl Engine {
         let blocks = cfg.max_seq_len.div_ceil(crate::kvcache::BLOCK_TOKENS)
             * (cfg.max_batch.max(4) * 4);
         let pool = BlockPool::new(&rt.config, cfg.n_feat, blocks);
+        let prefix = PrefixIndex::new(cfg.prefix_cache_mb << 20, pool.block_bytes());
         let omega = rt.omega(cfg.n_feat)?;
         Ok(Self {
             rt,
             cfg,
             pool,
             metrics: Arc::new(Metrics::new()),
+            prefix,
             seqs: BTreeMap::new(),
             pending: VecDeque::new(),
             next_id: 1,
@@ -145,14 +151,58 @@ impl Engine {
         Ok(handle)
     }
 
+    /// Whether the configured policy tolerates skipping shared-prefix
+    /// prefill chunks. Radar variants rebuild their index from pooled
+    /// per-token features (and adopt frozen donor segments), so they
+    /// are always safe; fused policies answer via the trait.
+    fn reuse_safe_policy(&self) -> bool {
+        if crate::policy::is_query_dependent(self.cfg.policy) {
+            return true;
+        }
+        crate::policy::make_policy(&self.cfg, self.rt.config.n_lh()).prefix_reuse_safe()
+    }
+
     /// Move queued sessions into the active set (prefilling them) while
     /// concurrency allows.
+    ///
+    /// Admission is shortest-uncached-prefill-first, not FIFO: prefix
+    /// cache hits owe only their suffix, so serving them first cuts
+    /// mean TTFT; cold prompts cannot starve because the pending queue
+    /// is bounded (`max_pending`) and drains every step.
     fn admit_pending(&mut self) {
-        while self.seqs.values().filter(|s| !s.done).count() < self.cfg.max_batch {
-            let Some(p) = self.pending.pop_front() else { break };
+        let active = self.seqs.values().filter(|s| !s.done).count();
+        let mut slots = self.cfg.max_batch.saturating_sub(active);
+        if slots == 0 || self.pending.is_empty() {
+            return;
+        }
+        let reuse_ok = self.cfg.prefix_cache && self.reuse_safe_policy();
+        let costs: Vec<(SeqId, usize)> = self
+            .pending
+            .iter()
+            .map(|p| {
+                let total = p.req.prompt.len().saturating_sub(1);
+                let cached = if reuse_ok && p.req.prefix_cache {
+                    self.prefix.peek_match_tokens(&p.req.prompt, total)
+                } else {
+                    0
+                };
+                (p.id, total - cached)
+            })
+            .collect();
+        for id in admission_order(&costs) {
+            if slots == 0 {
+                break;
+            }
+            let pos = self
+                .pending
+                .iter()
+                .position(|p| p.id == id)
+                .expect("pending entry vanished");
+            let p = self.pending.remove(pos).unwrap();
             self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
             if p.cancel.load(std::sync::atomic::Ordering::Acquire) {
-                // Cancelled while queued: never allocated anything.
+                // Cancelled while queued: never allocated anything
+                // (and never consumed an admission slot).
                 p.events.send(SessionEvent::Done {
                     usage: Usage::default(),
                     finish: FinishReason::Cancelled,
@@ -169,20 +219,90 @@ impl Engine {
             seq.queued_at = p.queued_at;
             let t0 = Instant::now();
             if !seq.tokens.is_empty() {
+                self.seed_from_prefix(&mut seq);
                 if let Err(e) = self.prefill(&mut seq) {
-                    seq.cache.free(&mut self.pool);
+                    seq.cache.free(&mut self.pool).expect("kv block double-free");
                     p.events.send(SessionEvent::Error(format!("prefill failed: {e}")));
                     p.events.close();
                     self.metrics.inc("requests_failed");
                     continue;
                 }
+                self.register_prefix(&seq);
             }
             seq.prompt_len = seq.tokens.len();
             seq.prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
             self.metrics.inc("requests_admitted");
             self.metrics.observe_us("prefill", seq.prefill_ms * 1e3);
             self.seqs.insert(seq.id, seq);
+            slots -= 1;
         }
+    }
+
+    /// Seed `seq.cache` from the longest cached run matching its
+    /// prompt, leaving only the suffix for `prefill`. No-op when reuse
+    /// is disabled (engine- or request-level) or the policy is
+    /// stateful over prefill feedback.
+    fn seed_from_prefix(&mut self, seq: &mut Sequence) {
+        if !self.cfg.prefix_cache || !seq.prefix_cache || seq.tokens.len() <= BLOCK_TOKENS {
+            return;
+        }
+        let safe = match &seq.policy {
+            PolicyHolder::Fused(p) => p.prefix_reuse_safe(),
+            PolicyHolder::Radar(_) => true,
+        };
+        if !safe {
+            return;
+        }
+        // The last prompt token always goes through the first decode
+        // step, so never serve the full prompt from cache.
+        let limit = seq.tokens.len() - 1;
+        let m = self.prefix.probe(&seq.tokens, limit);
+        if m.tokens == 0 {
+            self.metrics.inc("prefix_misses");
+            return;
+        }
+        seq.cache = SeqCache::seed_from_blocks(&mut self.pool, self.cfg.n_feat, &m.blocks);
+        seq.cached_tokens = m.tokens;
+        if let PolicyHolder::Radar(rp) = &mut seq.policy {
+            rp.donor = m.frozen;
+        }
+        self.metrics.inc("prefix_hits");
+        self.metrics.observe("prefill_tokens_saved", m.tokens as f64);
+    }
+
+    /// Register a freshly prefilled prompt's full KV blocks (plus the
+    /// Radar segment snapshot, if any) in the prefix index, then
+    /// enforce the byte budget and refresh the gauges.
+    fn register_prefix(&mut self, seq: &Sequence) {
+        if !self.cfg.prefix_cache || !seq.prefix_cache {
+            return;
+        }
+        let full = seq.cache.len() / BLOCK_TOKENS;
+        if full > 0 {
+            let frozen = match &seq.policy {
+                PolicyHolder::Radar(rp) => rp.index.freeze(full * BLOCK_TOKENS).map(Arc::new),
+                PolicyHolder::Fused(_) => None,
+            };
+            // KV content is policy-independent (prefill runs full
+            // attention), so every policy may populate the tree even
+            // though only reuse-safe ones read from it.
+            self.prefix.insert(
+                &mut self.pool,
+                &seq.tokens[..full * BLOCK_TOKENS],
+                &seq.cache.blocks[..full],
+                frozen,
+            );
+            if let Err(e) = self.prefix.evict_to_budget(&mut self.pool) {
+                // A corrupted refcount is a logic bug; surface loudly
+                // in debug, degrade to a counter in release.
+                debug_assert!(false, "prefix eviction failed: {e}");
+                self.metrics.inc("prefix_evict_errors");
+            }
+        }
+        self.metrics.set_gauge("prefix_cached_blocks", self.prefix.cached_blocks() as f64);
+        self.metrics.set_gauge("prefix_bytes", self.prefix.bytes_used() as f64);
+        self.metrics
+            .set_gauge("prefix_shared_blocks", self.prefix.shared_blocks(&self.pool) as f64);
     }
 
     /// Drop sequences whose cancel flag flipped, freeing their KV
@@ -196,7 +316,7 @@ impl Engine {
             .collect();
         for id in cancelled {
             let mut seq = self.seqs.remove(&id).unwrap();
-            seq.cache.free(&mut self.pool);
+            seq.cache.free(&mut self.pool).expect("kv block double-free");
             seq.finish = Some(FinishReason::Cancelled);
             if let Some(em) = &seq.emitter {
                 em.send(SessionEvent::Done {
@@ -220,7 +340,7 @@ impl Engine {
             .collect();
         for id in done {
             let mut seq = self.seqs.remove(&id).unwrap();
-            seq.cache.free(&mut self.pool);
+            seq.cache.free(&mut self.pool).expect("kv block double-free");
             if let Some(em) = &seq.emitter {
                 em.send(SessionEvent::Done {
                     usage: seq.usage(),
@@ -244,13 +364,14 @@ impl Engine {
         let ids: Vec<SeqId> = self.seqs.keys().copied().collect();
         for id in ids {
             let mut seq = self.seqs.remove(&id).unwrap();
-            seq.cache.free(&mut self.pool);
+            seq.cache.free(&mut self.pool).expect("kv block double-free");
             if let Some(em) = &seq.emitter {
                 em.send(SessionEvent::Error(msg.to_string()));
                 em.close();
                 self.metrics.inc("requests_failed");
             }
         }
+        self.prefix.clear(&mut self.pool).expect("kv block double-free");
         self.metrics.set_gauge("queue_depth", 0.0);
         self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
     }
@@ -264,7 +385,9 @@ impl Engine {
         let mut seq = Sequence::new(id, req, &self.cfg, mc.n_layers, mc.n_heads);
         let t0 = Instant::now();
         if !seq.tokens.is_empty() {
+            self.seed_from_prefix(&mut seq);
             self.prefill(&mut seq)?;
+            self.register_prefix(&seq);
         }
         seq.prompt_len = seq.tokens.len();
         seq.prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -277,7 +400,7 @@ impl Engine {
     /// Remove a finished sequence, freeing its cache blocks.
     pub fn remove(&mut self, id: SeqId) -> Option<GenResult> {
         let mut seq = self.seqs.remove(&id)?;
-        seq.cache.free(&mut self.pool);
+        seq.cache.free(&mut self.pool).expect("kv block double-free");
         Some(seq.result())
     }
 
@@ -288,20 +411,28 @@ impl Engine {
     /// Prefill covers tokens [0, P-1): the LAST prompt token is left
     /// for the first decode step, whose logits produce the first
     /// generated/evaluated token (standard prefill/decode handoff).
+    ///
+    /// Warm start: when `seed_from_prefix` already populated the cache
+    /// with the first `cache.len()` tokens, only the suffix is
+    /// dispatched. Chunks stay on the absolute `chunk`-token grid, so
+    /// past the (possibly partial) seam chunk a warm run issues the
+    /// same dispatches over the same inputs as a cold one.
     fn prefill(&mut self, seq: &mut Sequence) -> Result<()> {
         let mc = self.rt.config.clone();
         let chunk = self.rt.registry.prefill_chunk;
         let (l, h, dh) = (mc.n_layers, mc.n_heads, mc.d_head);
         let total = seq.tokens.len() - 1;
+        debug_assert!(seq.cache.len() <= total, "seeded past the prefill range");
+        self.metrics.add("prefill_tokens", (total - seq.cache.len()) as u64);
         // Whole chunks via the prefill artifact; a trailing partial
         // chunk is PADDED to the chunk size and run as one dispatch
         // (causality makes real positions independent of the padding,
         // whose outputs are simply not appended — §Perf L3-1: this
-        // replaced up to chunk-1 sequential decode dispatches).
-        let n_chunks = total.div_ceil(chunk);
-        for ci in 0..n_chunks {
-            let t0 = ci * chunk;
-            let t1 = (t0 + chunk).min(total);
+        // replaced up to chunk-1 sequential decode dispatches). A
+        // mid-grid warm start reuses the same padding path.
+        while seq.cache.len() < total {
+            let t0 = seq.cache.len();
+            let t1 = ((t0 / chunk + 1) * chunk).min(total);
             let real = t1 - t0;
             let meta = self.rt.registry.resolve_prefill(t0, self.cfg.n_feat)?.clone();
             let p = meta.len;
@@ -348,9 +479,10 @@ impl Engine {
                 PolicyHolder::Radar(_) => {}
             }
         }
-        // Radar: build the initial segment structure once.
+        // Radar: build the initial segment structure once (adopting any
+        // frozen donor segments from the prefix cache).
         if let PolicyHolder::Radar(rp) = &mut seq.policy {
-            rp.index.force_restructure(&seq.cache, &self.pool);
+            rp.force_restructure(&seq.cache, &self.pool);
         }
         Ok(())
     }
@@ -394,6 +526,8 @@ impl Engine {
         }
         self.reap_finished();
         self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
+        self.metrics
+            .set_gauge("prefix_shared_blocks", self.prefix.shared_blocks(&self.pool) as f64);
         Ok(stats)
     }
 

@@ -33,6 +33,10 @@ pub struct GenRequest {
     pub temperature: Option<f32>,
     pub greedy: Option<bool>,
     pub seed: Option<u64>,
+    /// Shared-prefix KV reuse for this request (API `cache: off` clears
+    /// it). Both this and the engine-wide `ServingConfig::prefix_cache`
+    /// must be on for the prompt to be seeded from the prefix index.
+    pub prefix_cache: bool,
 }
 
 impl GenRequest {
@@ -45,6 +49,7 @@ impl GenRequest {
             temperature: None,
             greedy: None,
             seed: None,
+            prefix_cache: true,
         }
     }
 
@@ -109,6 +114,9 @@ impl FinishReason {
 pub struct Usage {
     pub prompt_tokens: usize,
     pub completion_tokens: usize,
+    /// Prompt tokens served from the shared-prefix cache (not
+    /// prefilled); <= prompt_tokens.
+    pub cached_tokens: usize,
     pub prefill_ms: f64,
     pub decode_ms: f64,
 }
@@ -246,6 +254,10 @@ pub struct Sequence {
     pub stop_token: Option<i32>,
     pub max_new_tokens: usize,
     pub generated: usize,
+    /// Whether this request may use / populate the prefix cache.
+    pub prefix_cache: bool,
+    /// Prompt tokens seeded from the prefix cache instead of prefilled.
+    pub cached_tokens: usize,
     pub logprobs: Vec<f64>,
     pub done: bool,
     pub finish: Option<FinishReason>,
@@ -297,6 +309,8 @@ impl Sequence {
             stop_token: req.stop_token,
             max_new_tokens: req.max_new_tokens,
             generated: 0,
+            prefix_cache: req.prefix_cache,
+            cached_tokens: 0,
             logprobs: Vec::new(),
             done: false,
             finish: None,
@@ -324,6 +338,7 @@ impl Sequence {
         Usage {
             prompt_tokens: self.prompt_len,
             completion_tokens: self.generated,
+            cached_tokens: self.cached_tokens,
             prefill_ms: self.prefill_ms,
             decode_ms: self.decode_ms,
         }
@@ -371,7 +386,13 @@ mod tests {
         ch.send(SessionEvent::Token { token: 65, logprob: -0.5, index: 0 });
         ch.send(SessionEvent::Token { token: 66, logprob: -0.25, index: 1 });
         ch.send(SessionEvent::Done {
-            usage: Usage { prompt_tokens: 3, completion_tokens: 2, prefill_ms: 1.0, decode_ms: 2.0 },
+            usage: Usage {
+                prompt_tokens: 3,
+                completion_tokens: 2,
+                prefill_ms: 1.0,
+                decode_ms: 2.0,
+                ..Default::default()
+            },
             finish: FinishReason::Length,
         });
         let out = h.drain();

@@ -1,5 +1,6 @@
 //! Report helpers shared by harness drivers.
 
+use crate::metrics::Metrics;
 use anyhow::Result;
 use std::path::Path;
 
@@ -36,6 +37,22 @@ pub fn md_table(headers: &[&str], rows: &[Vec<String>]) -> String {
     s
 }
 
+/// One-line shared-prefix cache summary for run reports: hit rate,
+/// total prefill tokens skipped, and currently shared blocks.
+pub fn prefix_cache_summary(m: &Metrics) -> String {
+    let hits = m.counter("prefix_hits");
+    let misses = m.counter("prefix_misses");
+    let probes = hits + misses;
+    let rate = if probes == 0 { 0.0 } else { hits as f64 / probes as f64 * 100.0 };
+    let n = m.histogram_count("prefill_tokens_saved");
+    let saved = if n == 0 { 0.0 } else { m.histogram_mean("prefill_tokens_saved") * n as f64 };
+    format!(
+        "prefix cache: {hits}/{probes} hits ({rate:.0}%), {saved:.0} prefill tokens saved, \
+         {} shared blocks",
+        m.gauge("prefix_shared_blocks") as u64
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -45,5 +62,20 @@ mod tests {
         let t = md_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
         assert!(t.contains("| a | b |"));
         assert!(t.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn prefix_summary_shapes() {
+        let m = Metrics::new();
+        assert!(prefix_cache_summary(&m).contains("0/0 hits (0%)"));
+        m.add("prefix_hits", 3);
+        m.inc("prefix_misses");
+        m.observe("prefill_tokens_saved", 64.0);
+        m.observe("prefill_tokens_saved", 32.0);
+        m.set_gauge("prefix_shared_blocks", 4.0);
+        let s = prefix_cache_summary(&m);
+        assert!(s.contains("3/4 hits (75%)"), "{s}");
+        assert!(s.contains("96 prefill tokens saved"), "{s}");
+        assert!(s.contains("4 shared blocks"), "{s}");
     }
 }

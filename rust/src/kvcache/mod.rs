@@ -2,10 +2,14 @@
 //!
 //! A shared `BlockPool` owns fixed-size blocks; each block holds
 //! `BLOCK_TOKENS` tokens of K, V and random features for **all**
-//! (layer, head) planes. Sequences own a list of block ids; freeing a
-//! sequence returns its blocks to the pool. The hot-path `gather_*`
-//! routines copy policy-selected token rows into the padded buffers
-//! the decode artifacts take as inputs.
+//! (layer, head) planes. Blocks are **reference counted**: a block may
+//! be owned by several sequences at once (shared-prompt prefix reuse,
+//! see `crate::prefix`) and only returns to the free list when its last
+//! owner releases it. Writes go through copy-on-write: appending into a
+//! block another owner can still see first copies it.
+//!
+//! The hot-path `gather_*` routines copy policy-selected token rows
+//! into the padded buffers the decode artifacts take as inputs.
 //!
 //! Layouts inside a block (row-major):
 //!   k, v  : [L, H, BLOCK_TOKENS, dh]
@@ -28,6 +32,8 @@ pub struct BlockPool {
     cfg: ModelConfig,
     n_feat: usize,
     blocks: Vec<Block>,
+    /// Per-block owner count; 0 == on the free list.
+    refs: Vec<u32>,
     free: Vec<usize>,
     capacity: usize,
 }
@@ -38,6 +44,7 @@ impl BlockPool {
             cfg: cfg.clone(),
             n_feat,
             blocks: Vec::new(),
+            refs: Vec::new(),
             free: Vec::new(),
             capacity: capacity_blocks,
         }
@@ -63,8 +70,17 @@ impl BlockPool {
         self.n_feat
     }
 
+    /// Bytes of K + V + feat storage one block occupies (the unit the
+    /// prefix-cache eviction budget is denominated in).
+    pub fn block_bytes(&self) -> usize {
+        (2 * self.kv_block_len() + self.feat_block_len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Allocate a block with an owner count of 1.
     pub fn allocate(&mut self) -> Result<usize> {
         if let Some(id) = self.free.pop() {
+            debug_assert_eq!(self.refs[id], 0, "free-list block {id} still referenced");
+            self.refs[id] = 1;
             return Ok(id);
         }
         if self.blocks.len() >= self.capacity {
@@ -80,14 +96,63 @@ impl BlockPool {
             v: vec![0.0; self.kv_block_len()],
             feat: vec![0.0; self.feat_block_len()],
         });
+        self.refs.push(1);
         Ok(id)
     }
 
-    pub fn release(&mut self, ids: &[usize]) {
-        for &id in ids {
-            debug_assert!(!self.free.contains(&id), "double free of block {id}");
-            self.free.push(id);
+    /// Add an owner to a live block (prefix sharing / seeded sequences).
+    pub fn retain(&mut self, id: usize) {
+        assert!(
+            id < self.blocks.len() && self.refs[id] > 0,
+            "retain of dead block {id}"
+        );
+        self.refs[id] += 1;
+    }
+
+    /// Current owner count (0 == on the free list).
+    pub fn ref_count(&self, id: usize) -> u32 {
+        if id < self.refs.len() {
+            self.refs[id]
+        } else {
+            0
         }
+    }
+
+    /// Drop one owner from each block; a block returns to the free list
+    /// only when its last owner releases it. Releasing a block that is
+    /// already free (or was never allocated) is a hard error: it means
+    /// two owners think they hold the same block exclusively, and
+    /// continuing would alias live KV data.
+    pub fn release(&mut self, ids: &[usize]) -> Result<()> {
+        for &id in ids {
+            if id >= self.blocks.len() || self.refs[id] == 0 {
+                debug_assert!(false, "double release of block {id}");
+                return Err(anyhow!("double release of kv block {id}"));
+            }
+            self.refs[id] -= 1;
+            if self.refs[id] == 0 {
+                self.free.push(id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Allocate a fresh block and copy `src`'s contents into it
+    /// (the copy-on-write slow path).
+    pub fn copy_block(&mut self, src: usize) -> Result<usize> {
+        assert!(
+            src < self.blocks.len() && self.refs[src] > 0,
+            "copy of dead block {src}"
+        );
+        let dst = self.allocate()?;
+        debug_assert_ne!(src, dst);
+        let (a, b) = if src < dst { (src, dst) } else { (dst, src) };
+        let (lo, hi) = self.blocks.split_at_mut(b);
+        let (s, d) = if src < dst { (&lo[a], &mut hi[0]) } else { (&hi[0], &mut lo[a]) };
+        d.k.copy_from_slice(&s.k);
+        d.v.copy_from_slice(&s.v);
+        d.feat.copy_from_slice(&s.feat);
+        Ok(dst)
     }
 
     pub fn used_blocks(&self) -> usize {
@@ -112,12 +177,37 @@ impl SeqCache {
         Self { blocks: Vec::new(), len: 0, n_feat }
     }
 
+    /// Build a cache whose first `blocks.len() * BLOCK_TOKENS` tokens
+    /// are the given (already-populated, full) shared blocks. Each block
+    /// gains an owner; the prefix stays immutable because any write into
+    /// a shared block goes through copy-on-write.
+    pub fn seed_from_blocks(pool: &mut BlockPool, n_feat: usize, blocks: &[usize]) -> Self {
+        for &b in blocks {
+            pool.retain(b);
+        }
+        Self { blocks: blocks.to_vec(), len: blocks.len() * BLOCK_TOKENS, n_feat }
+    }
+
     pub fn len(&self) -> usize {
         self.len
     }
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    /// Copy-on-write guard: make the tail block exclusively ours before
+    /// writing into it. Returns true when a copy was made.
+    fn ensure_tail_writable(&mut self, pool: &mut BlockPool) -> Result<bool> {
+        let bid = *self.blocks.last().expect("ensure_tail_writable on empty cache");
+        if pool.ref_count(bid) <= 1 {
+            return Ok(false);
+        }
+        let copy = pool.copy_block(bid)?;
+        // Cannot hit zero: the other owner still holds a reference.
+        pool.release(&[bid])?;
+        *self.blocks.last_mut().unwrap() = copy;
+        Ok(true)
     }
 
     /// Append one token's K/V/feat for every (l, h).
@@ -137,6 +227,8 @@ impl SeqCache {
         if self.len % BLOCK_TOKENS == 0 {
             let id = pool.allocate()?;
             self.blocks.push(id);
+        } else {
+            self.ensure_tail_writable(pool)?;
         }
         let slot = self.len % BLOCK_TOKENS;
         let bid = *self.blocks.last().unwrap();
@@ -177,6 +269,10 @@ impl SeqCache {
             if self.len % BLOCK_TOKENS == 0 {
                 let id = pool.allocate()?;
                 self.blocks.push(id);
+            } else if t == 0 {
+                // Only the first written token can land in a shared
+                // tail block; blocks allocated inside this loop are ours.
+                self.ensure_tail_writable(pool)?;
             }
             let slot = self.len % BLOCK_TOKENS;
             let bid = *self.blocks.last().unwrap();
@@ -268,11 +364,18 @@ impl SeqCache {
         }
     }
 
-    /// Release all blocks back to the pool.
-    pub fn free(&mut self, pool: &mut BlockPool) {
-        pool.release(&self.blocks);
+    /// Drop this sequence's ownership of all its blocks; blocks shared
+    /// with the prefix cache or other sequences stay alive.
+    pub fn free(&mut self, pool: &mut BlockPool) -> Result<()> {
+        let r = pool.release(&self.blocks);
         self.blocks.clear();
         self.len = 0;
+        r
+    }
+
+    /// How many of this sequence's blocks have other owners too.
+    pub fn shared_blocks(&self, pool: &BlockPool) -> usize {
+        self.blocks.iter().filter(|&&b| pool.ref_count(b) > 1).count()
     }
 }
 
@@ -413,7 +516,7 @@ mod tests {
             seq.append(&mut pool, &k, &v, &f).unwrap();
         }
         assert!(seq.append(&mut pool, &k, &v, &f).is_err(), "capacity enforced");
-        seq.free(&mut pool);
+        seq.free(&mut pool).unwrap();
         assert_eq!(pool.used_blocks(), 0);
         let mut seq2 = SeqCache::new(8);
         for _ in 0..64 {
@@ -447,7 +550,7 @@ mod tests {
                         _ => {
                             if !seqs.is_empty() {
                                 let mut s = seqs.remove(0);
-                                s.free(&mut pool);
+                                s.free(&mut pool).unwrap();
                             }
                         }
                     }
@@ -463,6 +566,204 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn double_release_is_hard_error() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 8);
+        let id = pool.allocate().unwrap();
+        pool.release(&[id]).unwrap();
+        // Releasing a block already on the free list must fail loudly,
+        // not silently corrupt the free list.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.release(&[id])
+        }));
+        if cfg!(debug_assertions) {
+            assert!(result.is_err(), "debug builds must assert on double release");
+        } else {
+            assert!(result.unwrap().is_err(), "release builds must return Err");
+        }
+        // Never-allocated ids are equally fatal.
+        let mut pool2 = BlockPool::new(&c, 8, 8);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool2.release(&[3])
+        }));
+        if cfg!(debug_assertions) {
+            assert!(result.is_err());
+        } else {
+            assert!(result.unwrap().is_err());
+        }
+    }
+
+    #[test]
+    fn refcounted_block_survives_one_owner_release() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 8);
+        let id = pool.allocate().unwrap();
+        pool.retain(id);
+        assert_eq!(pool.ref_count(id), 2);
+        pool.release(&[id]).unwrap();
+        assert_eq!(pool.ref_count(id), 1);
+        assert_eq!(pool.used_blocks(), 1, "still owned by the other holder");
+        pool.release(&[id]).unwrap();
+        assert_eq!(pool.ref_count(id), 0);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn append_chunk_exactly_fills_block() {
+        // A chunk of exactly BLOCK_TOKENS tokens must fill one block and
+        // leave the next append allocating a fresh one.
+        let c = cfg();
+        let (lh, dh, nf) = (4, 4, 8);
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut seq = SeqCache::new(8);
+        let t_len = BLOCK_TOKENS;
+        let kc = vec![1.0f32; lh * t_len * dh];
+        let vc = kc.clone();
+        let fc = vec![2.0f32; lh * t_len * nf];
+        seq.append_chunk(&mut pool, t_len, t_len, &kc, &vc, &fc).unwrap();
+        assert_eq!(seq.len(), BLOCK_TOKENS);
+        assert_eq!(seq.blocks.len(), 1);
+        let (k, v, f) = fill_token(0, lh, dh, nf);
+        seq.append(&mut pool, &k, &v, &f).unwrap();
+        assert_eq!(seq.blocks.len(), 2, "next token starts a new block");
+        assert_eq!(seq.key(&pool, 0, 0, BLOCK_TOKENS), &k[..4]);
+    }
+
+    #[test]
+    fn append_chunk_spanning_many_blocks_matches_tokenwise() {
+        // One chunk covering 3+ blocks (and a ragged tail) must equal
+        // token-by-token appends.
+        let c = cfg();
+        let (lh, dh, nf) = (4, 4, 8);
+        let t_len = 3 * BLOCK_TOKENS + 5; // 53 tokens -> 4 blocks
+        let mut pool1 = BlockPool::new(&c, 8, 100);
+        let mut pool2 = BlockPool::new(&c, 8, 100);
+        let mut s1 = SeqCache::new(8);
+        let mut s2 = SeqCache::new(8);
+        let mut kc = vec![0.0; lh * t_len * dh];
+        let mut vc = vec![0.0; lh * t_len * dh];
+        let mut fc = vec![0.0; lh * t_len * nf];
+        for t in 0..t_len {
+            let (k, v, f) = fill_token(t, lh, dh, nf);
+            for p in 0..lh {
+                for j in 0..dh {
+                    kc[(p * t_len + t) * dh + j] = k[p * dh + j];
+                    vc[(p * t_len + t) * dh + j] = v[p * dh + j];
+                }
+                for j in 0..nf {
+                    fc[(p * t_len + t) * nf + j] = f[p * nf + j];
+                }
+            }
+            s1.append(&mut pool1, &k, &v, &f).unwrap();
+        }
+        s2.append_chunk(&mut pool2, t_len, t_len, &kc, &vc, &fc).unwrap();
+        assert_eq!(s2.len(), t_len);
+        assert_eq!(s2.blocks.len(), 4);
+        for idx in [0, 15, 16, 31, 32, 47, 48, 52] {
+            for l in 0..2 {
+                for h in 0..2 {
+                    assert_eq!(
+                        s1.key(&pool1, l, h, idx),
+                        s2.key(&pool2, l, h, idx),
+                        "token {idx} plane ({l},{h})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn append_chunk_empty_is_noop() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut seq = SeqCache::new(8);
+        // Empty chunk on an empty cache: no allocation, no length change.
+        seq.append_chunk(&mut pool, 0, 16, &vec![0.0; 4 * 16 * 4], &vec![0.0; 4 * 16 * 4], &vec![0.0; 4 * 16 * 8]).unwrap();
+        assert_eq!(seq.len(), 0);
+        assert!(seq.blocks.is_empty());
+        assert_eq!(pool.used_blocks(), 0);
+        // And on a partially-filled cache: state untouched.
+        let (k, v, f) = fill_token(1, 4, 4, 8);
+        seq.append(&mut pool, &k, &v, &f).unwrap();
+        seq.append_chunk(&mut pool, 0, 16, &vec![0.0; 4 * 16 * 4], &vec![0.0; 4 * 16 * 4], &vec![0.0; 4 * 16 * 8]).unwrap();
+        assert_eq!(seq.len(), 1);
+        assert_eq!(seq.blocks.len(), 1);
+        assert_eq!(seq.key(&pool, 0, 0, 0), &k[..4]);
+    }
+
+    #[test]
+    fn cow_append_into_shared_tail_copies() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut seq = SeqCache::new(8);
+        for t in 0..20 {
+            let (k, v, f) = fill_token(t, 4, 4, 8);
+            seq.append(&mut pool, &k, &v, &f).unwrap();
+        }
+        // Simulate a second owner of the (partial) tail block.
+        let tail = *seq.blocks.last().unwrap();
+        pool.retain(tail);
+        let snapshot: Vec<f32> = seq.key(&pool, 0, 0, 17).to_vec();
+        let (k, v, f) = fill_token(99, 4, 4, 8);
+        seq.append(&mut pool, &k, &v, &f).unwrap();
+        let new_tail = *seq.blocks.last().unwrap();
+        assert_ne!(new_tail, tail, "shared tail must be copied before write");
+        assert_eq!(pool.ref_count(tail), 1, "our ownership moved to the copy");
+        // Existing tokens are visible through the copy...
+        assert_eq!(seq.key(&pool, 0, 0, 17), &snapshot[..]);
+        // ...and the new token landed in the copy, not the shared block.
+        assert_eq!(seq.key(&pool, 0, 0, 20), &k[..4]);
+    }
+
+    #[test]
+    fn cow_append_chunk_into_shared_tail_copies() {
+        let c = cfg();
+        let (lh, dh, nf) = (4, 4, 8);
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut seq = SeqCache::new(8);
+        for t in 0..10 {
+            let (k, v, f) = fill_token(t, lh, dh, nf);
+            seq.append(&mut pool, &k, &v, &f).unwrap();
+        }
+        let tail = *seq.blocks.last().unwrap();
+        pool.retain(tail);
+        let t_len = 20; // spans the shared tail + a fresh block
+        let kc = vec![3.0f32; lh * t_len * dh];
+        let vc = kc.clone();
+        let fc = vec![4.0f32; lh * t_len * nf];
+        seq.append_chunk(&mut pool, t_len, t_len, &kc, &vc, &fc).unwrap();
+        assert_ne!(seq.blocks[0], tail);
+        assert_eq!(pool.ref_count(tail), 1);
+        let (k0, _, _) = fill_token(0, lh, dh, nf);
+        assert_eq!(seq.key(&pool, 0, 0, 0), &k0[..4], "pre-COW tokens preserved");
+        assert_eq!(seq.key(&pool, 0, 0, 10), &[3.0; 4][..], "chunk written to copy");
+    }
+
+    #[test]
+    fn seed_from_blocks_shares_and_reads_identically() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut donor = SeqCache::new(8);
+        for t in 0..32 {
+            let (k, v, f) = fill_token(t, 4, 4, 8);
+            donor.append(&mut pool, &k, &v, &f).unwrap();
+        }
+        let used_before = pool.used_blocks();
+        let seeded = SeqCache::seed_from_blocks(&mut pool, 8, &donor.blocks);
+        assert_eq!(seeded.len(), 32);
+        assert_eq!(pool.used_blocks(), used_before, "seeding allocates nothing");
+        assert_eq!(seeded.shared_blocks(&pool), 2);
+        for idx in [0, 15, 16, 31] {
+            assert_eq!(seeded.key(&pool, 1, 1, idx), donor.key(&pool, 1, 1, idx));
+        }
+        // Donor exits; the seeded sequence keeps the blocks alive.
+        let blocks = donor.blocks.clone();
+        donor.free(&mut pool).unwrap();
+        assert!(blocks.iter().all(|&b| pool.ref_count(b) == 1));
+        assert_eq!(seeded.key(&pool, 0, 0, 5).len(), 4);
     }
 
     #[test]

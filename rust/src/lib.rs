@@ -13,6 +13,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod model;
 pub mod policy;
+pub mod prefix;
 pub mod radar;
 pub mod runtime;
 pub mod server;

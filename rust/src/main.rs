@@ -141,6 +141,9 @@ fn generate(args: &Args, root: &str) -> Result<()> {
             u.completion_tokens as f64 / (u.decode_ms / 1e3).max(1e-9)
         );
     }
+    if engine.metrics.counter("prefix_hits") + engine.metrics.counter("prefix_misses") > 0 {
+        eprintln!("[{}]", radar_serve::harness::report::prefix_cache_summary(&engine.metrics));
+    }
     Ok(())
 }
 

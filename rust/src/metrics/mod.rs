@@ -16,6 +16,9 @@ struct Inner {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
     latencies_us: BTreeMap<String, Series>,
+    /// Unitless value distributions (e.g. prefill tokens saved per
+    /// request) — same Series machinery, separate exposition prefix.
+    histograms: BTreeMap<String, Series>,
 }
 
 impl Metrics {
@@ -53,6 +56,26 @@ impl Metrics {
         let out = f();
         self.observe_us(name, t.elapsed().as_secs_f64() * 1e6);
         out
+    }
+
+    /// Record one sample into the named histogram.
+    pub fn observe(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms.entry(name.to_string()).or_default().push(value);
+    }
+
+    pub fn histogram_count(&self, name: &str) -> usize {
+        self.inner.lock().unwrap().histograms.get(name).map(|s| s.len()).unwrap_or(0)
+    }
+
+    pub fn histogram_mean(&self, name: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .get(name)
+            .map(|s| s.mean())
+            .unwrap_or(f64::NAN)
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -98,6 +121,15 @@ impl Metrics {
                 s.p99(),
             ));
         }
+        for (k, s) in &g.histograms {
+            out.push_str(&format!(
+                "histogram {k} count {} mean {:.1} p50 {:.1} p99 {:.1}\n",
+                s.len(),
+                s.mean(),
+                s.p50(),
+                s.p99(),
+            ));
+        }
         out
     }
 
@@ -106,6 +138,7 @@ impl Metrics {
         g.counters.clear();
         g.gauges.clear();
         g.latencies_us.clear();
+        g.histograms.clear();
     }
 }
 
@@ -150,6 +183,22 @@ mod tests {
         assert!(r.contains("counter a 1"));
         assert!(r.contains("latency_us b"));
         assert!(r.contains("gauge c 2.5"));
+    }
+
+    #[test]
+    fn histograms_record_and_render() {
+        let m = Metrics::new();
+        for v in [10.0, 20.0, 30.0] {
+            m.observe("prefill_tokens_saved", v);
+        }
+        assert_eq!(m.histogram_count("prefill_tokens_saved"), 3);
+        assert!((m.histogram_mean("prefill_tokens_saved") - 20.0).abs() < 1e-9);
+        assert_eq!(m.histogram_count("missing"), 0);
+        assert!(m.histogram_mean("missing").is_nan());
+        let r = m.render();
+        assert!(r.contains("histogram prefill_tokens_saved count 3"));
+        m.reset();
+        assert_eq!(m.histogram_count("prefill_tokens_saved"), 0);
     }
 
     #[test]

@@ -27,6 +27,10 @@ impl SelectionPolicy for VanillaPolicy {
     fn select(&mut self, ctx: &SelectCtx) -> Selection {
         Selection::uniform(self.lh, (0..ctx.t as u32).collect())
     }
+
+    fn prefix_reuse_safe(&self) -> bool {
+        true // stateless: selection depends only on t
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -57,6 +61,10 @@ impl SelectionPolicy for StreamingPolicy {
         let span = c.window + c.budget;
         let w_start = ctx.t.saturating_sub(span);
         Selection::uniform(self.lh, sinks_and_window(c.sinks, w_start, ctx.t))
+    }
+
+    fn prefix_reuse_safe(&self) -> bool {
+        true // stateless: selection depends only on t
     }
 }
 

@@ -64,6 +64,15 @@ pub trait SelectionPolicy: Send {
     /// Feedback: decode step done. `sel` is the selection that produced
     /// `probs` (layout [L, H, S+1], slot S = the new self token).
     fn on_decode(&mut self, _ctx: &SelectCtx, _sel: &Selection, _probs: &[f32], _bucket_s: usize) {}
+
+    /// Whether a sequence running this policy may skip prefilling a
+    /// shared prompt prefix (KV blocks seeded from the prefix cache).
+    /// Only stateless policies — no `on_prefill` accumulation — can
+    /// safely skip the chunks; stateful ones (H2O, SnapKV, SubGen)
+    /// would miss the attention-mass feedback those chunks feed them.
+    fn prefix_reuse_safe(&self) -> bool {
+        false
+    }
 }
 
 /// Instantiate the policy object for a request.

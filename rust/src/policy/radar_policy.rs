@@ -9,8 +9,9 @@
 use super::Selection;
 use crate::config::ServingConfig;
 use crate::kvcache::{BlockPool, SeqCache};
-use crate::radar::{exact_segment_scores, top_k_indices, RadarIndex};
+use crate::radar::{exact_segment_scores, top_k_indices, FrozenSegments, RadarIndex};
 use crate::util::prng::SplitMix64;
+use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RadarVariant {
@@ -27,6 +28,10 @@ pub enum RadarVariant {
 pub struct RadarPolicy {
     pub variant: RadarVariant,
     pub index: RadarIndex,
+    /// Frozen segment means for a shared prompt prefix (set when the
+    /// sequence was seeded from the prefix cache); restructures adopt
+    /// matching segments instead of recomputing them.
+    pub donor: Option<Arc<FrozenSegments>>,
     lh: usize,
     n_heads: usize,
     rng: SplitMix64,
@@ -38,6 +43,7 @@ impl RadarPolicy {
         Self {
             variant,
             index: RadarIndex::new(n_layers * n_heads, n_feat),
+            donor: None,
             lh: n_layers * n_heads,
             n_heads,
             rng: SplitMix64::new(seed ^ 0xDA7A),
@@ -48,7 +54,14 @@ impl RadarPolicy {
     /// Call after the cache grows to `t` tokens (prefill chunks call it
     /// per token boundary crossing; decode per token). Alg. 1 line 8.
     pub fn on_grow(&mut self, pool: &BlockPool, seq: &SeqCache) -> bool {
-        self.index.maybe_restructure(seq, pool, seq.len())
+        self.index
+            .maybe_restructure_with(seq, pool, seq.len(), self.donor.as_deref())
+    }
+
+    /// Post-prefill initialization, adopting any frozen donor segments.
+    pub fn force_restructure(&mut self, seq: &SeqCache, pool: &BlockPool) {
+        self.index
+            .force_restructure_with(seq, pool, self.donor.as_deref())
     }
 
     /// Selection for layer l. `phi_q` is [H, n] (head-major), `q_raw`

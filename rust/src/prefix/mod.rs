@@ -1,0 +1,589 @@
+//! Shared-prefix KV reuse: a token-hash radix tree over block-granular
+//! prompt prefixes.
+//!
+//! Sessions that share a prompt prefix (system prompts, few-shot
+//! templates, multi-turn chats) would otherwise recompute identical KV
+//! blocks *and* identical Radar segment summaries — both are pure
+//! functions of the prefix tokens. This tree maps each
+//! `BLOCK_TOKENS`-sized prompt chunk to an immutable, refcounted KV
+//! block; a path from the root is a cached prefix. Nodes additionally
+//! carry frozen [`FrozenSegments`] snapshots so a warm sequence's first
+//! restructure can adopt precomputed segment means.
+//!
+//! Ownership: the tree holds exactly one `BlockPool` reference per
+//! node. Sequences seeded from a match take their own references
+//! (`SeqCache::seed_from_blocks`), so evicting a node while a session
+//! still reads the block merely drops the tree's reference — the pool
+//! frees a block only when *every* owner has released it. Shared blocks
+//! are never written in place: they are always full, and the
+//! copy-on-write tail logic in `SeqCache` covers the partial-block
+//! case defensively.
+//!
+//! Eviction is LRU over *leaf* nodes (interior nodes are pinned by
+//! their descendants) under a byte budget, preferring leaves no live
+//! session shares.
+
+use crate::kvcache::{BlockPool, BLOCK_TOKENS};
+use crate::radar::FrozenSegments;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// FNV/splitmix-style fold of one block's tokens. Collisions are
+/// tolerable: every hash match is verified against the stored tokens.
+fn hash_block(tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        h ^= t as u32 as u64;
+        h = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^= h >> 29;
+    }
+    h
+}
+
+struct Node {
+    /// The BLOCK_TOKENS tokens this edge covers (exact verification —
+    /// hashes only prune the search).
+    tokens: Vec<i32>,
+    hash: u64,
+    /// KV block backing these tokens; the tree owns one reference.
+    block: usize,
+    parent: usize,
+    children: Vec<usize>,
+    /// Logical timestamp of the last probe/insert touching this node.
+    last_used: u64,
+    /// Frozen Radar segment means covering the root→here path
+    /// (boundary <= depth * BLOCK_TOKENS by construction).
+    frozen: Option<Arc<FrozenSegments>>,
+}
+
+/// Result of probing the tree with a prompt.
+#[derive(Default)]
+pub struct PrefixMatch {
+    /// Matched KV blocks, root-first. NOT yet retained — seed a
+    /// `SeqCache` from them (which takes references) before any
+    /// eviction can run.
+    pub blocks: Vec<usize>,
+    /// Tokens covered (== blocks.len() * BLOCK_TOKENS).
+    pub tokens: usize,
+    /// Deepest frozen segment snapshot on the matched path, if any.
+    pub frozen: Option<Arc<FrozenSegments>>,
+}
+
+/// Radix tree over block-granular prompt prefixes.
+pub struct PrefixIndex {
+    /// Slab; index 0 is the sentinel root (empty tokens, no block).
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    /// Live nodes excluding the root.
+    n_nodes: usize,
+    /// Byte budget over cached KV blocks (plus frozen summaries).
+    budget_bytes: usize,
+    /// Bytes per KV block (from `BlockPool::block_bytes`).
+    block_bytes: usize,
+    clock: u64,
+    /// Telemetry: nodes evicted over the index lifetime.
+    pub evictions: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(budget_bytes: usize, block_bytes: usize) -> Self {
+        let root = Node {
+            tokens: Vec::new(),
+            hash: 0,
+            block: usize::MAX,
+            parent: 0,
+            children: Vec::new(),
+            last_used: 0,
+            frozen: None,
+        };
+        Self {
+            nodes: vec![Some(root)],
+            free_slots: Vec::new(),
+            n_nodes: 0,
+            budget_bytes,
+            block_bytes,
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("dangling node id")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("dangling node id")
+    }
+
+    /// Child of `id` whose edge equals `tokens` (hash-pruned, then
+    /// verified exactly).
+    fn find_child(&self, id: usize, hash: u64, tokens: &[i32]) -> Option<usize> {
+        self.node(id)
+            .children
+            .iter()
+            .copied()
+            .find(|&c| self.node(c).hash == hash && self.node(c).tokens == tokens)
+    }
+
+    /// Longest cached prefix of `prompt`, capped at `limit` tokens.
+    /// Touches every matched node's LRU timestamp.
+    pub fn probe(&mut self, prompt: &[i32], limit: usize) -> PrefixMatch {
+        self.clock += 1;
+        let clock = self.clock;
+        let max_blocks = prompt.len().min(limit) / BLOCK_TOKENS;
+        let mut m = PrefixMatch::default();
+        let mut cur = 0usize;
+        for b in 0..max_blocks {
+            let chunk = &prompt[b * BLOCK_TOKENS..(b + 1) * BLOCK_TOKENS];
+            let Some(child) = self.find_child(cur, hash_block(chunk), chunk) else {
+                break;
+            };
+            let node = self.node_mut(child);
+            node.last_used = clock;
+            m.blocks.push(node.block);
+            if let Some(f) = &node.frozen {
+                m.frozen = Some(f.clone());
+            }
+            cur = child;
+        }
+        m.tokens = m.blocks.len() * BLOCK_TOKENS;
+        m
+    }
+
+    /// Read-only variant of [`probe`](Self::probe): how many prompt
+    /// tokens would be served from cache. Used for admission ordering
+    /// without perturbing LRU state.
+    pub fn peek_match_tokens(&self, prompt: &[i32], limit: usize) -> usize {
+        let max_blocks = prompt.len().min(limit) / BLOCK_TOKENS;
+        let mut cur = 0usize;
+        let mut matched = 0usize;
+        for b in 0..max_blocks {
+            let chunk = &prompt[b * BLOCK_TOKENS..(b + 1) * BLOCK_TOKENS];
+            let Some(child) = self.find_child(cur, hash_block(chunk), chunk) else {
+                break;
+            };
+            matched += 1;
+            cur = child;
+        }
+        matched * BLOCK_TOKENS
+    }
+
+    /// Register a finished prefill: `blocks[b]` backs prompt tokens
+    /// `[b*16, (b+1)*16)`. Only `blocks.len()` full chunks of `prompt`
+    /// are inserted; new nodes retain their block in `pool`. `frozen`
+    /// (if any) attaches at the deepest node whose depth covers its
+    /// boundary. Returns the number of nodes created.
+    pub fn insert(
+        &mut self,
+        pool: &mut BlockPool,
+        prompt: &[i32],
+        blocks: &[usize],
+        frozen: Option<Arc<FrozenSegments>>,
+    ) -> usize {
+        self.clock += 1;
+        let clock = self.clock;
+        let n_blocks = blocks.len().min(prompt.len() / BLOCK_TOKENS);
+        let mut cur = 0usize;
+        let mut created = 0usize;
+        let mut depth_tokens = 0usize;
+        let mut frozen = frozen;
+        for b in 0..n_blocks {
+            let chunk = &prompt[b * BLOCK_TOKENS..(b + 1) * BLOCK_TOKENS];
+            let hash = hash_block(chunk);
+            let child = match self.find_child(cur, hash, chunk) {
+                Some(c) => c,
+                None => {
+                    pool.retain(blocks[b]);
+                    let node = Node {
+                        tokens: chunk.to_vec(),
+                        hash,
+                        block: blocks[b],
+                        parent: cur,
+                        children: Vec::new(),
+                        last_used: clock,
+                        frozen: None,
+                    };
+                    let id = match self.free_slots.pop() {
+                        Some(slot) => {
+                            self.nodes[slot] = Some(node);
+                            slot
+                        }
+                        None => {
+                            self.nodes.push(Some(node));
+                            self.nodes.len() - 1
+                        }
+                    };
+                    self.node_mut(cur).children.push(id);
+                    self.n_nodes += 1;
+                    created += 1;
+                    id
+                }
+            };
+            self.node_mut(child).last_used = clock;
+            depth_tokens += BLOCK_TOKENS;
+            // Attach the frozen summary at the shallowest node that
+            // fully covers it; anyone matching this far shares all the
+            // summarized tokens.
+            if let Some(f) = &frozen {
+                if f.boundary <= depth_tokens {
+                    let slot = &mut self.node_mut(child).frozen;
+                    let better = slot.as_ref().map_or(true, |old| f.boundary > old.boundary);
+                    if better {
+                        *slot = frozen.take();
+                    } else {
+                        frozen = None;
+                    }
+                }
+            }
+            cur = child;
+        }
+        created
+    }
+
+    /// KV bytes held by the tree (frozen summaries included).
+    pub fn bytes_used(&self) -> usize {
+        let frozen: usize = self
+            .nodes
+            .iter()
+            .flatten()
+            .filter_map(|n| n.frozen.as_ref().map(|f| f.bytes()))
+            .sum();
+        self.n_nodes * self.block_bytes + frozen
+    }
+
+    pub fn cached_blocks(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Cached blocks currently also referenced by at least one live
+    /// sequence (gauge).
+    pub fn shared_blocks(&self, pool: &BlockPool) -> usize {
+        self.nodes
+            .iter()
+            .skip(1)
+            .flatten()
+            .filter(|n| pool.ref_count(n.block) > 1)
+            .count()
+    }
+
+    /// Evict LRU leaves until `bytes_used() <= budget`. Leaves no
+    /// session shares go first; a shared leaf's eviction only drops the
+    /// tree's reference — the pool keeps the block alive until every
+    /// sequence using it exits. Returns the number of nodes evicted.
+    pub fn evict_to_budget(&mut self, pool: &mut BlockPool) -> Result<usize> {
+        let mut evicted = 0usize;
+        while self.bytes_used() > self.budget_bytes && self.n_nodes > 0 {
+            // Victim: among leaves, unshared before shared, then oldest.
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .skip(1)
+                .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+                .filter(|(_, n)| n.children.is_empty())
+                .min_by_key(|(_, n)| (pool.ref_count(n.block) > 1, n.last_used))
+                .map(|(i, _)| i);
+            let Some(id) = victim else { break };
+            self.remove_leaf(pool, id)?;
+            evicted += 1;
+        }
+        self.evictions += evicted as u64;
+        Ok(evicted)
+    }
+
+    fn remove_leaf(&mut self, pool: &mut BlockPool, id: usize) -> Result<()> {
+        let node = self.nodes[id].take().expect("dangling node id");
+        debug_assert!(node.children.is_empty(), "evicting an interior node");
+        let parent = node.parent;
+        self.node_mut(parent).children.retain(|&c| c != id);
+        pool.release(&[node.block])?;
+        self.free_slots.push(id);
+        self.n_nodes -= 1;
+        Ok(())
+    }
+
+    /// Drop every cached node (shutdown / tests).
+    pub fn clear(&mut self, pool: &mut BlockPool) -> Result<()> {
+        loop {
+            let leaf = self
+                .nodes
+                .iter()
+                .enumerate()
+                .skip(1)
+                .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+                .find(|(_, n)| n.children.is_empty())
+                .map(|(i, _)| i);
+            match leaf {
+                Some(id) => self.remove_leaf(pool, id)?,
+                None => break,
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::kvcache::SeqCache;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ffn: 16,
+            n_feat: 8,
+            max_train_len: 64,
+            vocab: 16,
+        }
+    }
+
+    fn pool() -> BlockPool {
+        BlockPool::new(&cfg(), 8, 64)
+    }
+
+    /// Build a sequence of `t` tokens whose KV content encodes the
+    /// token index (so block identity is checkable through reads).
+    fn seq_of(pool: &mut BlockPool, t: usize) -> SeqCache {
+        let mut seq = SeqCache::new(8);
+        for tok in 0..t {
+            let k: Vec<f32> = (0..16).map(|i| (tok * 100 + i) as f32).collect();
+            let f = vec![0.0f32; 32];
+            seq.append(pool, &k, &k.clone(), &f).unwrap();
+        }
+        seq
+    }
+
+    fn prompt(n: usize) -> Vec<i32> {
+        (0..n as i32).collect()
+    }
+
+    #[test]
+    fn hash_block_discriminates() {
+        let a = prompt(16);
+        let mut b = a.clone();
+        b[7] += 1;
+        assert_ne!(hash_block(&a), hash_block(&b));
+        assert_eq!(hash_block(&a), hash_block(&prompt(16)));
+    }
+
+    #[test]
+    fn probe_empty_tree_misses() {
+        let mut idx = PrefixIndex::new(1 << 20, 100);
+        let m = idx.probe(&prompt(64), 64);
+        assert_eq!(m.tokens, 0);
+        assert!(m.blocks.is_empty());
+        assert_eq!(idx.peek_match_tokens(&prompt(64), 64), 0);
+    }
+
+    #[test]
+    fn insert_then_probe_roundtrip() {
+        let mut p = pool();
+        let mut idx = PrefixIndex::new(1 << 20, p.block_bytes());
+        let seq = seq_of(&mut p, 48); // 3 full blocks
+        let toks = prompt(48);
+        let created = idx.insert(&mut p, &toks, &seq.blocks, None);
+        assert_eq!(created, 3);
+        assert_eq!(idx.cached_blocks(), 3);
+        // The tree took its own references.
+        for &b in &seq.blocks {
+            assert_eq!(p.ref_count(b), 2);
+        }
+        // Full match.
+        let m = idx.probe(&toks, usize::MAX);
+        assert_eq!(m.tokens, 48);
+        assert_eq!(m.blocks, seq.blocks);
+        // Shorter prompt matches its own prefix.
+        let m = idx.probe(&toks[..32], usize::MAX);
+        assert_eq!(m.tokens, 32);
+        // Diverging prompt matches only the shared prefix.
+        let mut fork = toks.clone();
+        fork[20] = 999;
+        let m = idx.probe(&fork, usize::MAX);
+        assert_eq!(m.tokens, 16);
+        assert_eq!(m.blocks, vec![seq.blocks[0]]);
+        // peek agrees with probe and does not touch LRU state.
+        assert_eq!(idx.peek_match_tokens(&fork, usize::MAX), 16);
+    }
+
+    #[test]
+    fn probe_respects_token_limit() {
+        let mut p = pool();
+        let mut idx = PrefixIndex::new(1 << 20, p.block_bytes());
+        let seq = seq_of(&mut p, 48);
+        let toks = prompt(48);
+        idx.insert(&mut p, &toks, &seq.blocks, None);
+        // limit 47: only 2 full blocks may be served (the engine caps at
+        // prompt_len - 1 so the last token always goes through decode).
+        let m = idx.probe(&toks, 47);
+        assert_eq!(m.tokens, 32);
+    }
+
+    #[test]
+    fn reinsert_is_idempotent() {
+        let mut p = pool();
+        let mut idx = PrefixIndex::new(1 << 20, p.block_bytes());
+        let seq_a = seq_of(&mut p, 32);
+        let seq_b = seq_of(&mut p, 32); // same tokens, different blocks
+        let toks = prompt(32);
+        assert_eq!(idx.insert(&mut p, &toks, &seq_a.blocks, None), 2);
+        assert_eq!(idx.insert(&mut p, &toks, &seq_b.blocks, None), 0);
+        assert_eq!(idx.cached_blocks(), 2);
+        // seq_b's blocks were NOT retained by the duplicate insert.
+        for &b in &seq_b.blocks {
+            assert_eq!(p.ref_count(b), 1);
+        }
+        // Probe resolves to the first insertion's blocks.
+        assert_eq!(idx.probe(&toks, usize::MAX).blocks, seq_a.blocks);
+    }
+
+    #[test]
+    fn branching_prefixes_share_the_common_part() {
+        let mut p = pool();
+        let mut idx = PrefixIndex::new(1 << 20, p.block_bytes());
+        let a: Vec<i32> = (0..32).collect();
+        let mut b = a.clone();
+        b[20] = 777; // diverges in block 1
+        let seq_a = seq_of(&mut p, 32);
+        let seq_b = seq_of(&mut p, 32);
+        idx.insert(&mut p, &a, &seq_a.blocks, None);
+        let created = idx.insert(&mut p, &b, &seq_b.blocks, None);
+        assert_eq!(created, 1, "only the diverging block is new");
+        assert_eq!(idx.cached_blocks(), 3);
+        // b's block 0 was deduplicated onto a's.
+        assert_eq!(p.ref_count(seq_b.blocks[0]), 1);
+        assert_eq!(p.ref_count(seq_b.blocks[1]), 2);
+        assert_eq!(idx.probe(&b, usize::MAX).blocks, vec![seq_a.blocks[0], seq_b.blocks[1]]);
+    }
+
+    #[test]
+    fn eviction_respects_budget_and_lru() {
+        let mut p = pool();
+        let bb = p.block_bytes();
+        let mut idx = PrefixIndex::new(2 * bb, bb); // room for 2 blocks
+        let seq = seq_of(&mut p, 48);
+        let toks = prompt(48);
+        idx.insert(&mut p, &toks, &seq.blocks, None);
+        assert_eq!(idx.bytes_used(), 3 * bb);
+        // Drop the tree's over-budget tail; the deepest leaf goes first.
+        let freed = seq.blocks.clone();
+        let n = idx.evict_to_budget(&mut p).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(idx.cached_blocks(), 2);
+        assert!(idx.bytes_used() <= 2 * bb);
+        assert_eq!(p.ref_count(freed[2]), 1, "tree ref dropped, seq ref stays");
+        // Probe now only reaches depth 2.
+        assert_eq!(idx.probe(&toks, usize::MAX).tokens, 32);
+        assert_eq!(idx.evictions, 1);
+    }
+
+    #[test]
+    fn eviction_prefers_unshared_leaves() {
+        let mut p = pool();
+        let bb = p.block_bytes();
+        let mut idx = PrefixIndex::new(bb, bb); // room for 1 block
+        // Two sibling single-block prefixes; "hot" is shared with a live
+        // sequence, "cold" is tree-only. Despite "cold" being more
+        // recently used, the unshared leaf must go first.
+        let hot_toks: Vec<i32> = (100..116).collect();
+        let cold_toks: Vec<i32> = (200..216).collect();
+        let hot_seq = seq_of(&mut p, 16);
+        let cold_seq = seq_of(&mut p, 16);
+        idx.insert(&mut p, &hot_toks, &hot_seq.blocks, None);
+        idx.insert(&mut p, &cold_toks, &cold_seq.blocks, None);
+        // A live session holds hot's block; cold's session exits.
+        let mut cold_seq = cold_seq;
+        cold_seq.free(&mut p).unwrap();
+        assert_eq!(p.ref_count(hot_seq.blocks[0]), 2);
+        // Touch cold so plain LRU would evict hot.
+        idx.probe(&cold_toks, usize::MAX);
+        idx.evict_to_budget(&mut p).unwrap();
+        assert_eq!(idx.cached_blocks(), 1);
+        assert_eq!(idx.probe(&hot_toks, usize::MAX).tokens, 16, "shared leaf kept");
+        assert_eq!(idx.probe(&cold_toks, usize::MAX).tokens, 0, "unshared leaf evicted");
+    }
+
+    #[test]
+    fn evicting_shared_leaf_never_frees_live_block() {
+        let mut p = pool();
+        let bb = p.block_bytes();
+        let mut idx = PrefixIndex::new(0, bb); // budget 0: evict everything
+        let seq = seq_of(&mut p, 32);
+        let toks = prompt(32);
+        idx.insert(&mut p, &toks, &seq.blocks, None);
+        let snapshot: Vec<f32> = seq.key(&p, 0, 0, 17).to_vec();
+        let n = idx.evict_to_budget(&mut p).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(idx.cached_blocks(), 0);
+        // The live sequence still owns its blocks and reads them intact.
+        for &b in &seq.blocks {
+            assert_eq!(p.ref_count(b), 1);
+        }
+        assert_eq!(seq.key(&p, 0, 0, 17), &snapshot[..]);
+        // Free list must not contain the live blocks: allocating all
+        // remaining capacity never hands back a live id.
+        let live: std::collections::HashSet<usize> = seq.blocks.iter().copied().collect();
+        while let Ok(id) = p.allocate() {
+            assert!(!live.contains(&id), "allocator reissued live block {id}");
+        }
+    }
+
+    #[test]
+    fn frozen_attaches_at_covering_depth() {
+        let mut p = pool();
+        let mut idx = PrefixIndex::new(1 << 20, p.block_bytes());
+        let mut seq = seq_of(&mut p, 48);
+        let toks = prompt(48);
+        // Build a real frozen snapshot: c=6 over 36 tokens -> boundary 36.
+        let mut ridx = crate::radar::RadarIndex::new(4, 8);
+        ridx.maybe_restructure(&seq, &p, 36);
+        let frozen = Arc::new(ridx.freeze(48).unwrap());
+        assert_eq!(frozen.boundary, 36);
+        idx.insert(&mut p, &toks, &seq.blocks, Some(frozen.clone()));
+        // boundary 36 needs depth >= 3 blocks; a 2-block match must NOT
+        // see it, a 3-block match must.
+        let m = idx.probe(&toks[..32], usize::MAX);
+        assert!(m.frozen.is_none(), "frozen leaked to a shallower match");
+        let m = idx.probe(&toks, usize::MAX);
+        let got = m.frozen.expect("frozen lost");
+        assert_eq!(got.boundary, 36);
+        assert_eq!(got.seg_feat(1, 2), frozen.seg_feat(1, 2));
+        seq.free(&mut p).unwrap();
+    }
+
+    #[test]
+    fn deeper_frozen_replaces_shallower() {
+        let mut p = pool();
+        let mut idx = PrefixIndex::new(1 << 20, p.block_bytes());
+        let seq = seq_of(&mut p, 48);
+        let toks = prompt(48);
+        let mut r1 = crate::radar::RadarIndex::new(4, 8);
+        r1.maybe_restructure(&seq, &p, 16); // c=4, boundary 16
+        let mut r2 = crate::radar::RadarIndex::new(4, 8);
+        r2.force_restructure(&seq, &p); // c=6, boundary 48
+        idx.insert(&mut p, &toks[..16], &seq.blocks[..1], Some(Arc::new(r1.freeze(16).unwrap())));
+        idx.insert(&mut p, &toks, &seq.blocks, Some(Arc::new(r2.freeze(48).unwrap())));
+        let m = idx.probe(&toks, usize::MAX);
+        assert_eq!(m.frozen.unwrap().boundary, 48, "deepest frozen wins");
+        // Shallow probe still sees the shallow snapshot.
+        let m = idx.probe(&toks[..16], usize::MAX);
+        assert_eq!(m.frozen.unwrap().boundary, 16);
+    }
+
+    #[test]
+    fn clear_releases_everything() {
+        let mut p = pool();
+        let mut idx = PrefixIndex::new(1 << 20, p.block_bytes());
+        let mut seq = seq_of(&mut p, 48);
+        idx.insert(&mut p, &prompt(48), &seq.blocks, None);
+        seq.free(&mut p).unwrap();
+        idx.clear(&mut p).unwrap();
+        assert_eq!(idx.cached_blocks(), 0);
+        assert_eq!(idx.bytes_used(), 0);
+        assert_eq!(p.used_blocks(), 0, "all blocks returned to the pool");
+    }
+}

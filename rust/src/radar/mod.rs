@@ -41,6 +41,36 @@ pub fn isqrt(n: usize) -> usize {
     }
 }
 
+/// Immutable snapshot of segment summaries for a token prefix,
+/// shareable across sequences (`Arc`'d into the prefix cache). Segment
+/// means are a pure function of the prefix tokens, so any sequence
+/// whose cache holds the same prefix can adopt them verbatim — the
+/// restructure skips recomputing those segments when its `c` matches.
+#[derive(Debug, Clone)]
+pub struct FrozenSegments {
+    pub lh: usize,
+    pub n_feat: usize,
+    /// Segment length the summaries were computed with.
+    pub c: usize,
+    /// Number of segments; they cover tokens [0, c * n_segs).
+    pub n_segs: usize,
+    /// Tokens covered (== c * n_segs).
+    pub boundary: usize,
+    /// Layout [lh, n_segs, n_feat].
+    seg_feats: Vec<f32>,
+}
+
+impl FrozenSegments {
+    pub fn seg_feat(&self, p: usize, s: usize) -> &[f32] {
+        &self.seg_feats[(p * self.n_segs + s) * self.n_feat..][..self.n_feat]
+    }
+
+    /// Heap footprint, for eviction accounting.
+    pub fn bytes(&self) -> usize {
+        self.seg_feats.len() * std::mem::size_of::<f32>()
+    }
+}
+
 /// Per-sequence segment index for all (layer, head) planes.
 pub struct RadarIndex {
     lh: usize,
@@ -55,6 +85,9 @@ pub struct RadarIndex {
     pub boundary: usize,
     /// Restructure count (telemetry / tests).
     pub restructures: usize,
+    /// Segments adopted from a frozen donor instead of recomputed
+    /// (telemetry / tests); reset on every restructure.
+    pub adopted_segs: usize,
 }
 
 impl RadarIndex {
@@ -67,6 +100,7 @@ impl RadarIndex {
             seg_feats: Vec::new(),
             boundary: 0,
             restructures: 0,
+            adopted_segs: 0,
         }
     }
 
@@ -78,11 +112,23 @@ impl RadarIndex {
     /// Alg. 1 line 8: called after the cache holds `t` tokens.
     /// Returns true if a restructure happened.
     pub fn maybe_restructure(&mut self, seq: &SeqCache, pool: &BlockPool, t: usize) -> bool {
+        self.maybe_restructure_with(seq, pool, t, None)
+    }
+
+    /// `maybe_restructure`, optionally adopting precomputed segment
+    /// means from a frozen donor covering a shared prefix.
+    pub fn maybe_restructure_with(
+        &mut self,
+        seq: &SeqCache,
+        pool: &BlockPool,
+        t: usize,
+        donor: Option<&FrozenSegments>,
+    ) -> bool {
         let r = isqrt(t);
         if r * r != t || r == 0 {
             return false;
         }
-        self.restructure(seq, pool, r, t);
+        self.restructure(seq, pool, r, t, donor);
         true
     }
 
@@ -90,25 +136,85 @@ impl RadarIndex {
     /// t is not a perfect square (segments cover [0, (t/c)*c), the
     /// remainder becomes the window W).
     pub fn force_restructure(&mut self, seq: &SeqCache, pool: &BlockPool) {
+        self.force_restructure_with(seq, pool, None)
+    }
+
+    /// `force_restructure` with an optional frozen donor.
+    pub fn force_restructure_with(
+        &mut self,
+        seq: &SeqCache,
+        pool: &BlockPool,
+        donor: Option<&FrozenSegments>,
+    ) {
         let t = seq.len();
         let c = isqrt(t);
         if c > 0 {
-            self.restructure(seq, pool, c, t);
+            self.restructure(seq, pool, c, t, donor);
         }
     }
 
-    /// Rebuild segments with length c covering [0, n_segs * c).
-    fn restructure(&mut self, seq: &SeqCache, pool: &BlockPool, c: usize, t: usize) {
+    /// Snapshot the first segments covering at most `max_tokens` tokens
+    /// (rounded down to whole segments). Returns None before the first
+    /// restructure or when no whole segment fits.
+    pub fn freeze(&self, max_tokens: usize) -> Option<FrozenSegments> {
+        if self.c == 0 {
+            return None;
+        }
+        let n = (max_tokens / self.c).min(self.n_segs);
+        if n == 0 {
+            return None;
+        }
+        let nf = self.n_feat;
+        let mut feats = vec![0.0f32; self.lh * n * nf];
+        for p in 0..self.lh {
+            for s in 0..n {
+                feats[(p * n + s) * nf..][..nf]
+                    .copy_from_slice(&self.seg_feats[(p * self.n_segs + s) * nf..][..nf]);
+            }
+        }
+        Some(FrozenSegments {
+            lh: self.lh,
+            n_feat: nf,
+            c: self.c,
+            n_segs: n,
+            boundary: n * self.c,
+            seg_feats: feats,
+        })
+    }
+
+    /// Rebuild segments with length c covering [0, n_segs * c). When a
+    /// donor with the *same* c is supplied, segments it covers are
+    /// copied instead of recomputed — bit-identical to recomputation
+    /// (same tokens, same summation order) but O(n_feat) per segment.
+    fn restructure(
+        &mut self,
+        seq: &SeqCache,
+        pool: &BlockPool,
+        c: usize,
+        t: usize,
+        donor: Option<&FrozenSegments>,
+    ) {
         let n_segs = t / c;
         let nf = self.n_feat;
         self.seg_feats.clear();
         self.seg_feats.resize(self.lh * n_segs * nf, 0.0);
+        // A donor only helps when its segment geometry matches exactly;
+        // anything else would change the means and break determinism.
+        let donor = donor.filter(|d| d.c == c && d.lh == self.lh && d.n_feat == nf);
+        let adoptable = donor.map_or(0, |d| d.n_segs.min(n_segs));
+        self.adopted_segs = 0;
         let n_heads = pool_heads(pool);
         let inv_c = 1.0 / c as f32;
         for p in 0..self.lh {
             let (l, h) = (p / n_heads, p % n_heads);
             for s in 0..n_segs {
                 let dst = (p * n_segs + s) * nf;
+                if s < adoptable {
+                    self.seg_feats[dst..dst + nf]
+                        .copy_from_slice(donor.unwrap().seg_feat(p, s));
+                    self.adopted_segs += 1;
+                    continue;
+                }
                 for tok in s * c..(s + 1) * c {
                     let f = seq.feat(pool, l, h, tok);
                     let acc = &mut self.seg_feats[dst..dst + nf];
@@ -154,28 +260,31 @@ fn pool_heads(pool: &BlockPool) -> usize {
 }
 
 /// Indices of the top-k values (k <= scores.len()), unordered.
-/// O(n log k) via a small binary heap of (score, idx).
+///
+/// O(n) expected via `select_nth_unstable_by` partial selection.
+/// Ties are broken deterministically by index: among equal scores the
+/// *lowest* indices win, so the result is a pure function of the input
+/// regardless of selection-internals ordering.
 pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
     if k == 0 || scores.is_empty() {
         return Vec::new();
     }
     let k = k.min(scores.len());
     // f32 isn't Ord; map to an order-preserving i64 via the sign-folded
     // bit pattern (total order; NaN-free inputs by construction).
-    let mut heap: BinaryHeap<Reverse<(i64, usize)>> = BinaryHeap::with_capacity(k + 1);
     let to_ord = |x: f32| -> i64 {
         let b = x.to_bits() as i32;
-        (if b >= 0 { b as i64 } else { i32::MIN as i64 - b as i64 }) as i64
+        if b >= 0 { b as i64 } else { i32::MIN as i64 - b as i64 }
     };
-    for (i, &s) in scores.iter().enumerate() {
-        heap.push(Reverse((to_ord(s), i)));
-        if heap.len() > k {
-            heap.pop();
-        }
+    let mut keyed: Vec<(i64, usize)> =
+        scores.iter().enumerate().map(|(i, &s)| (to_ord(s), i)).collect();
+    if k < keyed.len() {
+        // Descending score, ascending index on ties; everything before
+        // rank k is strictly "better or equal with a lower index".
+        keyed.select_nth_unstable_by(k - 1, |a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        keyed.truncate(k);
     }
-    heap.into_iter().map(|Reverse((_, i))| i).collect()
+    keyed.into_iter().map(|(_, i)| i).collect()
 }
 
 /// Exact segment scores (the Fig. 5 "exact top-k" ablation):
@@ -364,6 +473,105 @@ mod tests {
             gs2.sort_by(f32::total_cmp);
             ws2.sort_by(f32::total_cmp);
             assert_eq!(gs2, ws2, "scores {scores:?} k {k}");
+        }
+    }
+
+    #[test]
+    fn top_k_ties_break_by_lowest_index() {
+        // Three-way tie at 1.0 and a two-way tie at 2.0: the winners are
+        // fully determined — both 2.0s plus the *earliest* 1.0.
+        let scores = vec![1.0f32, 2.0, 1.0, 2.0, 1.0];
+        let mut got = top_k_indices(&scores, 3);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 3]);
+        // All-equal input: the first k indices, exactly.
+        let flat = vec![0.5f32; 6];
+        let mut got = top_k_indices(&flat, 4);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        // Ties spanning the selection boundary with negatives.
+        let scores = vec![-1.0f32, -1.0, -1.0, -2.0];
+        let mut got = top_k_indices(&scores, 2);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1]);
+    }
+
+    #[test]
+    fn top_k_full_and_oversized_k() {
+        let scores = vec![3.0f32, 1.0, 2.0];
+        let mut got = top_k_indices(&scores, 3);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2]);
+        let mut got = top_k_indices(&scores, 99);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2]);
+        assert!(top_k_indices(&scores, 0).is_empty());
+        assert!(top_k_indices(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn freeze_truncates_to_whole_segments() {
+        let (pool, seq) = build_seq(64);
+        let mut idx = RadarIndex::new(4, 6);
+        idx.maybe_restructure(&seq, &pool, 64); // c=8, 8 segs
+        // 50 tokens -> 6 whole segments (48 tokens).
+        let f = idx.freeze(50).unwrap();
+        assert_eq!((f.c, f.n_segs, f.boundary), (8, 6, 48));
+        for p in 0..4 {
+            for s in 0..6 {
+                assert_eq!(f.seg_feat(p, s), idx.seg_feat(p, s));
+            }
+        }
+        assert_eq!(f.bytes(), 4 * 6 * 6 * 4);
+        // Fewer tokens than one segment -> nothing to freeze.
+        assert!(idx.freeze(7).is_none());
+        // Unstructured index -> nothing to freeze.
+        assert!(RadarIndex::new(4, 6).freeze(64).is_none());
+    }
+
+    #[test]
+    fn restructure_adopts_donor_segments_bitwise() {
+        let (pool, seq) = build_seq(100);
+        // Donor indexed the full 100 tokens at c=10.
+        let mut donor_idx = RadarIndex::new(4, 6);
+        donor_idx.maybe_restructure(&seq, &pool, 100);
+        assert_eq!(donor_idx.c, 10);
+        let frozen = donor_idx.freeze(80).unwrap(); // 8 segments
+        // A fresh index restructuring at the same c adopts the shared
+        // segments and recomputes the rest; result must be bit-identical
+        // to a donor-free restructure.
+        let mut warm = RadarIndex::new(4, 6);
+        warm.maybe_restructure_with(&seq, &pool, 100, Some(&frozen));
+        assert_eq!(warm.adopted_segs, 4 * 8);
+        let mut cold = RadarIndex::new(4, 6);
+        cold.maybe_restructure(&seq, &pool, 100);
+        assert_eq!(cold.adopted_segs, 0);
+        for p in 0..4 {
+            for s in 0..10 {
+                assert_eq!(
+                    warm.seg_feat(p, s),
+                    cold.seg_feat(p, s),
+                    "plane {p} seg {s} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn restructure_ignores_mismatched_donor() {
+        let (pool, seq) = build_seq(100);
+        let mut donor_idx = RadarIndex::new(4, 6);
+        donor_idx.maybe_restructure(&seq, &pool, 81); // c=9 — wrong geometry
+        let frozen = donor_idx.freeze(81).unwrap();
+        let mut idx = RadarIndex::new(4, 6);
+        idx.maybe_restructure_with(&seq, &pool, 100, Some(&frozen));
+        assert_eq!(idx.adopted_segs, 0, "c mismatch must disable adoption");
+        assert_eq!(idx.c, 10);
+        // Still correct despite the rejected donor.
+        let mut cold = RadarIndex::new(4, 6);
+        cold.maybe_restructure(&seq, &pool, 100);
+        for p in 0..4 {
+            assert_eq!(idx.seg_feat(p, 3), cold.seg_feat(p, 3));
         }
     }
 

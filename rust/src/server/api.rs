@@ -101,6 +101,9 @@ pub struct CompletionRequest {
     /// Stop at the first byte of this string (byte-level tokenizer).
     pub stop: Option<i32>,
     pub stream: bool,
+    /// Shared-prefix KV reuse for this request (`"cache": "off"` or
+    /// `false` opts out; default on, subject to the server-wide knob).
+    pub cache: bool,
 }
 
 impl CompletionRequest {
@@ -190,7 +193,20 @@ impl CompletionRequest {
                 ApiError::invalid_request("'stream' must be a boolean")
             })?,
         };
-        Ok(Self { prompt, max_tokens, temperature, greedy, seed, stop, stream })
+        let cache = match j.get("cache") {
+            None => true,
+            Some(v) => match (v.as_bool(), v.as_str()) {
+                (Some(b), _) => b,
+                (_, Some("on")) => true,
+                (_, Some("off")) => false,
+                _ => {
+                    return Err(ApiError::invalid_request(
+                        "'cache' must be a boolean or \"on\"/\"off\"",
+                    ))
+                }
+            },
+        };
+        Ok(Self { prompt, max_tokens, temperature, greedy, seed, stop, stream, cache })
     }
 
     /// Lower into an engine request, checking engine-level limits.
@@ -210,6 +226,7 @@ impl CompletionRequest {
         req.greedy = self.greedy;
         req.seed = self.seed;
         req.stop_token = self.stop;
+        req.prefix_cache = self.cache;
         Ok(req)
     }
 }
@@ -223,6 +240,7 @@ fn usage_json(u: &Usage) -> Json {
         .with("prompt_tokens", u.prompt_tokens)
         .with("completion_tokens", u.completion_tokens)
         .with("total_tokens", u.total_tokens())
+        .with("cached_tokens", u.cached_tokens)
         .with("prefill_ms", u.prefill_ms)
         .with("decode_ms", u.decode_ms)
 }
@@ -308,6 +326,7 @@ mod tests {
         assert_eq!(r.prompt, "hello");
         assert_eq!(r.max_tokens, 64);
         assert!(!r.stream);
+        assert!(r.cache, "prefix cache defaults on");
         assert_eq!(r.temperature, None);
         assert_eq!(r.seed, None);
     }
@@ -346,6 +365,22 @@ mod tests {
     }
 
     #[test]
+    fn cache_field_accepts_bool_and_switch_strings() {
+        assert!(!parse(r#"{"prompt":"a","cache":false}"#).unwrap().cache);
+        assert!(parse(r#"{"prompt":"a","cache":true}"#).unwrap().cache);
+        assert!(!parse(r#"{"prompt":"a","cache":"off"}"#).unwrap().cache);
+        assert!(parse(r#"{"prompt":"a","cache":"on"}"#).unwrap().cache);
+        assert_eq!(parse(r#"{"prompt":"a","cache":"maybe"}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":"a","cache":1}"#).unwrap_err().status, 400);
+
+        let cfg = ServingConfig::default();
+        let off = parse(r#"{"prompt":"a","cache":"off"}"#).unwrap();
+        assert!(!off.to_gen_request(&cfg).unwrap().prefix_cache);
+        let on = parse(r#"{"prompt":"a"}"#).unwrap();
+        assert!(on.to_gen_request(&cfg).unwrap().prefix_cache);
+    }
+
+    #[test]
     fn gen_request_respects_max_seq_len() {
         let cfg = ServingConfig::default();
         let r = parse(r#"{"prompt":"ab","max_tokens":16}"#).unwrap();
@@ -375,7 +410,13 @@ mod tests {
 
     #[test]
     fn completion_and_chunk_shapes() {
-        let u = Usage { prompt_tokens: 3, completion_tokens: 2, prefill_ms: 1.0, decode_ms: 2.0 };
+        let u = Usage {
+            prompt_tokens: 3,
+            completion_tokens: 2,
+            cached_tokens: 1,
+            prefill_ms: 1.0,
+            decode_ms: 2.0,
+        };
         let c = completion_json("cmpl-1", "sm", 123, "hi", "length", &u);
         let j = Json::parse(&c.to_string()).unwrap();
         assert_eq!(j.get("object").unwrap().as_str(), Some("text_completion"));
@@ -384,6 +425,7 @@ mod tests {
             Some("hi")
         );
         assert_eq!(j.path("usage.total_tokens").unwrap().as_usize(), Some(5));
+        assert_eq!(j.path("usage.cached_tokens").unwrap().as_usize(), Some(1));
 
         let mid = chunk_json("cmpl-1", "sm", 123, "h", None, None);
         let j = Json::parse(&mid.to_string()).unwrap();

@@ -522,6 +522,7 @@ fn handle_generate_legacy(stream: &mut TcpStream, body: &[u8], ctx: &ServerCtx) 
     let body = Json::obj()
         .with("text", tokenizer::decode(&out.tokens))
         .with("tokens", out.tokens.len())
+        .with("cached_tokens", usage.cached_tokens)
         .with("prefill_ms", usage.prefill_ms)
         .with("decode_ms", usage.decode_ms);
     write_response(stream, 200, "application/json", body.to_string().as_bytes(), true)?;

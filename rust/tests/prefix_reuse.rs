@@ -1,0 +1,207 @@
+//! Shared-prefix KV reuse integration: the pool/tree lifecycle without
+//! artifacts, plus (artifact-gated) end-to-end warm starts — a second
+//! session sharing a long prompt prefix prefills only its suffix and
+//! still generates byte-identical tokens, and the eviction budget never
+//! frees blocks a live sequence reads.
+
+use radar_serve::config::{ArtifactPaths, ModelConfig, PolicyKind, ServingConfig};
+use radar_serve::engine::{Engine, GenRequest};
+use radar_serve::kvcache::{BlockPool, SeqCache};
+use radar_serve::model::tokenizer;
+use radar_serve::prefix::PrefixIndex;
+use radar_serve::runtime::Runtime;
+use std::sync::Arc;
+
+// -----------------------------------------------------------------
+// Pool + tree lifecycle (no artifacts needed)
+// -----------------------------------------------------------------
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "t".into(),
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        d_head: 4,
+        d_ffn: 16,
+        n_feat: 8,
+        max_train_len: 64,
+        vocab: 256,
+    }
+}
+
+/// Deterministic per-token K/V/feature rows in the [L*H, d] source
+/// layout `SeqCache::append` takes.
+fn tok_kvf(c: &ModelConfig, i: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let lh = c.n_layers * c.n_heads;
+    let k: Vec<f32> = (0..lh * c.d_head).map(|j| (i * 100 + j) as f32).collect();
+    let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+    let f: Vec<f32> = (0..lh * c.n_feat).map(|j| (i * 7 + j) as f32).collect();
+    (k, v, f)
+}
+
+#[test]
+fn tree_keeps_donor_blocks_alive_and_seeds_identical_reads() {
+    let c = tiny_cfg();
+    let mut pool = BlockPool::new(&c, c.n_feat, 64);
+    let mut tree = PrefixIndex::new(1 << 20, pool.block_bytes());
+
+    // Donor session prefills 32 tokens (2 full blocks) and registers
+    // them, then exits.
+    let prompt: Vec<i32> = (0..40).map(|t| (t % 7) as i32).collect();
+    let mut donor = SeqCache::new(c.n_feat);
+    for i in 0..32 {
+        let (k, v, f) = tok_kvf(&c, i);
+        donor.append(&mut pool, &k, &v, &f).unwrap();
+    }
+    tree.insert(&mut pool, &prompt[..32], &donor.blocks[..2], None);
+    assert_eq!(tree.cached_blocks(), 2);
+    donor.free(&mut pool).unwrap();
+    assert_eq!(pool.used_blocks(), 2, "tree must keep the blocks alive");
+
+    // A warm session matching the prefix seeds from the tree and reads
+    // exactly what the donor wrote.
+    let m = tree.probe(&prompt, prompt.len() - 1);
+    assert_eq!(m.tokens, 32);
+    let mut warm = SeqCache::seed_from_blocks(&mut pool, c.n_feat, &m.blocks);
+    assert_eq!(warm.len(), 32);
+    assert_eq!(warm.shared_blocks(&pool), 2);
+    let (k5, _, _) = tok_kvf(&c, 5);
+    let p = c.n_heads + 1; // plane (l=1, h=1)
+    assert_eq!(warm.key(&pool, 1, 1, 5), &k5[p * c.d_head..(p + 1) * c.d_head]);
+
+    // Decoding past the shared prefix allocates fresh blocks; the
+    // shared ones stay shared.
+    for i in 32..40 {
+        let (k, v, f) = tok_kvf(&c, i);
+        warm.append(&mut pool, &k, &v, &f).unwrap();
+    }
+    assert_eq!(warm.len(), 40);
+    assert_eq!(warm.shared_blocks(&pool), 2);
+
+    // Dropping the whole tree while the warm session is live only
+    // drops the tree's references — the reader's view is intact.
+    tree.clear(&mut pool).unwrap();
+    assert_eq!(tree.cached_blocks(), 0);
+    let (k9, _, _) = tok_kvf(&c, 9);
+    assert_eq!(warm.key(&pool, 0, 1, 9), &k9[c.d_head..2 * c.d_head]);
+    warm.free(&mut pool).unwrap();
+    assert_eq!(pool.used_blocks(), 0, "all blocks reclaimed at the end");
+}
+
+// -----------------------------------------------------------------
+// End-to-end (artifact-gated, same pattern as engine_e2e.rs)
+// -----------------------------------------------------------------
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let paths = ArtifactPaths::new("artifacts", "sm");
+    if !paths.manifest().exists() {
+        eprintln!("skipping prefix-reuse e2e tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Runtime::load(paths).unwrap()))
+}
+
+#[test]
+fn warm_second_session_prefills_only_its_suffix() {
+    let Some(rt) = runtime() else { return };
+    // 86 shared prompt tokens (byte tokenizer) = 5 full shared blocks.
+    let shared = "the stream carries old light towards dawn. ".repeat(2);
+    let p1 = format!("{shared}red fox jumps");
+    let p2 = format!("{shared}blue owls wait");
+    let mk = |cache_on: bool| {
+        let mut cfg = ServingConfig::default();
+        cfg.policy = PolicyKind::Radar;
+        cfg.prefix_cache = cache_on;
+        Engine::new(rt.clone(), cfg).unwrap()
+    };
+
+    let mut e = mk(true);
+    let id1 = e.add(GenRequest::new(tokenizer::encode(&p1), 8)).unwrap();
+    e.run_to_completion().unwrap();
+    let _ = id1;
+    let prefill_cold = e.metrics.counter("prefill_tokens");
+    assert_eq!(e.metrics.counter("prefix_hits"), 0);
+    assert_eq!(e.metrics.counter("prefix_misses"), 1);
+
+    let t2 = tokenizer::encode(&p2);
+    let total2 = t2.len() - 1; // last prompt token decodes, not prefills
+    let id2 = e.add(GenRequest::new(t2.clone(), 8)).unwrap();
+    // While the warm sequence lives, its seeded blocks are shared with
+    // the tree.
+    assert!(
+        e.prefix.shared_blocks(&e.pool) >= 4,
+        "expected >=4 shared blocks, saw {}",
+        e.prefix.shared_blocks(&e.pool)
+    );
+    let results = e.run_to_completion().unwrap();
+    let warm_tokens = results.iter().find(|r| r.id == id2).unwrap().tokens.clone();
+
+    assert_eq!(e.metrics.counter("prefix_hits"), 1);
+    assert_eq!(e.metrics.histogram_count("prefill_tokens_saved"), 1);
+    let cached = e.metrics.histogram_mean("prefill_tokens_saved") as usize;
+    assert!(cached >= 4 * 16, "expected a >=4-block prefix hit, got {cached} tokens");
+    let prefill_warm = (e.metrics.counter("prefill_tokens") - prefill_cold) as usize;
+    assert_eq!(prefill_warm, total2 - cached, "warm prefill must cover only the suffix");
+
+    // Byte-identical output vs a cold engine with the cache disabled.
+    let mut cold = mk(false);
+    let idc = cold.add(GenRequest::new(t2, 8)).unwrap();
+    let rc = cold.run_to_completion().unwrap();
+    let cold_tokens = rc.iter().find(|r| r.id == idc).unwrap().tokens.clone();
+    assert_eq!(warm_tokens, cold_tokens, "warm start changed sampled tokens");
+    assert_eq!(
+        cold.metrics.counter("prefix_hits") + cold.metrics.counter("prefix_misses"),
+        0,
+        "disabled cache must not probe"
+    );
+}
+
+#[test]
+fn per_request_opt_out_skips_the_cache() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = ServingConfig::default();
+    cfg.policy = PolicyKind::Vanilla;
+    let mut e = Engine::new(rt, cfg).unwrap();
+    let prompt = tokenizer::encode(&"old light towards dawn. ".repeat(4));
+    e.add(GenRequest::new(prompt.clone(), 4)).unwrap();
+    e.run_to_completion().unwrap();
+
+    let mut req = GenRequest::new(prompt, 4);
+    req.prefix_cache = false; // the API's `cache: off`
+    e.add(req).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(e.metrics.counter("prefix_hits"), 0, "opted-out request still probed");
+}
+
+#[test]
+fn eviction_stays_under_budget_without_corrupting_live_sequences() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = ServingConfig::default();
+    cfg.policy = PolicyKind::Vanilla;
+    // 1 MiB holds only a handful of sm blocks, so disjoint prompts
+    // force LRU leaf eviction on every registration.
+    cfg.prefix_cache_mb = 1;
+    let mut e = Engine::new(rt, cfg).unwrap();
+    let budget = 1usize << 20;
+    let stems = ["alpha ", "bravo ", "delta ", "omega "];
+    for stem in stems {
+        let prompt = tokenizer::encode(&stem.repeat(14)); // ~84 tokens, 5 blocks
+        let id = e.add(GenRequest::new(prompt, 4)).unwrap();
+        // Eviction runs inside registration while this sequence is
+        // live; a freed live block would corrupt generation or trip
+        // the pool's double-free check before these asserts.
+        let results = e.run_to_completion().unwrap();
+        let r = results.iter().find(|r| r.id == id).unwrap();
+        assert!(r.ppl().is_finite() && r.logprobs.len() == 4);
+        assert!(
+            e.prefix.bytes_used() <= budget,
+            "tree over budget: {} > {budget}",
+            e.prefix.bytes_used()
+        );
+    }
+    assert!(e.prefix.evictions > 0, "budget pressure never evicted");
+    // Every per-sequence block was reclaimed; only the (under-budget)
+    // tree retention remains.
+    assert_eq!(e.pool.used_blocks(), e.prefix.cached_blocks());
+}
