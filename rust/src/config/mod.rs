@@ -2,6 +2,7 @@
 //! serving-time knobs. Loaded from the artifact manifest plus optional
 //! JSON config files / CLI overrides.
 
+use crate::faults::FaultPlan;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
@@ -152,6 +153,24 @@ pub struct ServingConfig {
     pub temperature: f32,
     pub greedy: bool,
     pub seed: u64,
+    /// KV-pressure preemption: how many times one request may be
+    /// preempted-and-requeued before it fails with a capacity error.
+    pub max_preemptions: u32,
+    /// Default per-request wall-clock deadline, submit -> last token
+    /// (0 = no deadline; requests may override via `timeout_ms`).
+    pub timeout_ms: u64,
+    /// Deadline on queue wait alone: a request still pending after this
+    /// long times out without ever being admitted (0 = no limit).
+    pub queue_timeout_ms: u64,
+    /// HTTP keep-alive: idle read timeout between requests on one
+    /// connection (0 = wait forever).
+    pub keep_alive_idle_ms: u64,
+    /// Server shutdown-race backstop: how long a connection thread
+    /// waits for the engine loop to acknowledge a submit
+    /// (0 = wait forever).
+    pub reply_timeout_ms: u64,
+    /// Deterministic fault injection (tests / chaos harness only).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServingConfig {
@@ -171,6 +190,12 @@ impl Default for ServingConfig {
             temperature: 1.0,
             greedy: true,
             seed: 0,
+            max_preemptions: 3,
+            timeout_ms: 0,
+            queue_timeout_ms: 0,
+            keep_alive_idle_ms: 30_000,
+            reply_timeout_ms: 30_000,
+            faults: None,
         }
     }
 }
@@ -199,6 +224,12 @@ impl ServingConfig {
             "temperature" => self.temperature = val.parse()?,
             "greedy" => self.greedy = val == "true" || val == "1",
             "seed" => self.seed = val.parse()?,
+            "max_preemptions" => self.max_preemptions = val.parse()?,
+            "timeout_ms" => self.timeout_ms = val.parse()?,
+            "queue_timeout_ms" => self.queue_timeout_ms = val.parse()?,
+            "keep_alive_idle_ms" => self.keep_alive_idle_ms = val.parse()?,
+            "reply_timeout_ms" => self.reply_timeout_ms = val.parse()?,
+            "faults" => self.faults = Some(FaultPlan::parse(val)?),
             other => return Err(anyhow!("unknown serving option '{other}'")),
         }
         Ok(())
@@ -312,6 +343,30 @@ mod tests {
         s.apply_override("prefix_cache_mb", "128").unwrap();
         assert_eq!(s.prefix_cache_mb, 128);
         assert!(s.apply_override("prefix_cache_mb", "lots").is_err());
+    }
+
+    #[test]
+    fn robustness_overrides() {
+        let mut s = ServingConfig::default();
+        assert_eq!(s.max_preemptions, 3);
+        assert_eq!(s.timeout_ms, 0, "deadlines are off by default");
+        assert_eq!(s.queue_timeout_ms, 0);
+        assert_eq!(s.keep_alive_idle_ms, 30_000);
+        assert_eq!(s.reply_timeout_ms, 30_000);
+        assert!(s.faults.is_none());
+        s.apply_override("max_preemptions", "1").unwrap();
+        s.apply_override("timeout_ms", "5000").unwrap();
+        s.apply_override("queue_timeout_ms", "250").unwrap();
+        s.apply_override("keep_alive_idle_ms", "0").unwrap();
+        s.apply_override("reply_timeout_ms", "100").unwrap();
+        s.apply_override("faults", "alloc@3:1,slow@5x10").unwrap();
+        assert_eq!(s.max_preemptions, 1);
+        assert_eq!(s.timeout_ms, 5000);
+        assert_eq!(s.queue_timeout_ms, 250);
+        assert_eq!(s.keep_alive_idle_ms, 0);
+        assert_eq!(s.reply_timeout_ms, 100);
+        assert_eq!(s.faults.as_ref().map(|f| f.events.len()), Some(2));
+        assert!(s.apply_override("faults", "bogus@1").is_err());
     }
 
     #[test]

@@ -62,6 +62,17 @@ pub fn admission_order(costs: &[(SeqId, usize)]) -> Vec<SeqId> {
     sorted.into_iter().map(|(id, _)| id).collect()
 }
 
+/// Which active sequence to preempt under KV pressure, given
+/// `(seq, generated_tokens)` pairs: the one with the least decode
+/// progress (its lost work is the cheapest to replay through the
+/// prefix-cache-warm re-prefill), ties broken toward the youngest
+/// (highest id — oldest requests are closest to their deadline).
+pub fn preemption_victim(candidates: impl Iterator<Item = (SeqId, usize)>) -> Option<SeqId> {
+    candidates
+        .min_by_key(|&(id, progress)| (progress, std::cmp::Reverse(id)))
+        .map(|(id, _)| id)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,6 +126,17 @@ mod tests {
         let costs = vec![(1, 512), (2, 512), (3, 16), (4, 128)];
         assert_eq!(admission_order(&costs), vec![3, 4, 1, 2]);
         assert!(admission_order(&[]).is_empty());
+    }
+
+    #[test]
+    fn victim_is_lowest_progress_then_youngest() {
+        // Least progress loses, regardless of id order.
+        let v = preemption_victim(vec![(1, 5), (2, 2), (3, 9)].into_iter());
+        assert_eq!(v, Some(2));
+        // Ties go to the youngest (highest id).
+        let v = preemption_victim(vec![(1, 3), (2, 3), (3, 7)].into_iter());
+        assert_eq!(v, Some(2));
+        assert_eq!(preemption_victim(std::iter::empty()), None);
     }
 
     #[test]

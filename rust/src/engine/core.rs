@@ -10,14 +10,25 @@
 //!   layer l before the layer-l gather, so each layer runs
 //!   `qkv -> select -> gather -> attn_mlp`; embedding lookup and the
 //!   final head are host-side (verified against goldens).
+//!
+//! Fault isolation: every per-sequence step body (prefill, fused row
+//! staging/finish, radar advance) runs under `catch_unwind`, so a panic
+//! or error in one sequence finishes only that session with an `Error`
+//! event and frees its blocks. KV exhaustion is a scheduling event, not
+//! a failure: the lowest-progress sequence is preempted and requeued
+//! through admission (re-prefilling warm via the prefix cache), bounded
+//! by `max_preemptions`. Deadlines (`timeout_ms`, `queue_timeout_ms`)
+//! are enforced by a per-step sweep. `fail_all` remains only for true
+//! process shutdown.
 
-use super::batcher::{admission_order, group_by_bucket};
+use super::batcher::{admission_order, group_by_bucket, preemption_victim};
 use super::request::{
     FinishReason, GenRequest, GenResult, PolicyHolder, SeqId, Sequence, SessionEvent,
     SessionHandle, SubmitError, Usage,
 };
 use crate::config::ServingConfig;
-use crate::kvcache::{BlockPool, SeqCache, BLOCK_TOKENS};
+use crate::faults::ActiveFaults;
+use crate::kvcache::{BlockPool, CacheExhausted, SeqCache, BLOCK_TOKENS};
 use crate::metrics::Metrics;
 use crate::model::{embed, head, log_prob};
 use crate::policy::{SelectCtx, Selection};
@@ -26,19 +37,93 @@ use crate::runtime::Runtime;
 use crate::util::threadpool::Channel;
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const NEG: f32 = -1e30;
+
+/// What a queue entry carries: a fresh request, or a preempted
+/// sequence waiting to re-prefill its prompt + generated tokens.
+enum PendingWork {
+    Fresh(GenRequest),
+    Resume(Box<Sequence>),
+}
 
 /// A submitted-but-not-yet-admitted session (the bounded queue entry).
 struct PendingSession {
     id: SeqId,
-    req: GenRequest,
-    events: Channel<SessionEvent>,
+    work: PendingWork,
+    /// `None` only for preempted legacy (`add`) sequences.
+    events: Option<Channel<SessionEvent>>,
     cancel: Arc<AtomicBool>,
+    /// Original submit time (TTFT anchor; survives preemption).
     queued_at: Instant,
+    /// When this entry joined the queue (queue-wait deadline anchor).
+    enqueued_at: Instant,
+    deadline: Option<Instant>,
+}
+
+impl PendingSession {
+    /// Tokens this entry would prefill if admitted now (the prompt,
+    /// plus already-generated tokens for preempted sequences).
+    fn prefill_tokens(&self) -> &[i32] {
+        match &self.work {
+            PendingWork::Fresh(req) => &req.prompt,
+            PendingWork::Resume(seq) => &seq.tokens,
+        }
+    }
+
+    fn wants_prefix_cache(&self) -> bool {
+        match &self.work {
+            PendingWork::Fresh(req) => req.prefix_cache,
+            PendingWork::Resume(seq) => seq.prefix_cache,
+        }
+    }
+
+    /// Usage reported on a terminal event delivered from the queue
+    /// (preempted sequences keep their partial-progress accounting).
+    fn terminal_usage(&self) -> Usage {
+        match &self.work {
+            PendingWork::Fresh(_) => Usage::default(),
+            PendingWork::Resume(seq) => seq.usage(),
+        }
+    }
+}
+
+/// One sequence's slice of a fused batch output.
+struct FusedRowOut<'a> {
+    logits: &'a [f32],
+    k_new: &'a [f32],
+    v_new: &'a [f32],
+    feat_new: &'a [f32],
+    probs: &'a [f32],
+    s: usize,
+}
+
+/// Resolve a request deadline: the request's own `timeout_ms` wins
+/// (`Some(0)` opts out entirely), else the engine default if nonzero.
+fn effective_deadline(req_ms: Option<u64>, default_ms: u64, from: Instant) -> Option<Instant> {
+    let ms = match req_ms {
+        Some(0) => return None,
+        Some(ms) => ms,
+        None if default_ms > 0 => default_ms,
+        None => return None,
+    };
+    Some(from + Duration::from_millis(ms))
+}
+
+/// Best-effort panic payload formatting (payloads are `&str` or
+/// `String` in practice).
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
 }
 
 pub struct Engine {
@@ -52,8 +137,13 @@ pub struct Engine {
     seqs: BTreeMap<SeqId, Sequence>,
     /// Bounded admission queue; `submit` rejects once it is full so the
     /// HTTP layer can answer 429 instead of buffering unboundedly.
+    /// (Preemption requeues bypass the cap: they were already admitted.)
     pending: VecDeque<PendingSession>,
     next_id: SeqId,
+    /// Scripted fault injection (empty outside chaos tests).
+    faults: ActiveFaults,
+    /// 1-based step counter; the fault plan's clock.
+    step_no: u64,
     omega: Arc<xla::PjRtBuffer>,
     // Reused step staging buffers (values stay bounded; masked slots
     // carry stale-but-finite data — see DESIGN.md §9 L3).
@@ -76,6 +166,7 @@ impl Engine {
         let pool = BlockPool::new(&rt.config, cfg.n_feat, blocks);
         let prefix = PrefixIndex::new(cfg.prefix_cache_mb << 20, pool.block_bytes());
         let omega = rt.omega(cfg.n_feat)?;
+        let faults = ActiveFaults::new(cfg.faults.clone());
         Ok(Self {
             rt,
             cfg,
@@ -85,6 +176,8 @@ impl Engine {
             seqs: BTreeMap::new(),
             pending: VecDeque::new(),
             next_id: 1,
+            faults,
+            step_no: 0,
             omega,
             buf_k: Vec::new(),
             buf_v: Vec::new(),
@@ -139,12 +232,16 @@ impl Engine {
         let events: Channel<SessionEvent> = Channel::new();
         let cancel = Arc::new(AtomicBool::new(false));
         let handle = SessionHandle::new(id, events.clone(), cancel.clone());
+        let now = Instant::now();
+        let deadline = effective_deadline(req.timeout_ms, self.cfg.timeout_ms, now);
         self.pending.push_back(PendingSession {
             id,
-            req,
-            events,
+            work: PendingWork::Fresh(req),
+            events: Some(events),
             cancel,
-            queued_at: Instant::now(),
+            queued_at: now,
+            enqueued_at: now,
+            deadline,
         });
         self.metrics.inc("requests_submitted");
         self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
@@ -180,9 +277,10 @@ impl Engine {
             .pending
             .iter()
             .map(|p| {
-                let total = p.req.prompt.len().saturating_sub(1);
-                let cached = if reuse_ok && p.req.prefix_cache {
-                    self.prefix.peek_match_tokens(&p.req.prompt, total)
+                let toks = p.prefill_tokens();
+                let total = toks.len().saturating_sub(1);
+                let cached = if reuse_ok && p.wants_prefix_cache() {
+                    self.prefix.peek_match_tokens(toks, total)
                 } else {
                     0
                 };
@@ -197,44 +295,89 @@ impl Engine {
                 .pending
                 .iter()
                 .position(|p| p.id == id)
-                .expect("pending entry vanished");
-            let p = self.pending.remove(pos).unwrap();
+                .expect("admission order ids come from the pending queue, unchanged since");
+            let p = self
+                .pending
+                .remove(pos)
+                .expect("position found by the search on this queue just above");
             self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
             if p.cancel.load(std::sync::atomic::Ordering::Acquire) {
-                // Cancelled while queued: never allocated anything
-                // (and never consumed an admission slot).
-                p.events.send(SessionEvent::Done {
-                    usage: Usage::default(),
-                    finish: FinishReason::Cancelled,
-                });
-                p.events.close();
+                // Cancelled while queued: holds no blocks (fresh ones
+                // never allocated; preempted ones already freed).
+                if let Some(ev) = &p.events {
+                    ev.send(SessionEvent::Done {
+                        usage: p.terminal_usage(),
+                        finish: FinishReason::Cancelled,
+                    });
+                    ev.close();
+                }
                 self.metrics.inc("requests_cancelled");
                 continue;
             }
-            self.metrics.observe_us("queue_wait", p.queued_at.elapsed().as_secs_f64() * 1e6);
-            let mc = self.rt.config.clone();
-            let mut seq = Sequence::new(p.id, p.req, &self.cfg, mc.n_layers, mc.n_heads);
-            seq.emitter = Some(p.events.clone());
-            seq.cancel = p.cancel;
-            seq.queued_at = p.queued_at;
-            let t0 = Instant::now();
-            if !seq.tokens.is_empty() {
-                self.seed_from_prefix(&mut seq);
-                if let Err(e) = self.prefill(&mut seq) {
-                    seq.cache.free(&mut self.pool).expect("kv block double-free");
-                    p.events.send(SessionEvent::Error(format!("prefill failed: {e}")));
-                    p.events.close();
-                    self.metrics.inc("requests_failed");
-                    continue;
+            match p.work {
+                PendingWork::Fresh(req) => {
+                    self.metrics
+                        .observe_us("queue_wait", p.enqueued_at.elapsed().as_secs_f64() * 1e6);
+                    let mc = self.rt.config.clone();
+                    let mut seq = Sequence::new(p.id, req, &self.cfg, mc.n_layers, mc.n_heads);
+                    seq.emitter = p.events;
+                    seq.cancel = p.cancel;
+                    seq.queued_at = p.queued_at;
+                    seq.deadline = p.deadline;
+                    let t0 = Instant::now();
+                    let Some(mut seq) = self.prefill_contained(seq) else { continue };
+                    self.register_prefix(&seq);
+                    seq.prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    self.metrics.inc("requests_admitted");
+                    self.metrics.observe_us("prefill", seq.prefill_ms * 1e3);
+                    self.seqs.insert(seq.id, seq);
+                    slots -= 1;
                 }
-                self.register_prefix(&seq);
+                PendingWork::Resume(seq) => {
+                    let t0 = Instant::now();
+                    let Some(mut seq) = self.prefill_contained(*seq) else { continue };
+                    if let Some(t) = seq.preempted_at.take() {
+                        self.metrics
+                            .observe_us("preempt_recovery", t.elapsed().as_secs_f64() * 1e6);
+                    }
+                    seq.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    self.seqs.insert(seq.id, seq);
+                    slots -= 1;
+                }
             }
-            seq.prompt_len = seq.tokens.len();
-            seq.prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-            self.metrics.inc("requests_admitted");
-            self.metrics.observe_us("prefill", seq.prefill_ms * 1e3);
-            self.seqs.insert(seq.id, seq);
-            slots -= 1;
+        }
+    }
+
+    /// Run seed + prefill for one sequence with containment: an error
+    /// or panic finishes only this sequence, and KV exhaustion preempts
+    /// it (requeue-and-retry). Returns the sequence on success; `None`
+    /// means it was consumed by one of those paths.
+    fn prefill_contained(&mut self, mut seq: Sequence) -> Option<Sequence> {
+        if seq.tokens.is_empty() {
+            return Some(seq);
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            self.seed_from_prefix(&mut seq);
+            self.prefill(&mut seq)
+        }));
+        match r {
+            Ok(Ok(())) => Some(seq),
+            Ok(Err(e)) => {
+                if e.downcast_ref::<CacheExhausted>().is_some() {
+                    self.preempt(seq, "prefill");
+                } else {
+                    self.finish_with_error(seq, &format!("prefill failed: {e}"), true);
+                }
+                None
+            }
+            Err(p) => {
+                self.finish_with_error(
+                    seq,
+                    &format!("prefill panicked: {}", panic_msg(p)),
+                    true,
+                );
+                None
+            }
         }
     }
 
@@ -305,6 +448,141 @@ impl Engine {
             .set_gauge("prefix_shared_blocks", self.prefix.shared_blocks(&self.pool) as f64);
     }
 
+    // -----------------------------------------------------------------
+    // Fault handling: containment, preemption, deadlines
+    // -----------------------------------------------------------------
+
+    /// Terminal failure for one sequence: free its blocks, emit
+    /// `Error`, count it. `contained` marks faults the engine absorbed
+    /// (panics / step errors) as opposed to resource verdicts
+    /// (preemption budget exhausted).
+    fn finish_with_error(&mut self, mut seq: Sequence, msg: &str, contained: bool) {
+        if contained {
+            self.metrics.inc("contained_errors");
+        }
+        if let Err(e) = seq.cache.free(&mut self.pool) {
+            debug_assert!(false, "kv release after failure: {e}");
+            self.metrics.inc("kv_release_errors");
+        }
+        if let Some(em) = &seq.emitter {
+            em.send(SessionEvent::Error(msg.to_string()));
+            em.close();
+        }
+        self.metrics.inc("requests_failed");
+    }
+
+    /// Free this sequence's blocks and requeue it through admission: it
+    /// re-prefills its prompt + generated tokens (warm via the prefix
+    /// cache) and resumes decoding where it left off. After
+    /// `max_preemptions` strikes the request fails with a capacity
+    /// error (503) instead.
+    fn preempt(&mut self, mut seq: Sequence, phase: &str) {
+        if let Err(e) = seq.cache.free(&mut self.pool) {
+            debug_assert!(false, "kv release during preemption: {e}");
+            self.metrics.inc("kv_release_errors");
+        }
+        seq.preemptions += 1;
+        self.metrics.inc("preemptions");
+        if seq.preemptions > self.cfg.max_preemptions {
+            let msg = format!(
+                "capacity: no kv blocks after {} preemptions ({phase}); retry later",
+                seq.preemptions
+            );
+            self.finish_with_error(seq, &msg, false);
+            return;
+        }
+        // The policy replays deterministically from a fresh state
+        // during re-prefill; the sampler is NOT reset — it continues
+        // from the last emitted token.
+        let mc = self.rt.config.clone();
+        seq.policy = PolicyHolder::fresh(seq.id, &self.cfg, mc.n_layers, mc.n_heads);
+        seq.cached_tokens = 0;
+        seq.preempted_at = Some(Instant::now());
+        let entry = PendingSession {
+            id: seq.id,
+            events: seq.emitter.clone(),
+            cancel: seq.cancel.clone(),
+            queued_at: seq.queued_at,
+            enqueued_at: Instant::now(),
+            deadline: seq.deadline,
+            work: PendingWork::Resume(Box::new(seq)),
+        };
+        self.pending.push_back(entry);
+        self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
+    }
+
+    /// A decode-time allocation failed for `seq` (already detached from
+    /// the active set). Pick the global victim — lowest progress,
+    /// youngest on ties — among all active sequences including `seq`.
+    /// When the victim is someone else, `seq` stays active and retries
+    /// the same token next step: the failed step advanced neither its
+    /// input stream nor its sampler.
+    fn handle_kv_pressure(&mut self, seq: Sequence, phase: &str) {
+        let victim = preemption_victim(
+            self.seqs
+                .iter()
+                .filter(|(_, s)| !s.done)
+                .map(|(&i, s)| (i, s.generated))
+                .chain(std::iter::once((seq.id, seq.generated))),
+        )
+        .unwrap_or(seq.id);
+        if victim == seq.id {
+            self.preempt(seq, phase);
+        } else {
+            self.seqs.insert(seq.id, seq);
+            let v = self.seqs.remove(&victim).expect("victim chosen from the active set");
+            self.preempt(v, phase);
+        }
+    }
+
+    /// Finish active sequences and queued sessions whose deadlines
+    /// expired (plus queue entries over the queue-wait cap). Active
+    /// expiries keep their partial tokens: `reap_finished` delivers
+    /// `Done { finish: Timeout }`.
+    fn sweep_deadlines(&mut self) {
+        if self.cfg.queue_timeout_ms == 0
+            && self.pending.iter().all(|p| p.deadline.is_none())
+            && self.seqs.values().all(|s| s.deadline.is_none())
+        {
+            return;
+        }
+        let now = Instant::now();
+        let expired: Vec<SeqId> = self
+            .seqs
+            .iter()
+            .filter(|(_, s)| !s.done && s.deadline.is_some_and(|d| now >= d))
+            .map(|(&i, _)| i)
+            .collect();
+        for id in expired {
+            let seq = self.seqs.get_mut(&id).expect("expired id collected from the map above");
+            seq.done = true;
+            seq.finish = Some(FinishReason::Timeout);
+            self.metrics.inc("timeouts");
+        }
+        let queue_cap = self.cfg.queue_timeout_ms;
+        let mut i = 0;
+        while i < self.pending.len() {
+            let p = &self.pending[i];
+            let hit_deadline = p.deadline.is_some_and(|d| now >= d);
+            let hit_queue_cap = queue_cap > 0
+                && now.duration_since(p.enqueued_at) >= Duration::from_millis(queue_cap);
+            if !(hit_deadline || hit_queue_cap) {
+                i += 1;
+                continue;
+            }
+            let p = self.pending.remove(i).expect("index bounded by the loop condition");
+            if let Some(ev) = &p.events {
+                ev.send(SessionEvent::Done {
+                    usage: p.terminal_usage(),
+                    finish: FinishReason::Timeout,
+                });
+                ev.close();
+            }
+            self.metrics.inc("timeouts");
+        }
+        self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
+    }
+
     /// Drop sequences whose cancel flag flipped, freeing their KV
     /// blocks immediately (before any decode work this step).
     fn sweep_cancelled(&mut self) {
@@ -315,7 +593,8 @@ impl Engine {
             .map(|(&i, _)| i)
             .collect();
         for id in cancelled {
-            let mut seq = self.seqs.remove(&id).unwrap();
+            let mut seq =
+                self.seqs.remove(&id).expect("cancelled id collected from the live map above");
             seq.cache.free(&mut self.pool).expect("kv block double-free");
             seq.finish = Some(FinishReason::Cancelled);
             if let Some(em) = &seq.emitter {
@@ -339,7 +618,8 @@ impl Engine {
             .map(|(&i, _)| i)
             .collect();
         for id in done {
-            let mut seq = self.seqs.remove(&id).unwrap();
+            let mut seq =
+                self.seqs.remove(&id).expect("finished id collected from the live map above");
             seq.cache.free(&mut self.pool).expect("kv block double-free");
             if let Some(em) = &seq.emitter {
                 em.send(SessionEvent::Done {
@@ -353,17 +633,20 @@ impl Engine {
     }
 
     /// Terminal shutdown path: fail every queued and active session and
-    /// release all cache blocks (used when the engine loop hits an
-    /// unrecoverable error or the server stops).
+    /// release all cache blocks. This is NOT the per-sequence error
+    /// path — step faults are contained — it is reserved for true
+    /// process shutdown (server stop, unrecoverable engine state).
     pub fn fail_all(&mut self, msg: &str) {
         for p in self.pending.drain(..) {
-            p.events.send(SessionEvent::Error(msg.to_string()));
-            p.events.close();
+            if let Some(ev) = &p.events {
+                ev.send(SessionEvent::Error(msg.to_string()));
+                ev.close();
+            }
             self.metrics.inc("requests_failed");
         }
         let ids: Vec<SeqId> = self.seqs.keys().copied().collect();
         for id in ids {
-            let mut seq = self.seqs.remove(&id).unwrap();
+            let mut seq = self.seqs.remove(&id).expect("id taken from the key set just above");
             seq.cache.free(&mut self.pool).expect("kv block double-free");
             if let Some(em) = &seq.emitter {
                 em.send(SessionEvent::Error(msg.to_string()));
@@ -389,7 +672,6 @@ impl Engine {
             self.prefill(&mut seq)?;
             self.register_prefix(&seq);
         }
-        seq.prompt_len = seq.tokens.len();
         seq.prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.metrics.inc("requests_admitted");
         self.metrics.observe_us("prefill", seq.prefill_ms * 1e3);
@@ -491,16 +773,27 @@ impl Engine {
     // Decode: public step API
     // -----------------------------------------------------------------
 
-    /// One engine step: observe cancellations (freeing blocks before
-    /// any decode work), admit queued sessions, advance every runnable
-    /// sequence by one token, then deliver terminal events. Fused
-    /// sequences are batched; radar sequences run per-layer.
+    /// One engine step: observe cancellations and expired deadlines
+    /// (freeing blocks before any decode work), admit queued sessions,
+    /// advance every runnable sequence by one token, then deliver
+    /// terminal events. Fused sequences are batched; radar sequences
+    /// run per-layer. Per-sequence faults are contained here; `Err`
+    /// from this method means the engine itself is broken.
     pub fn step(&mut self) -> Result<StepStats> {
         let mut stats = StepStats::default();
+        self.step_no += 1;
+        let step_no = self.step_no;
+        if let Some(ms) = self.faults.take_slow(step_no) {
+            std::thread::sleep(Duration::from_millis(ms));
+            self.metrics.inc("injected_slow_steps");
+        }
         self.sweep_cancelled();
+        self.sweep_deadlines();
         self.admit_pending();
         let ids = self.active_ids();
         if ids.is_empty() {
+            // Still deliver terminal events (e.g. queue-less timeouts).
+            self.reap_finished();
             self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
             return Ok(stats);
         }
@@ -514,15 +807,38 @@ impl Engine {
             }
         }
         if !fused.is_empty() {
-            stats.merge(self.step_fused_batch(&fused)?);
+            stats.merge(self.step_fused_batch(&fused, step_no)?);
         }
         for id in radar {
-            let mut seq = self.seqs.remove(&id).unwrap();
-            let r = self.advance_radar(&mut seq);
-            self.seqs.insert(id, seq);
-            r?;
-            stats.decoded += 1;
-            stats.dispatches += 2 * self.rt.config.n_layers;
+            // May have been preempted as another row's KV victim.
+            let Some(mut seq) = self.seqs.remove(&id) else { continue };
+            let inject_panic = self.faults.take_panic(step_no, id);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                if inject_panic {
+                    panic!("injected step panic (seq {id})");
+                }
+                self.advance_radar(&mut seq, step_no)
+            }));
+            match r {
+                Ok(Ok(())) => {
+                    self.seqs.insert(id, seq);
+                    stats.decoded += 1;
+                    stats.dispatches += 2 * self.rt.config.n_layers;
+                }
+                Ok(Err(e)) if e.downcast_ref::<CacheExhausted>().is_some() => {
+                    self.handle_kv_pressure(seq, "decode");
+                }
+                Ok(Err(e)) => {
+                    self.finish_with_error(seq, &format!("decode failed: {e}"), true);
+                }
+                Err(p) => {
+                    self.finish_with_error(
+                        seq,
+                        &format!("decode panicked: {}", panic_msg(p)),
+                        true,
+                    );
+                }
+            }
         }
         self.reap_finished();
         self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
@@ -546,28 +862,30 @@ impl Engine {
     // Fused pipeline (batched)
     // -----------------------------------------------------------------
 
-    fn step_fused_batch(&mut self, ids: &[SeqId]) -> Result<StepStats> {
+    fn step_fused_batch(&mut self, ids: &[SeqId], step_no: u64) -> Result<StepStats> {
         let mut stats = StepStats::default();
         // Compute selections + needed S per sequence.
         let mut selections: BTreeMap<SeqId, Selection> = BTreeMap::new();
         let mut needs: Vec<(SeqId, usize)> = Vec::new();
         for &id in ids {
-            let mut seq = self.seqs.remove(&id).unwrap();
-            let sel = {
-                let ctx = SelectCtx {
-                    pool: &self.pool,
-                    seq: &seq.cache,
-                    t: seq.cache.len(),
-                    cfg: &self.cfg,
-                };
-                match &mut seq.policy {
-                    PolicyHolder::Fused(p) => p.select(&ctx),
-                    PolicyHolder::Radar(_) => unreachable!(),
+            let Some(mut seq) = self.seqs.remove(&id) else { continue };
+            match catch_unwind(AssertUnwindSafe(|| self.select_fused(&mut seq))) {
+                Ok(sel) => {
+                    needs.push((id, sel.max_len().max(1)));
+                    selections.insert(id, sel);
+                    self.seqs.insert(id, seq);
                 }
-            };
-            needs.push((id, sel.max_len().max(1)));
-            selections.insert(id, sel);
-            self.seqs.insert(id, seq);
+                Err(p) => {
+                    self.finish_with_error(
+                        seq,
+                        &format!("selection panicked: {}", panic_msg(p)),
+                        true,
+                    );
+                }
+            }
+        }
+        if needs.is_empty() {
+            return Ok(stats);
         }
         let s_buckets: Vec<usize> = {
             let mut b: Vec<usize> = self
@@ -588,24 +906,67 @@ impl Engine {
         let groups = group_by_bucket(&needs, &s_buckets, self.cfg.max_batch);
         for g in groups {
             let b_need = g.seq_ids.len();
-            let meta = self
-                .rt
-                .registry
-                .resolve_decode(b_need, g.bucket_s, self.cfg.n_feat)?
-                .clone();
-            self.dispatch_fused_group(&g.seq_ids, &meta, &selections)?;
-            stats.decoded += b_need;
-            stats.dispatches += 1;
+            let meta = match self.rt.registry.resolve_decode(b_need, g.bucket_s, self.cfg.n_feat)
+            {
+                Ok(m) => m.clone(),
+                Err(e) => {
+                    // No compiled artifact serves this group (e.g. a
+                    // selection outgrew every S bucket): fail its
+                    // members, leave other groups running.
+                    let msg = format!("decode dispatch unavailable: {e}");
+                    self.fail_group(&g.seq_ids, &msg);
+                    continue;
+                }
+            };
+            match self.dispatch_fused_group(&g.seq_ids, &meta, &selections, step_no) {
+                Ok(decoded) => {
+                    stats.decoded += decoded;
+                    stats.dispatches += 1;
+                }
+                Err(e) => {
+                    // The shared dispatch failed: every row in this
+                    // group is suspect, but other groups keep running.
+                    let msg = format!("decode dispatch failed: {e}");
+                    self.fail_group(&g.seq_ids, &msg);
+                }
+            }
         }
         Ok(stats)
     }
 
+    /// Fail every still-active member of one batch group.
+    fn fail_group(&mut self, ids: &[SeqId], msg: &str) {
+        for &id in ids {
+            let Some(seq) = self.seqs.remove(&id) else { continue };
+            self.finish_with_error(seq, msg, true);
+        }
+    }
+
+    /// Run the policy's per-step selection for one fused sequence.
+    fn select_fused(&self, seq: &mut Sequence) -> Selection {
+        let ctx = SelectCtx {
+            pool: &self.pool,
+            seq: &seq.cache,
+            t: seq.cache.len(),
+            cfg: &self.cfg,
+        };
+        match &mut seq.policy {
+            PolicyHolder::Fused(p) => p.select(&ctx),
+            PolicyHolder::Radar(_) => unreachable!("radar sequences use the per-layer pipeline"),
+        }
+    }
+
+    /// Dispatch one compatible batch group; returns how many rows
+    /// finished. A fault in one row (staging panic, append failure, KV
+    /// exhaustion) masks or preempts only that sequence — the batch
+    /// rows are independent, so survivors' outputs are unchanged.
     fn dispatch_fused_group(
         &mut self,
         ids: &[SeqId],
         meta: &crate::runtime::ArtifactMeta,
         selections: &BTreeMap<SeqId, Selection>,
-    ) -> Result<()> {
+        step_no: u64,
+    ) -> Result<usize> {
         let mc = self.rt.config.clone();
         let (l, h, dh) = (mc.n_layers, mc.n_heads, mc.d_head);
         let (b, s) = (meta.batch, meta.len);
@@ -616,33 +977,37 @@ impl Engine {
         self.buf_mask.resize(b * row_mask, 0.0);
         let mut tokens = vec![0i32; b];
         let mut pos = vec![0i32; b];
-        // Stage rows.
+        let mut alive = vec![true; ids.len()];
+        // Stage rows. A failed row becomes a fully masked ghost row
+        // (same treatment as batch padding), so the dispatch stays
+        // valid for the others.
         for (bi, &id) in ids.iter().enumerate() {
-            let seq = &self.seqs[&id];
-            let sel = &selections[&id];
-            let t = seq.cache.len();
-            tokens[bi] = seq.next_input().ok_or_else(|| anyhow!("seq {id} has no input"))?;
-            pos[bi] = t as i32;
-            for li in 0..l {
-                for hi in 0..h {
-                    let p = li * h + hi;
-                    let plane_sel = &sel.per_plane[p];
-                    let koff = bi * row_kv + (li * h + hi) * s * dh;
-                    seq.cache.gather_plane(
-                        &self.pool,
-                        li,
-                        hi,
-                        plane_sel,
-                        &mut self.buf_k[koff..koff + s * dh],
-                        &mut self.buf_v[koff..koff + s * dh],
-                    );
-                    let moff = bi * row_mask + p * s;
-                    let mrow = &mut self.buf_mask[moff..moff + s];
-                    let n_valid = plane_sel.len();
-                    mrow[..n_valid].fill(0.0);
-                    mrow[n_valid..].fill(NEG);
+            let inject_panic = self.faults.take_panic(step_no, id);
+            let staged = catch_unwind(AssertUnwindSafe(|| {
+                if inject_panic {
+                    panic!("injected step panic (seq {id})");
+                }
+                self.stage_fused_row(id, bi, meta, &selections[&id])
+            }));
+            let fail = match staged {
+                Ok(Ok((tok, p))) => {
+                    tokens[bi] = tok;
+                    pos[bi] = p;
+                    None
+                }
+                Ok(Err(e)) => Some(format!("decode staging failed: {e}")),
+                Err(p) => Some(format!("decode staging panicked: {}", panic_msg(p))),
+            };
+            if let Some(msg) = fail {
+                alive[bi] = false;
+                self.buf_mask[bi * row_mask..(bi + 1) * row_mask].fill(NEG);
+                if let Some(seq) = self.seqs.remove(&id) {
+                    self.finish_with_error(seq, &msg, true);
                 }
             }
+        }
+        if alive.iter().all(|a| !*a) {
+            return Ok(0);
         }
         // Pad ghost rows (bi >= ids.len()): fully masked.
         for bi in ids.len()..b {
@@ -652,42 +1017,125 @@ impl Engine {
         let out = self.metrics.time("decode_dispatch", || {
             self.rt.decode(meta, &self.omega, &tokens, &pos, &self.buf_k, &self.buf_v, &self.buf_mask)
         })?;
-        let dispatch_share = t_dispatch.elapsed().as_secs_f64() * 1e3 / ids.len() as f64;
+        let n_alive = alive.iter().filter(|a| **a).count();
+        let dispatch_share = t_dispatch.elapsed().as_secs_f64() * 1e3 / n_alive as f64;
         // Distribute outputs.
         let kv_row = l * h * dh;
         let feat_row = l * h * meta.n_feat;
         let probs_row = l * h * (s + 1);
+        let mut decoded = 0usize;
         for (bi, &id) in ids.iter().enumerate() {
-            let mut seq = self.seqs.remove(&id).unwrap();
+            if !alive[bi] {
+                continue;
+            }
+            // May have been preempted as an earlier row's KV victim.
+            let Some(mut seq) = self.seqs.remove(&id) else { continue };
             let t0 = Instant::now();
-            let logits = &out.logits[bi * mc.vocab..(bi + 1) * mc.vocab];
-            seq.cache.append(
-                &mut self.pool,
-                &out.k_new[bi * kv_row..(bi + 1) * kv_row],
-                &out.v_new[bi * kv_row..(bi + 1) * kv_row],
-                &out.feat_new[bi * feat_row..(bi + 1) * feat_row],
-            )?;
-            {
-                let ctx = SelectCtx {
-                    pool: &self.pool,
-                    seq: &seq.cache,
-                    t: seq.cache.len(),
-                    cfg: &self.cfg,
-                };
-                if let PolicyHolder::Fused(p) = &mut seq.policy {
-                    p.on_decode(
-                        &ctx,
-                        &selections[&id],
-                        &out.probs[bi * probs_row..(bi + 1) * probs_row],
-                        s,
+            let inject_alloc = self.faults.take_alloc(step_no, id);
+            let row = FusedRowOut {
+                logits: &out.logits[bi * mc.vocab..(bi + 1) * mc.vocab],
+                k_new: &out.k_new[bi * kv_row..(bi + 1) * kv_row],
+                v_new: &out.v_new[bi * kv_row..(bi + 1) * kv_row],
+                feat_new: &out.feat_new[bi * feat_row..(bi + 1) * feat_row],
+                probs: &out.probs[bi * probs_row..(bi + 1) * probs_row],
+                s,
+            };
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                self.finish_fused_row(&mut seq, &row, &selections[&id], inject_alloc)
+            }));
+            match r {
+                Ok(Ok(())) => {
+                    seq.decode_ms += dispatch_share + t0.elapsed().as_secs_f64() * 1e3;
+                    self.seqs.insert(id, seq);
+                    decoded += 1;
+                }
+                Ok(Err(e)) if e.downcast_ref::<CacheExhausted>().is_some() => {
+                    self.handle_kv_pressure(seq, "decode");
+                }
+                Ok(Err(e)) => {
+                    self.finish_with_error(seq, &format!("decode failed: {e}"), true);
+                }
+                Err(p) => {
+                    self.finish_with_error(
+                        seq,
+                        &format!("decode panicked: {}", panic_msg(p)),
+                        true,
                     );
                 }
             }
-            self.finish_token(&mut seq, logits);
-            seq.decode_ms += dispatch_share + t0.elapsed().as_secs_f64() * 1e3;
-            self.seqs.insert(id, seq);
         }
-        self.metrics.add("tokens_decoded", ids.len() as u64);
+        self.metrics.add("tokens_decoded", decoded as u64);
+        Ok(decoded)
+    }
+
+    /// Stage one batch row's input token, position, gathered K/V and
+    /// mask into the shared buffers; returns (token, position).
+    fn stage_fused_row(
+        &mut self,
+        id: SeqId,
+        bi: usize,
+        meta: &crate::runtime::ArtifactMeta,
+        sel: &Selection,
+    ) -> Result<(i32, i32)> {
+        let (l, h, dh) =
+            (self.rt.config.n_layers, self.rt.config.n_heads, self.rt.config.d_head);
+        let s = meta.len;
+        let row_kv = l * h * s * dh;
+        let row_mask = l * h * s;
+        let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("seq {id} not active"))?;
+        let t = seq.cache.len();
+        let tok = seq.next_input().ok_or_else(|| anyhow!("seq {id} has no input"))?;
+        for li in 0..l {
+            for hi in 0..h {
+                let p = li * h + hi;
+                let plane_sel = &sel.per_plane[p];
+                let koff = bi * row_kv + p * s * dh;
+                seq.cache.gather_plane(
+                    &self.pool,
+                    li,
+                    hi,
+                    plane_sel,
+                    &mut self.buf_k[koff..koff + s * dh],
+                    &mut self.buf_v[koff..koff + s * dh],
+                );
+                let moff = bi * row_mask + p * s;
+                let mrow = &mut self.buf_mask[moff..moff + s];
+                let n_valid = plane_sel.len();
+                mrow[..n_valid].fill(0.0);
+                mrow[n_valid..].fill(NEG);
+            }
+        }
+        Ok((tok, t as i32))
+    }
+
+    /// Consume one batch row's output: append KV, feed the policy,
+    /// sample/emit the token. `inject_alloc` simulates KV exhaustion
+    /// before any state is touched (fault-injection hook).
+    fn finish_fused_row(
+        &mut self,
+        seq: &mut Sequence,
+        row: &FusedRowOut,
+        sel: &Selection,
+        inject_alloc: bool,
+    ) -> Result<()> {
+        if inject_alloc {
+            return Err(CacheExhausted {
+                blocks: self.pool.capacity(),
+                tokens: self.pool.capacity() * BLOCK_TOKENS,
+            }
+            .into());
+        }
+        seq.cache.append(&mut self.pool, row.k_new, row.v_new, row.feat_new)?;
+        let ctx = SelectCtx {
+            pool: &self.pool,
+            seq: &seq.cache,
+            t: seq.cache.len(),
+            cfg: &self.cfg,
+        };
+        if let PolicyHolder::Fused(p) = &mut seq.policy {
+            p.on_decode(&ctx, sel, row.probs, row.s);
+        }
+        self.finish_token(seq, row.logits);
         Ok(())
     }
 
@@ -747,7 +1195,7 @@ impl Engine {
     // Per-layer (Radar) pipeline
     // -----------------------------------------------------------------
 
-    fn advance_radar(&mut self, seq: &mut Sequence) -> Result<()> {
+    fn advance_radar(&mut self, seq: &mut Sequence, step_no: u64) -> Result<()> {
         let pos = seq.cache.len();
         let tok = match seq.next_input() {
             Some(t) => t,
@@ -756,6 +1204,13 @@ impl Engine {
                 return Ok(());
             }
         };
+        if self.faults.take_alloc(step_no, seq.id) {
+            return Err(CacheExhausted {
+                blocks: self.pool.capacity(),
+                tokens: self.pool.capacity() * BLOCK_TOKENS,
+            }
+            .into());
+        }
         let t0 = Instant::now();
         let logits = self.radar_step_logits(seq, tok, pos)?;
         self.finish_token(seq, &logits);

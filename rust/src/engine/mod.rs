@@ -6,7 +6,7 @@ mod batcher;
 mod core;
 mod request;
 
-pub use batcher::{group_by_bucket, BatchGroup};
+pub use batcher::{group_by_bucket, preemption_victim, BatchGroup};
 pub use core::{Engine, StepStats};
 pub use request::{
     FinishReason, GenRequest, GenResult, SeqId, Sequence, SessionEvent, SessionHandle,

@@ -37,6 +37,10 @@ pub struct GenRequest {
     /// it). Both this and the engine-wide `ServingConfig::prefix_cache`
     /// must be on for the prompt to be seeded from the prefix index.
     pub prefix_cache: bool,
+    /// Wall-clock deadline from submit to last token. `None` falls back
+    /// to the engine's `ServingConfig::timeout_ms`; `Some(0)` opts out
+    /// even when the engine has a default deadline.
+    pub timeout_ms: Option<u64>,
 }
 
 impl GenRequest {
@@ -50,6 +54,7 @@ impl GenRequest {
             greedy: None,
             seed: None,
             prefix_cache: true,
+            timeout_ms: None,
         }
     }
 
@@ -97,6 +102,9 @@ pub enum FinishReason {
     Stop,
     /// The client cancelled; KV blocks were freed immediately.
     Cancelled,
+    /// The request's deadline (or the queue-wait deadline) expired
+    /// before generation finished; already-produced tokens stand.
+    Timeout,
 }
 
 impl FinishReason {
@@ -105,6 +113,7 @@ impl FinishReason {
             Self::Length => "length",
             Self::Stop => "stop",
             Self::Cancelled => "cancelled",
+            Self::Timeout => "timeout",
         }
     }
 }
@@ -242,6 +251,26 @@ pub enum PolicyHolder {
     Radar(RadarPolicy),
 }
 
+impl PolicyHolder {
+    /// Build the configured policy for sequence `id`. Deterministic in
+    /// (cfg, id): a preempted sequence rebuilds an identical policy and
+    /// replays its prefill to the same state.
+    pub fn fresh(id: SeqId, cfg: &ServingConfig, n_layers: usize, n_heads: usize) -> Self {
+        let radar = |variant| {
+            PolicyHolder::Radar(RadarPolicy::new(
+                variant, n_layers, n_heads, cfg.n_feat, cfg.seed ^ id,
+            ))
+        };
+        match cfg.policy {
+            PolicyKind::Radar => radar(RadarVariant::Approx),
+            PolicyKind::RadarExact => radar(RadarVariant::Exact),
+            PolicyKind::RadarRandom => radar(RadarVariant::Random),
+            PolicyKind::RadarLowest => radar(RadarVariant::Lowest),
+            _ => PolicyHolder::Fused(crate::policy::make_policy(cfg, n_layers * n_heads)),
+        }
+    }
+}
+
 pub struct Sequence {
     pub id: SeqId,
     pub cache: SeqCache,
@@ -269,25 +298,18 @@ pub struct Sequence {
     /// Submit time (queue wait + prefill count toward TTFT).
     pub queued_at: Instant,
     pub last_token_at: Option<Instant>,
+    /// Absolute wall-clock deadline; the per-step sweep finishes the
+    /// sequence with `FinishReason::Timeout` once it passes.
+    pub deadline: Option<Instant>,
+    /// How many times KV pressure has preempted this sequence.
+    pub preemptions: u32,
+    /// Set while requeued after preemption (recovery-latency anchor).
+    pub preempted_at: Option<Instant>,
 }
 
 impl Sequence {
     pub fn new(id: SeqId, req: GenRequest, cfg: &ServingConfig, n_layers: usize, n_heads: usize) -> Self {
-        let policy = match cfg.policy {
-            PolicyKind::Radar => PolicyHolder::Radar(RadarPolicy::new(
-                RadarVariant::Approx, n_layers, n_heads, cfg.n_feat, cfg.seed ^ id,
-            )),
-            PolicyKind::RadarExact => PolicyHolder::Radar(RadarPolicy::new(
-                RadarVariant::Exact, n_layers, n_heads, cfg.n_feat, cfg.seed ^ id,
-            )),
-            PolicyKind::RadarRandom => PolicyHolder::Radar(RadarPolicy::new(
-                RadarVariant::Random, n_layers, n_heads, cfg.n_feat, cfg.seed ^ id,
-            )),
-            PolicyKind::RadarLowest => PolicyHolder::Radar(RadarPolicy::new(
-                RadarVariant::Lowest, n_layers, n_heads, cfg.n_feat, cfg.seed ^ id,
-            )),
-            _ => PolicyHolder::Fused(crate::policy::make_policy(cfg, n_layers * n_heads)),
-        };
+        let policy = PolicyHolder::fresh(id, cfg, n_layers, n_heads);
         let temperature = req.temperature.unwrap_or(cfg.temperature);
         let greedy = req.greedy.unwrap_or(cfg.greedy);
         // A request-supplied seed must be reproducible verbatim across
@@ -298,13 +320,14 @@ impl Sequence {
             Some(s) => s,
             None => cfg.seed ^ (id << 1),
         };
+        let prompt_len = req.prompt.len();
         Self {
             id,
             cache: SeqCache::new(cfg.n_feat),
             policy,
             sampler: Sampler::new(sampler_seed, temperature, greedy),
             tokens: req.prompt,
-            prompt_len: 0, // set after prefill
+            prompt_len,
             teacher: req.teacher,
             stop_token: req.stop_token,
             max_new_tokens: req.max_new_tokens,
@@ -320,6 +343,9 @@ impl Sequence {
             cancel: Arc::new(AtomicBool::new(false)),
             queued_at: Instant::now(),
             last_token_at: None,
+            deadline: None,
+            preemptions: 0,
+            preempted_at: None,
         }
     }
 
@@ -430,5 +456,6 @@ mod tests {
         assert_eq!(FinishReason::Length.as_str(), "length");
         assert_eq!(FinishReason::Stop.as_str(), "stop");
         assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+        assert_eq!(FinishReason::Timeout.as_str(), "timeout");
     }
 }

@@ -1,0 +1,269 @@
+//! Deterministic fault injection for chaos testing the engine.
+//!
+//! A `FaultPlan` is a list of scripted events keyed by the engine's
+//! 1-based step counter: allocation failures (surface as KV-cache
+//! exhaustion and exercise the preemption path), step panics (exercise
+//! per-sequence containment), and slow steps (exercise deadlines).
+//! Plans are either written out explicitly (`alloc@5:2,panic@9`) or
+//! generated from a seed (`seeded:42:100:6`) via `util::prng`, so a
+//! failing chaos run reproduces bit-for-bit from its seed.
+
+use crate::util::prng::SplitMix64;
+use anyhow::{anyhow, bail, Result};
+
+/// What to inject. `seq: None` targets whichever sequence is queried
+/// first at the scripted step (deterministic: queries follow id order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail the next KV block allocation for the matching sequence.
+    AllocFail { seq: Option<u64> },
+    /// Panic inside the matching sequence's step body.
+    StepPanic { seq: Option<u64> },
+    /// Sleep this long before the step runs (deadline pressure).
+    SlowStep { ms: u64 },
+}
+
+/// One scripted event, armed at a 1-based engine step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub step: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse a plan spec.
+    ///
+    /// Grammar (comma-separated events):
+    ///   alloc@STEP[:SEQ]   fail a block allocation at STEP
+    ///   panic@STEP[:SEQ]   panic in a sequence's step body at STEP
+    ///   slow@STEPxMS       sleep MS milliseconds before STEP
+    ///
+    /// Or a whole-spec seeded form: `seeded:SEED:HORIZON:COUNT`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            bail!("empty fault spec");
+        }
+        if let Some(rest) = spec.strip_prefix("seeded:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            if parts.len() != 3 {
+                bail!("seeded spec wants seeded:SEED:HORIZON:COUNT, got {spec:?}");
+            }
+            let seed: u64 = parts[0].parse().map_err(|_| anyhow!("bad seed {:?}", parts[0]))?;
+            let horizon: u64 =
+                parts[1].parse().map_err(|_| anyhow!("bad horizon {:?}", parts[1]))?;
+            let count: usize =
+                parts[2].parse().map_err(|_| anyhow!("bad count {:?}", parts[2]))?;
+            return Ok(Self::seeded(seed, horizon, count));
+        }
+        let mut events = Vec::new();
+        for ev in spec.split(',') {
+            let ev = ev.trim();
+            let (kind, rest) = ev
+                .split_once('@')
+                .ok_or_else(|| anyhow!("fault event {ev:?} missing '@STEP'"))?;
+            let parse_step = |s: &str| -> Result<u64> {
+                let step: u64 = s.parse().map_err(|_| anyhow!("bad step in {ev:?}"))?;
+                if step == 0 {
+                    bail!("fault steps are 1-based, got 0 in {ev:?}");
+                }
+                Ok(step)
+            };
+            let event = match kind {
+                "alloc" | "panic" => {
+                    let (step_s, seq) = match rest.split_once(':') {
+                        Some((st, sq)) => {
+                            let sq: u64 =
+                                sq.parse().map_err(|_| anyhow!("bad seq id in {ev:?}"))?;
+                            (st, Some(sq))
+                        }
+                        None => (rest, None),
+                    };
+                    let step = parse_step(step_s)?;
+                    let k = if kind == "alloc" {
+                        FaultKind::AllocFail { seq }
+                    } else {
+                        FaultKind::StepPanic { seq }
+                    };
+                    FaultEvent { step, kind: k }
+                }
+                "slow" => {
+                    let (step_s, ms_s) = rest
+                        .split_once('x')
+                        .ok_or_else(|| anyhow!("slow event wants slow@STEPxMS, got {ev:?}"))?;
+                    let step = parse_step(step_s)?;
+                    let ms: u64 = ms_s.parse().map_err(|_| anyhow!("bad ms in {ev:?}"))?;
+                    FaultEvent { step, kind: FaultKind::SlowStep { ms } }
+                }
+                other => bail!("unknown fault kind {other:?} (want alloc|panic|slow)"),
+            };
+            events.push(event);
+        }
+        events.sort_by_key(|e| e.step);
+        Ok(Self { events })
+    }
+
+    /// Generate `count` faults uniformly over steps [1, horizon] from a
+    /// seed. Same seed, same plan — chaos runs are replayable.
+    pub fn seeded(seed: u64, horizon: u64, count: usize) -> Self {
+        let mut r = SplitMix64::new(seed);
+        let mut events = Vec::with_capacity(count);
+        for _ in 0..count {
+            let step = r.below(horizon.max(1)) + 1;
+            let kind = match r.below(3) {
+                0 => FaultKind::AllocFail { seq: None },
+                1 => FaultKind::StepPanic { seq: None },
+                _ => FaultKind::SlowStep { ms: 1 + r.below(5) },
+            };
+            events.push(FaultEvent { step, kind });
+        }
+        events.sort_by_key(|e| e.step);
+        Self { events }
+    }
+}
+
+/// Runtime state: the plan plus one-shot fired flags. Owned by the
+/// engine; each event fires at most once.
+#[derive(Debug, Default)]
+pub struct ActiveFaults {
+    events: Vec<FaultEvent>,
+    fired: Vec<bool>,
+}
+
+impl ActiveFaults {
+    pub fn new(plan: Option<FaultPlan>) -> Self {
+        let events = plan.map(|p| p.events).unwrap_or_default();
+        let fired = vec![false; events.len()];
+        Self { events, fired }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Consume a slow-step event armed at `step`, returning its delay.
+    pub fn take_slow(&mut self, step: u64) -> Option<u64> {
+        for (i, ev) in self.events.iter().enumerate() {
+            if self.fired[i] || ev.step != step {
+                continue;
+            }
+            if let FaultKind::SlowStep { ms } = ev.kind {
+                self.fired[i] = true;
+                return Some(ms);
+            }
+        }
+        None
+    }
+
+    /// Consume an allocation-failure event armed at `step` targeting
+    /// `seq` (untargeted events match the first sequence queried).
+    pub fn take_alloc(&mut self, step: u64, seq: u64) -> bool {
+        self.take_targeted(step, seq, true)
+    }
+
+    /// Consume a panic event armed at `step` targeting `seq`.
+    pub fn take_panic(&mut self, step: u64, seq: u64) -> bool {
+        self.take_targeted(step, seq, false)
+    }
+
+    fn take_targeted(&mut self, step: u64, seq: u64, alloc: bool) -> bool {
+        for (i, ev) in self.events.iter().enumerate() {
+            if self.fired[i] || ev.step != step {
+                continue;
+            }
+            let target = match ev.kind {
+                FaultKind::AllocFail { seq } if alloc => seq,
+                FaultKind::StepPanic { seq } if !alloc => seq,
+                _ => continue,
+            };
+            let hit = match target {
+                Some(t) => t == seq,
+                None => true,
+            };
+            if hit {
+                self.fired[i] = true;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_explicit_events() {
+        let p = FaultPlan::parse("alloc@5:2, panic@9, slow@12x50").unwrap();
+        assert_eq!(
+            p.events,
+            vec![
+                FaultEvent { step: 5, kind: FaultKind::AllocFail { seq: Some(2) } },
+                FaultEvent { step: 9, kind: FaultKind::StepPanic { seq: None } },
+                FaultEvent { step: 12, kind: FaultKind::SlowStep { ms: 50 } },
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_sorts_by_step() {
+        let p = FaultPlan::parse("panic@9,alloc@3").unwrap();
+        assert_eq!(p.events[0].step, 3);
+        assert_eq!(p.events[1].step, 9);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in ["", "alloc", "alloc@0", "alloc@x", "boom@3", "slow@5", "slow@5x", "seeded:1:2"]
+        {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_in_range() {
+        let a = FaultPlan::seeded(42, 100, 6);
+        let b = FaultPlan::seeded(42, 100, 6);
+        assert_eq!(a, b);
+        assert_eq!(a.events.len(), 6);
+        assert!(a.events.iter().all(|e| (1..=100).contains(&e.step)));
+        let c = FaultPlan::seeded(43, 100, 6);
+        assert_ne!(a, c, "different seeds should give different plans");
+    }
+
+    #[test]
+    fn seeded_spec_roundtrip() {
+        let p = FaultPlan::parse("seeded:7:50:4").unwrap();
+        assert_eq!(p, FaultPlan::seeded(7, 50, 4));
+    }
+
+    #[test]
+    fn events_fire_once() {
+        let plan = FaultPlan::parse("alloc@2:5,panic@2").unwrap();
+        let mut af = ActiveFaults::new(Some(plan));
+        assert!(!af.take_alloc(1, 5), "wrong step must not fire");
+        assert!(!af.take_alloc(2, 4), "wrong seq must not fire");
+        assert!(af.take_alloc(2, 5));
+        assert!(!af.take_alloc(2, 5), "one-shot");
+        // Untargeted panic matches the first queried sequence only.
+        assert!(af.take_panic(2, 9));
+        assert!(!af.take_panic(2, 10));
+    }
+
+    #[test]
+    fn slow_steps_fire_once() {
+        let mut af = ActiveFaults::new(Some(FaultPlan::parse("slow@3x7").unwrap()));
+        assert_eq!(af.take_slow(2), None);
+        assert_eq!(af.take_slow(3), Some(7));
+        assert_eq!(af.take_slow(3), None);
+        assert!(!af.is_empty());
+        assert!(ActiveFaults::new(None).is_empty());
+    }
+}

@@ -53,6 +53,24 @@ pub fn prefix_cache_summary(m: &Metrics) -> String {
     )
 }
 
+/// One-line robustness summary for run reports: contained per-sequence
+/// errors, KV-pressure preemptions (with mean re-prefill recovery
+/// latency when any completed), and deadline timeouts.
+pub fn robustness_summary(m: &Metrics) -> String {
+    let contained = m.counter("contained_errors");
+    let preemptions = m.counter("preemptions");
+    let timeouts = m.counter("timeouts");
+    let recovery = if m.latency_count("preempt_recovery") == 0 {
+        String::new()
+    } else {
+        format!(" (mean recovery {:.1} ms)", m.latency_mean_us("preempt_recovery") / 1e3)
+    };
+    format!(
+        "robustness: {contained} contained errors, {preemptions} preemptions{recovery}, \
+         {timeouts} timeouts"
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +95,21 @@ mod tests {
         assert!(s.contains("3/4 hits (75%)"), "{s}");
         assert!(s.contains("96 prefill tokens saved"), "{s}");
         assert!(s.contains("4 shared blocks"), "{s}");
+    }
+
+    #[test]
+    fn robustness_summary_shapes() {
+        let m = Metrics::new();
+        let s = robustness_summary(&m);
+        assert!(s.contains("0 contained errors, 0 preemptions, 0 timeouts"), "{s}");
+        m.inc("contained_errors");
+        m.add("preemptions", 2);
+        m.inc("timeouts");
+        m.observe_us("preempt_recovery", 1500.0);
+        m.observe_us("preempt_recovery", 2500.0);
+        let s = robustness_summary(&m);
+        assert!(s.contains("1 contained errors"), "{s}");
+        assert!(s.contains("2 preemptions (mean recovery 2.0 ms)"), "{s}");
+        assert!(s.contains("1 timeouts"), "{s}");
     }
 }

@@ -20,6 +20,15 @@ use anyhow::{anyhow, Result};
 
 pub const BLOCK_TOKENS: usize = 16;
 
+/// Typed out-of-blocks error. The engine downcasts step errors to this
+/// to route KV pressure into preemption instead of failing the request.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error("kv cache exhausted ({blocks} blocks = {tokens} tokens)")]
+pub struct CacheExhausted {
+    pub blocks: usize,
+    pub tokens: usize,
+}
+
 struct Block {
     k: Vec<f32>,
     v: Vec<f32>,
@@ -84,11 +93,11 @@ impl BlockPool {
             return Ok(id);
         }
         if self.blocks.len() >= self.capacity {
-            return Err(anyhow!(
-                "kv cache exhausted ({} blocks = {} tokens)",
-                self.capacity,
-                self.capacity * BLOCK_TOKENS
-            ));
+            return Err(CacheExhausted {
+                blocks: self.capacity,
+                tokens: self.capacity * BLOCK_TOKENS,
+            }
+            .into());
         }
         let id = self.blocks.len();
         self.blocks.push(Block {
@@ -157,6 +166,12 @@ impl BlockPool {
 
     pub fn used_blocks(&self) -> usize {
         self.blocks.len() - self.free.len()
+    }
+
+    /// Hard block capacity (allocations past this fail with
+    /// [`CacheExhausted`]).
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     pub fn free_blocks(&self) -> usize {

@@ -8,6 +8,7 @@
 
 pub mod config;
 pub mod engine;
+pub mod faults;
 pub mod harness;
 pub mod kvcache;
 pub mod metrics;

@@ -18,6 +18,13 @@ serving:
               [--stream]  print tokens as they decode (session stream)
               [--seed N]  reproducible sampling
 
+robustness (--set k=v, comma-separated):
+  timeout_ms=N         per-request deadline (0 = none)
+  queue_timeout_ms=N   max queue wait before 408 (0 = none)
+  max_preemptions=N    KV-pressure preempt budget per request
+  faults=SPEC          deterministic fault injection, e.g.
+                       'panic@3:1,alloc@5,slow@2x10' or 'seeded:42:20:4'
+
 experiments (paper artifacts):
   fig2        PPL + time curves: vanilla vs streaming vs radar
   fig3        no-prompt generation curves (adds h2o)
@@ -143,6 +150,12 @@ fn generate(args: &Args, root: &str) -> Result<()> {
     }
     if engine.metrics.counter("prefix_hits") + engine.metrics.counter("prefix_misses") > 0 {
         eprintln!("[{}]", radar_serve::harness::report::prefix_cache_summary(&engine.metrics));
+    }
+    let faults = engine.metrics.counter("contained_errors")
+        + engine.metrics.counter("preemptions")
+        + engine.metrics.counter("timeouts");
+    if faults > 0 {
+        eprintln!("[{}]", radar_serve::harness::report::robustness_summary(&engine.metrics));
     }
     Ok(())
 }

@@ -53,6 +53,10 @@ impl ApiError {
         }
     }
 
+    pub fn request_timeout(message: impl Into<String>) -> Self {
+        Self { status: 408, code: "request_timeout", message: message.into() }
+    }
+
     pub fn overloaded(message: impl Into<String>) -> Self {
         Self { status: 429, code: "overloaded_error", message: message.into() }
     }
@@ -63,6 +67,17 @@ impl ApiError {
 
     pub fn unavailable(message: impl Into<String>) -> Self {
         Self { status: 503, code: "service_unavailable", message: message.into() }
+    }
+
+    /// Map an engine-side session failure message to an HTTP status.
+    /// Capacity failures (KV pressure that outlived the preemption
+    /// budget) are retryable 503s; everything else is a 500.
+    pub fn from_session_failure(message: &str) -> Self {
+        if message.starts_with("capacity:") {
+            Self::unavailable(message)
+        } else {
+            Self::internal(message)
+        }
     }
 
     pub fn body(&self) -> String {
@@ -104,6 +119,9 @@ pub struct CompletionRequest {
     /// Shared-prefix KV reuse for this request (`"cache": "off"` or
     /// `false` opts out; default on, subject to the server-wide knob).
     pub cache: bool,
+    /// Per-request wall-clock deadline in milliseconds. `None` defers
+    /// to the server-wide `timeout_ms`; `Some(0)` opts out entirely.
+    pub timeout_ms: Option<u64>,
 }
 
 impl CompletionRequest {
@@ -206,7 +224,21 @@ impl CompletionRequest {
                 }
             },
         };
-        Ok(Self { prompt, max_tokens, temperature, greedy, seed, stop, stream, cache })
+        let timeout_ms = match j.get("timeout_ms") {
+            None => None,
+            Some(v) => {
+                let t = v.as_f64().ok_or_else(|| {
+                    ApiError::invalid_request("'timeout_ms' must be a number")
+                })?;
+                if t.fract() != 0.0 || t < 0.0 {
+                    return Err(ApiError::invalid_request(
+                        "'timeout_ms' must be a non-negative integer",
+                    ));
+                }
+                Some(t as u64)
+            }
+        };
+        Ok(Self { prompt, max_tokens, temperature, greedy, seed, stop, stream, cache, timeout_ms })
     }
 
     /// Lower into an engine request, checking engine-level limits.
@@ -227,6 +259,7 @@ impl CompletionRequest {
         req.seed = self.seed;
         req.stop_token = self.stop;
         req.prefix_cache = self.cache;
+        req.timeout_ms = self.timeout_ms;
         Ok(req)
     }
 }
@@ -329,6 +362,7 @@ mod tests {
         assert!(r.cache, "prefix cache defaults on");
         assert_eq!(r.temperature, None);
         assert_eq!(r.seed, None);
+        assert_eq!(r.timeout_ms, None, "deadline defers to the server default");
     }
 
     #[test]
@@ -398,6 +432,30 @@ mod tests {
         let j = Json::parse(&e.body()).unwrap();
         assert_eq!(j.path("error.type").unwrap().as_str(), Some("overloaded_error"));
         assert_eq!(j.path("error.message").unwrap().as_str(), Some("queue full"));
+    }
+
+    #[test]
+    fn timeout_ms_parses_and_threads_through() {
+        let cfg = ServingConfig::default();
+        let r = parse(r#"{"prompt":"a","timeout_ms":250}"#).unwrap();
+        assert_eq!(r.timeout_ms, Some(250));
+        assert_eq!(r.to_gen_request(&cfg).unwrap().timeout_ms, Some(250));
+        // 0 is a valid explicit opt-out of the server default.
+        assert_eq!(parse(r#"{"prompt":"a","timeout_ms":0}"#).unwrap().timeout_ms, Some(0));
+        assert_eq!(parse(r#"{"prompt":"a","timeout_ms":-1}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":"a","timeout_ms":1.5}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":"a","timeout_ms":"soon"}"#).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn session_failure_maps_capacity_to_503() {
+        let e = ApiError::from_session_failure("capacity: no kv blocks after 4 preemptions");
+        assert_eq!(e.status, 503);
+        let e = ApiError::from_session_failure("decode panicked: boom");
+        assert_eq!(e.status, 500);
+        let e = ApiError::request_timeout("deadline exceeded");
+        assert_eq!(e.status, 408);
+        assert_eq!(e.code, "request_timeout");
     }
 
     #[test]

@@ -18,7 +18,7 @@
 
 pub mod api;
 
-use crate::engine::{Engine, GenRequest, SessionEvent, SessionHandle};
+use crate::engine::{Engine, FinishReason, GenRequest, SessionEvent, SessionHandle};
 use crate::model::tokenizer;
 use crate::util::json::Json;
 use crate::util::threadpool::{Channel, ThreadPool};
@@ -124,6 +124,7 @@ fn status_reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         503 => "Service Unavailable",
@@ -219,8 +220,10 @@ pub fn serve(mut engine: Engine, addr: &str, stop: Arc<AtomicBool>) -> Result<()
             continue;
         }
         if let Err(e) = engine.step() {
-            // Unrecoverable (artifact/dispatch failure): fail the
-            // in-flight sessions but keep serving new requests.
+            // Per-sequence faults (panics, dispatch errors, KV
+            // pressure) are contained inside `step` and never reach
+            // here; an Err means the engine itself is broken, so this
+            // is the true process-level shutdown path.
             engine.fail_all(&format!("engine error: {e}"));
         }
     }
@@ -235,15 +238,16 @@ pub fn serve(mut engine: Engine, addr: &str, stop: Arc<AtomicBool>) -> Result<()
     Ok(())
 }
 
-/// How long a keep-alive socket may sit idle between requests before
-/// its worker thread reclaims itself (the pool is small and fixed).
-const KEEP_ALIVE_IDLE: std::time::Duration = std::time::Duration::from_secs(30);
-
-/// One connection: serve requests until the client closes, asks to,
-/// or idles past `KEEP_ALIVE_IDLE`.
+/// One connection: serve requests until the client closes, asks to, or
+/// idles past `ServingConfig::keep_alive_idle_ms` (the worker pool is
+/// small and fixed, so idle sockets must reclaim their threads).
 fn handle_conn(stream: TcpStream, ctx: Arc<ServerCtx>) {
     let mut writer = stream;
-    let _ = writer.set_read_timeout(Some(KEEP_ALIVE_IDLE));
+    let idle = match ctx.cfg.keep_alive_idle_ms {
+        0 => None, // wait forever
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
+    let _ = writer.set_read_timeout(idle);
     let Ok(read_half) = writer.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     loop {
@@ -318,14 +322,19 @@ fn answer_submit(engine: &mut Engine, msg: EngineMsg) {
 }
 
 /// Submit through the engine thread and wait for the session handle.
-/// The timeout is a shutdown-race backstop: the engine loop answers
-/// within one step in normal operation.
+/// The timeout (`ServingConfig::reply_timeout_ms`, 0 = wait forever)
+/// is a shutdown-race backstop: the engine loop answers within one
+/// step in normal operation.
 fn open_session(ctx: &ServerCtx, req: GenRequest) -> Result<SessionHandle, ApiError> {
     let reply: Channel<Result<SessionHandle, ApiError>> = Channel::new();
     if !ctx.queue.send(EngineMsg::Submit { req, reply: reply.clone() }) {
         return Err(ApiError::unavailable("server shutting down"));
     }
-    match reply.recv_timeout(std::time::Duration::from_secs(30)) {
+    let got = match ctx.cfg.reply_timeout_ms {
+        0 => reply.recv(),
+        ms => reply.recv_timeout(std::time::Duration::from_millis(ms)),
+    };
+    match got {
         Some(r) => r,
         None => {
             // Stop waiting; reclaim (and cancel) a handle that may have
@@ -374,7 +383,13 @@ fn handle_completions(stream: &mut TcpStream, body: &[u8], ctx: &ServerCtx) -> R
     } else {
         let out = handle.collect();
         if let Some(e) = out.error {
-            write_error(stream, &ApiError::internal(e), true)?;
+            write_error(stream, &ApiError::from_session_failure(&e), true)?;
+            return Ok(true);
+        }
+        if out.finish == Some(FinishReason::Timeout) && out.tokens.is_empty() {
+            // Deadline hit before any token: a clean 408. Partial
+            // results still return 200 with finish_reason "timeout".
+            write_error(stream, &ApiError::request_timeout("deadline exceeded"), true)?;
             return Ok(true);
         }
         let text = tokenizer::decode(&out.tokens);
@@ -515,7 +530,11 @@ fn handle_generate_legacy(stream: &mut TcpStream, body: &[u8], ctx: &ServerCtx) 
     };
     let out = handle.collect();
     if let Some(e) = out.error {
-        write_error(stream, &ApiError::internal(e), true)?;
+        write_error(stream, &ApiError::from_session_failure(&e), true)?;
+        return Ok(true);
+    }
+    if out.finish == Some(FinishReason::Timeout) && out.tokens.is_empty() {
+        write_error(stream, &ApiError::request_timeout("deadline exceeded"), true)?;
         return Ok(true);
     }
     let usage = out.usage.unwrap_or_default();

@@ -1,0 +1,299 @@
+//! Chaos suite: deterministic fault injection against the engine.
+//!
+//! The invariants under test (ISSUE acceptance criteria):
+//!   (a) an injected fault finishes only the victim sequence,
+//!   (b) every other concurrent session is byte-identical to a
+//!       fault-free run,
+//!   (c) the block pool drains back to its pre-run level (no leaks,
+//!       no refcount underflows),
+//!   (d) a preempted-then-requeued request still completes, with the
+//!       `preemptions` metric incremented.
+//!
+//! Seeds for the randomized sweep come from `FAULT_SEEDS` (CI runs a
+//! matrix over several triples).
+
+use radar_serve::config::{ArtifactPaths, PolicyKind, ServingConfig};
+use radar_serve::engine::{Engine, FinishReason, GenRequest, SessionResult};
+use radar_serve::faults::FaultPlan;
+use radar_serve::model::tokenizer;
+use radar_serve::runtime::Runtime;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let paths = ArtifactPaths::new("artifacts", "sm");
+    if !paths.manifest().exists() {
+        eprintln!("skipping fault-injection tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Runtime::load(paths).unwrap()))
+}
+
+/// Suppress the default panic report for *injected* panics only; real
+/// test failures keep the standard output. Installed once per process.
+fn quiet_injected_panics() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected"))
+                .or_else(|| {
+                    info.payload().downcast_ref::<String>().map(|s| s.contains("injected"))
+                })
+                .unwrap_or(false);
+            if !injected {
+                default(info);
+            }
+        }));
+    });
+}
+
+fn engine_with(
+    rt: Arc<Runtime>,
+    policy: PolicyKind,
+    tweak: impl FnOnce(&mut ServingConfig),
+) -> Engine {
+    let mut cfg = ServingConfig::default();
+    cfg.policy = policy;
+    cfg.window = 32;
+    cfg.budget = 64;
+    tweak(&mut cfg);
+    Engine::new(rt, cfg).unwrap()
+}
+
+/// Step until idle, bounded so a scheduling bug fails loudly instead
+/// of hanging the suite.
+fn drive(e: &mut Engine, max_steps: usize) {
+    let mut n = 0;
+    while !e.idle() {
+        e.step().unwrap();
+        n += 1;
+        assert!(n < max_steps, "engine did not go idle within {max_steps} steps");
+    }
+}
+
+const PROMPTS: [&str; 3] = ["the stream carries ", "old light towards ", "quiet hills answer "];
+
+/// Submit the three standard prompts, run to idle, return each
+/// session's result in submit order (ids 1, 2, 3).
+fn run_trio(e: &mut Engine, max_new: usize) -> Vec<SessionResult> {
+    let handles: Vec<_> = PROMPTS
+        .iter()
+        .map(|p| e.submit(GenRequest::new(tokenizer::encode(p), max_new)).unwrap())
+        .collect();
+    drive(e, 500);
+    handles.iter().map(|h| h.collect()).collect()
+}
+
+#[test]
+fn plans_are_deterministic_without_artifacts() {
+    // Pure planning layer: no runtime needed, runs everywhere.
+    let a = FaultPlan::seeded(42, 20, 5);
+    let b = FaultPlan::seeded(42, 20, 5);
+    assert_eq!(a, b, "same seed must script the same faults");
+    let c = FaultPlan::seeded(43, 20, 5);
+    assert_ne!(a, c, "different seeds must diverge");
+    let parsed = FaultPlan::parse("seeded:42:20:5").unwrap();
+    assert_eq!(a, parsed, "spec form must match the constructor");
+}
+
+#[test]
+fn fused_panic_is_contained_and_survivors_match_baseline() {
+    let Some(rt) = runtime() else { return };
+    quiet_injected_panics();
+    // Prefix cache off so "pool drains to zero" is exact.
+    let mut base = engine_with(rt.clone(), PolicyKind::Streaming, |c| c.prefix_cache = false);
+    let baseline = run_trio(&mut base, 6);
+    assert!(baseline.iter().all(|r| r.error.is_none()));
+
+    let mut e = engine_with(rt, PolicyKind::Streaming, |c| {
+        c.prefix_cache = false;
+        c.faults = Some(FaultPlan::parse("panic@2:3").unwrap());
+    });
+    let out = run_trio(&mut e, 6);
+
+    // (a) only the victim fails, with the panic surfaced as an error.
+    let victim = &out[2];
+    let msg = victim.error.as_deref().expect("victim must receive an error event");
+    assert!(msg.contains("panicked"), "unexpected error: {msg}");
+    assert!(victim.tokens.len() < 6, "victim must not finish normally");
+    // (b) the other rows of the same fused batch are untouched.
+    for i in [0, 1] {
+        assert!(out[i].error.is_none(), "survivor {i} failed: {:?}", out[i].error);
+        assert_eq!(out[i].finish, Some(FinishReason::Length));
+        assert_eq!(out[i].tokens, baseline[i].tokens, "survivor {i} diverged from baseline");
+    }
+    // (c) all blocks returned, (d) accounting.
+    assert_eq!(e.pool.used_blocks(), 0, "kv blocks leaked past containment");
+    assert_eq!(e.metrics.counter("contained_errors"), 1);
+    assert_eq!(e.metrics.counter("requests_failed"), 1);
+    assert_eq!(e.metrics.counter("requests_completed"), 2);
+}
+
+#[test]
+fn radar_panic_is_contained_per_sequence() {
+    let Some(rt) = runtime() else { return };
+    quiet_injected_panics();
+    let mut e = engine_with(rt, PolicyKind::Radar, |c| {
+        c.prefix_cache = false;
+        c.faults = Some(FaultPlan::parse("panic@2:2").unwrap());
+    });
+    let a = e.submit(GenRequest::new(tokenizer::encode(PROMPTS[0]), 6)).unwrap();
+    let b = e.submit(GenRequest::new(tokenizer::encode(PROMPTS[1]), 6)).unwrap();
+    drive(&mut e, 500);
+    let (a, b) = (a.collect(), b.collect());
+    assert!(a.error.is_none(), "survivor failed: {:?}", a.error);
+    assert_eq!(a.tokens.len(), 6);
+    assert!(b.error.as_deref().is_some_and(|m| m.contains("panicked")));
+    assert_eq!(e.pool.used_blocks(), 0);
+    assert_eq!(e.metrics.counter("contained_errors"), 1);
+}
+
+#[test]
+fn kv_pressure_preempts_victim_which_recovers_byte_identically() {
+    let Some(rt) = runtime() else { return };
+    let mut base = engine_with(rt.clone(), PolicyKind::Streaming, |_| {});
+    let baseline = run_trio(&mut base, 6);
+
+    // An injected allocation failure on seq 3 mid-decode: it is the
+    // tie-broken victim (least progress, youngest), gets preempted,
+    // re-prefills warm through the prefix cache, and resumes off its
+    // preserved sampler to full completion.
+    let mut e = engine_with(rt, PolicyKind::Streaming, |c| {
+        c.faults = Some(FaultPlan::parse("alloc@3:3").unwrap());
+    });
+    let out = run_trio(&mut e, 6);
+    for (i, r) in out.iter().enumerate() {
+        assert!(r.error.is_none(), "seq {} failed: {:?}", i + 1, r.error);
+        assert_eq!(r.finish, Some(FinishReason::Length), "seq {}", i + 1);
+        assert_eq!(r.tokens.len(), 6, "seq {} did not run to completion", i + 1);
+    }
+    // Unpreempted sessions are byte-identical to the fault-free run.
+    // (The victim's replay is numerically equivalent but rebuilds its
+    // generated-token KV through the prefill kernel, so its low bits
+    // are not contractually identical.)
+    for i in [0, 1] {
+        assert_eq!(out[i].tokens, baseline[i].tokens, "seq {} diverged", i + 1);
+    }
+    assert_eq!(e.metrics.counter("preemptions"), 1);
+    assert_eq!(e.metrics.latency_count("preempt_recovery"), 1, "recovery latency not recorded");
+    assert_eq!(e.metrics.counter("contained_errors"), 0, "preemption is not an error");
+    assert_eq!(e.pool.used_blocks(), e.prefix.cached_blocks(), "non-prefix blocks leaked");
+}
+
+#[test]
+fn preemption_budget_exhaustion_fails_with_capacity_error() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine_with(rt, PolicyKind::Streaming, |c| {
+        c.prefix_cache = false;
+        c.max_preemptions = 0;
+        c.faults = Some(FaultPlan::parse("alloc@2:1").unwrap());
+    });
+    let h = e.submit(GenRequest::new(tokenizer::encode(PROMPTS[0]), 6)).unwrap();
+    drive(&mut e, 500);
+    let out = h.collect();
+    let msg = out.error.as_deref().expect("request over budget must fail");
+    assert!(msg.starts_with("capacity:"), "503-style prefix expected, got: {msg}");
+    assert_eq!(e.metrics.counter("preemptions"), 1);
+    assert_eq!(e.pool.used_blocks(), 0);
+}
+
+#[test]
+fn active_deadline_times_out_keeping_partial_tokens() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine_with(rt, PolicyKind::Streaming, |_| {});
+    let mut req = GenRequest::new(tokenizer::encode(PROMPTS[0]), 256);
+    req.timeout_ms = Some(40);
+    let h = e.submit(req).unwrap();
+    e.step().unwrap(); // admit + first decode, well inside the deadline
+    std::thread::sleep(std::time::Duration::from_millis(60));
+    drive(&mut e, 500);
+    let out = h.collect();
+    assert!(out.error.is_none(), "timeout is a finish reason, not an error");
+    assert_eq!(out.finish, Some(FinishReason::Timeout));
+    assert!(!out.tokens.is_empty(), "tokens produced before expiry must stand");
+    assert!(out.tokens.len() < 256, "deadline did not interrupt generation");
+    assert_eq!(e.metrics.counter("timeouts"), 1);
+    assert_eq!(e.pool.used_blocks(), e.prefix.cached_blocks());
+}
+
+#[test]
+fn queue_wait_deadline_expires_parked_requests() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine_with(rt, PolicyKind::Streaming, |c| {
+        c.max_batch = 1;
+        c.queue_timeout_ms = 30;
+    });
+    let a = e.submit(GenRequest::new(tokenizer::encode(PROMPTS[0]), 64)).unwrap();
+    let b = e.submit(GenRequest::new(tokenizer::encode(PROMPTS[1]), 4)).unwrap();
+    e.step().unwrap(); // A takes the only slot; B parks in the queue
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    e.step().unwrap(); // queue sweep expires B
+    let out_b = b.collect();
+    assert_eq!(out_b.finish, Some(FinishReason::Timeout));
+    assert!(out_b.tokens.is_empty(), "B never ran, so no tokens");
+    assert_eq!(e.metrics.counter("timeouts"), 1);
+    a.cancel();
+    drive(&mut e, 500);
+    let out_a = a.collect();
+    assert!(out_a.finish.is_some() || out_a.error.is_some(), "A must still terminate");
+}
+
+#[test]
+fn fail_all_drains_queue_sessions_and_reclaims_all_blocks() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine_with(rt, PolicyKind::Streaming, |c| c.max_batch = 1);
+    let handles: Vec<_> = PROMPTS
+        .iter()
+        .map(|p| e.submit(GenRequest::new(tokenizer::encode(p), 8)).unwrap())
+        .collect();
+    e.step().unwrap(); // one admitted (holding blocks), two still queued
+    assert!(e.pool.used_blocks() > 0);
+    assert_eq!(e.queue_depth(), 2);
+    e.fail_all("engine error: test shutdown");
+    for (i, h) in handles.iter().enumerate() {
+        let out = h.collect();
+        let msg = out.error.as_deref().unwrap_or_else(|| panic!("session {i} not failed"));
+        assert!(msg.contains("test shutdown"), "session {i}: {msg}");
+    }
+    assert_eq!(e.pool.used_blocks(), 0, "fail_all must release every block");
+    assert_eq!(e.prefix.cached_blocks(), 0, "prefix retention survives shutdown");
+    assert!(e.idle());
+    // The engine object itself stays serviceable afterwards.
+    let h = e.submit(GenRequest::new(tokenizer::encode(PROMPTS[2]), 4)).unwrap();
+    drive(&mut e, 500);
+    let out = h.collect();
+    assert!(out.error.is_none(), "fresh request after fail_all: {:?}", out.error);
+    assert_eq!(out.tokens.len(), 4);
+}
+
+#[test]
+fn seeded_chaos_sweep_terminates_cleanly() {
+    let Some(rt) = runtime() else { return };
+    quiet_injected_panics();
+    let seeds = std::env::var("FAULT_SEEDS").unwrap_or_else(|_| "1,2,3".into());
+    for (i, seed) in seeds.split(',').filter_map(|s| s.trim().parse::<u64>().ok()).enumerate() {
+        // Alternate pipelines so both decode paths see every seed set.
+        let policy = if i % 2 == 0 { PolicyKind::Streaming } else { PolicyKind::Radar };
+        let mut e = engine_with(rt.clone(), policy, |c| {
+            c.faults = Some(FaultPlan::seeded(seed, 12, 4));
+        });
+        let out = run_trio(&mut e, 6);
+        for (j, r) in out.iter().enumerate() {
+            assert!(
+                r.finish.is_some() || r.error.is_some(),
+                "seed {seed} seq {} got no terminal event",
+                j + 1
+            );
+        }
+        assert!(e.idle(), "seed {seed}: engine stuck");
+        assert_eq!(
+            e.pool.used_blocks(),
+            e.prefix.cached_blocks(),
+            "seed {seed}: kv blocks leaked"
+        );
+    }
+}
