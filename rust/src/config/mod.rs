@@ -169,6 +169,30 @@ pub struct ServingConfig {
     /// waits for the engine loop to acknowledge a submit
     /// (0 = wait forever).
     pub reply_timeout_ms: u64,
+    /// Admission token-bucket refill rate in estimated tokens/second
+    /// (cost = uncached prefill + max_new_tokens). 0 disables the gate.
+    pub admit_rate: f64,
+    /// Admission token-bucket capacity (burst) in estimated tokens.
+    pub admit_burst: f64,
+    /// High-watermark, in percent, of both the pending queue (vs
+    /// `max_pending`) and the KV pool (vs total blocks). Crossing it
+    /// starts shedding lowest-priority queued work and flips `/readyz`.
+    pub shed_watermark_pct: u8,
+    /// Watchdog: a sequence whose step body runs longer than this with
+    /// no progress is force-finished through the containment path
+    /// (0 = watchdog off).
+    pub watchdog_ms: u64,
+    /// Graceful drain: how long in-flight sequences may keep running
+    /// after SIGTERM / `/admin/drain` before `fail_all` (0 = forever).
+    pub drain_timeout_ms: u64,
+    /// Circuit breaker: this many anomalies or contained errors within
+    /// `breaker_window` engine steps flips the engine into
+    /// exact-attention degraded mode (0 = breaker off).
+    pub breaker_threshold: u32,
+    /// Circuit breaker: sliding event window, in engine steps.
+    pub breaker_window: u64,
+    /// Circuit breaker: degraded-mode cool-down, in engine steps.
+    pub breaker_cooldown: u64,
     /// Deterministic fault injection (tests / chaos harness only).
     pub faults: Option<FaultPlan>,
 }
@@ -195,6 +219,14 @@ impl Default for ServingConfig {
             queue_timeout_ms: 0,
             keep_alive_idle_ms: 30_000,
             reply_timeout_ms: 30_000,
+            admit_rate: 0.0,
+            admit_burst: 8192.0,
+            shed_watermark_pct: 80,
+            watchdog_ms: 0,
+            drain_timeout_ms: 5_000,
+            breaker_threshold: 8,
+            breaker_window: 32,
+            breaker_cooldown: 64,
             faults: None,
         }
     }
@@ -229,6 +261,20 @@ impl ServingConfig {
             "queue_timeout_ms" => self.queue_timeout_ms = val.parse()?,
             "keep_alive_idle_ms" => self.keep_alive_idle_ms = val.parse()?,
             "reply_timeout_ms" => self.reply_timeout_ms = val.parse()?,
+            "admit_rate" => self.admit_rate = val.parse()?,
+            "admit_burst" => self.admit_burst = val.parse()?,
+            "shed_watermark_pct" => {
+                let pct: u8 = val.parse()?;
+                if pct == 0 || pct > 100 {
+                    return Err(anyhow!("shed_watermark_pct: expected 1..=100, got '{val}'"));
+                }
+                self.shed_watermark_pct = pct;
+            }
+            "watchdog_ms" => self.watchdog_ms = val.parse()?,
+            "drain_timeout_ms" => self.drain_timeout_ms = val.parse()?,
+            "breaker_threshold" => self.breaker_threshold = val.parse()?,
+            "breaker_window" => self.breaker_window = val.parse()?,
+            "breaker_cooldown" => self.breaker_cooldown = val.parse()?,
             "faults" => self.faults = Some(FaultPlan::parse(val)?),
             other => return Err(anyhow!("unknown serving option '{other}'")),
         }
@@ -367,6 +413,38 @@ mod tests {
         assert_eq!(s.reply_timeout_ms, 100);
         assert_eq!(s.faults.as_ref().map(|f| f.events.len()), Some(2));
         assert!(s.apply_override("faults", "bogus@1").is_err());
+    }
+
+    #[test]
+    fn overload_overrides() {
+        let mut s = ServingConfig::default();
+        assert_eq!(s.admit_rate, 0.0, "admission gate is off by default");
+        assert_eq!(s.shed_watermark_pct, 80);
+        assert_eq!(s.watchdog_ms, 0, "watchdog is off by default");
+        assert_eq!(s.drain_timeout_ms, 5_000);
+        assert_eq!(s.breaker_threshold, 8);
+        s.apply_override("admit_rate", "2000").unwrap();
+        s.apply_override("admit_burst", "4096").unwrap();
+        s.apply_override("shed_watermark_pct", "50").unwrap();
+        s.apply_override("watchdog_ms", "250").unwrap();
+        s.apply_override("drain_timeout_ms", "1000").unwrap();
+        s.apply_override("breaker_threshold", "2").unwrap();
+        s.apply_override("breaker_window", "16").unwrap();
+        s.apply_override("breaker_cooldown", "8").unwrap();
+        assert_eq!(s.admit_rate, 2000.0);
+        assert_eq!(s.admit_burst, 4096.0);
+        assert_eq!(s.shed_watermark_pct, 50);
+        assert_eq!(s.watchdog_ms, 250);
+        assert_eq!(s.drain_timeout_ms, 1000);
+        assert_eq!(s.breaker_threshold, 2);
+        assert_eq!(s.breaker_window, 16);
+        assert_eq!(s.breaker_cooldown, 8);
+        assert!(s.apply_override("shed_watermark_pct", "0").is_err());
+        assert!(s.apply_override("shed_watermark_pct", "101").is_err());
+        assert!(s.apply_override("admit_rate", "fast").is_err());
+        // Malformed fault specs surface their typed reason.
+        let e = s.apply_override("faults", "slow@5x").unwrap_err();
+        assert!(e.to_string().contains("slow@5x"), "{e}");
     }
 
     #[test]

@@ -22,8 +22,11 @@
 //! process shutdown.
 
 use super::batcher::{admission_order, group_by_bucket, preemption_victim};
+use super::overload::{
+    sanitize_logits, shed_victim, BreakerTransition, CircuitBreaker, HealthState, TokenBucket,
+};
 use super::request::{
-    FinishReason, GenRequest, GenResult, PolicyHolder, SeqId, Sequence, SessionEvent,
+    FinishReason, GenRequest, GenResult, PolicyHolder, Priority, SeqId, Sequence, SessionEvent,
     SessionHandle, SubmitError, Usage,
 };
 use crate::config::ServingConfig;
@@ -43,6 +46,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const NEG: f32 = -1e30;
+
+/// Retry hint on a watermark rejection with no sheddable victim: KV
+/// pressure clears on the decode timescale, not the admission one.
+const SHED_RETRY_MS: u64 = 1000;
 
 /// What a queue entry carries: a fresh request, or a preempted
 /// sequence waiting to re-prefill its prompt + generated tokens.
@@ -88,6 +95,16 @@ impl PendingSession {
         match &self.work {
             PendingWork::Fresh(_) => Usage::default(),
             PendingWork::Resume(seq) => seq.usage(),
+        }
+    }
+
+    /// Shed eligibility class. Preempted sequences were already
+    /// admitted once (tokens may have streamed to the client), so they
+    /// are never displaced by a fresh arrival.
+    fn priority(&self) -> Priority {
+        match &self.work {
+            PendingWork::Fresh(req) => req.priority,
+            PendingWork::Resume(_) => Priority::High,
         }
     }
 }
@@ -144,6 +161,16 @@ pub struct Engine {
     faults: ActiveFaults,
     /// 1-based step counter; the fault plan's clock.
     step_no: u64,
+    /// Cost-aware admission gate (disabled unless `admit_rate > 0`).
+    bucket: TokenBucket,
+    /// Anomaly/contained-error breaker; tripping flips Radar sequences
+    /// to exact full-context attention until the cool-down passes.
+    breaker: CircuitBreaker,
+    /// Shared with the HTTP layer: readiness, drain flag, overload.
+    pub health: Arc<HealthState>,
+    /// Step of the most recent watchdog trip (readiness recovers after
+    /// a `breaker_window`-step quiet span).
+    last_watchdog_trip: Option<u64>,
     omega: Arc<xla::PjRtBuffer>,
     // Reused step staging buffers (values stay bounded; masked slots
     // carry stale-but-finite data — see DESIGN.md §9 L3).
@@ -167,6 +194,9 @@ impl Engine {
         let prefix = PrefixIndex::new(cfg.prefix_cache_mb << 20, pool.block_bytes());
         let omega = rt.omega(cfg.n_feat)?;
         let faults = ActiveFaults::new(cfg.faults.clone());
+        let bucket = TokenBucket::new(cfg.admit_rate, cfg.admit_burst);
+        let breaker =
+            CircuitBreaker::new(cfg.breaker_threshold, cfg.breaker_window, cfg.breaker_cooldown);
         Ok(Self {
             rt,
             cfg,
@@ -178,6 +208,10 @@ impl Engine {
             next_id: 1,
             faults,
             step_no: 0,
+            bucket,
+            breaker,
+            health: Arc::new(HealthState::new()),
+            last_watchdog_trip: None,
             omega,
             buf_k: Vec::new(),
             buf_v: Vec::new(),
@@ -223,6 +257,47 @@ impl Engine {
             self.metrics.inc("requests_rejected");
             return Err(SubmitError::TooLong { need, max: self.cfg.max_seq_len });
         }
+        if self.health.draining() {
+            self.metrics.inc("requests_rejected");
+            return Err(SubmitError::Draining);
+        }
+        if self.bucket.enabled() {
+            // Cost = work this request adds: uncached prefill tokens
+            // plus the decode budget it reserves.
+            let total = req.prompt.len().saturating_sub(1);
+            let cached =
+                if self.cfg.prefix_cache && req.prefix_cache && self.reuse_safe_policy() {
+                    self.prefix.peek_match_tokens(&req.prompt, total)
+                } else {
+                    0
+                };
+            let cost = (total - cached + req.max_new_tokens) as f64;
+            if let Err(retry_after_ms) = self.bucket.try_take(cost, Instant::now()) {
+                self.metrics.inc("requests_rejected");
+                return Err(SubmitError::RateLimited { retry_after_ms });
+            }
+        }
+        // Watermark load-shedding: above the high-water mark on the
+        // queue or the KV pool, a strictly lower-priority queued entry
+        // is displaced to make room. Queue pressure with no victim
+        // falls through to the hard `QueueFull` cap below; KV pressure
+        // with no victim rejects outright (admitting would only thrash
+        // the preemption path).
+        let pct = self.cfg.shed_watermark_pct as usize;
+        let queue_hot = self.pending.len() * 100 >= self.cfg.max_pending * pct;
+        let kv_hot = self.pool.used_blocks() * 100 >= self.pool.capacity() * pct;
+        if queue_hot || kv_hot {
+            let victim =
+                shed_victim(self.pending.iter().map(|p| (p.id, p.priority())), req.priority);
+            match victim {
+                Some(vid) => self.shed_pending(vid),
+                None if kv_hot => {
+                    self.metrics.inc("requests_rejected");
+                    return Err(SubmitError::Shed { retry_after_ms: SHED_RETRY_MS });
+                }
+                None => {}
+            }
+        }
         if self.pending.len() >= self.cfg.max_pending {
             self.metrics.inc("requests_rejected");
             return Err(SubmitError::QueueFull { depth: self.pending.len() });
@@ -246,6 +321,25 @@ impl Engine {
         self.metrics.inc("requests_submitted");
         self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
         Ok(handle)
+    }
+
+    /// Displace one queued session so a higher-priority arrival can be
+    /// admitted. The victim holds no KV blocks (it was never admitted),
+    /// so this is an event + bookkeeping, not a resource release. The
+    /// `shed:` message prefix is load-bearing: the HTTP layer maps it
+    /// to 503 + `Retry-After`.
+    fn shed_pending(&mut self, id: SeqId) {
+        let Some(pos) = self.pending.iter().position(|p| p.id == id) else { return };
+        let p = self.pending.remove(pos).expect("position found on this queue just above");
+        if let Some(ev) = &p.events {
+            ev.send(SessionEvent::Error(
+                "shed: displaced by a higher-priority arrival under load; retry later".to_string(),
+            ));
+            ev.close();
+        }
+        self.metrics.inc("shed_requests");
+        self.metrics.inc("requests_failed");
+        self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
     }
 
     /// Whether the configured policy tolerates skipping shared-prefix
@@ -459,6 +553,10 @@ impl Engine {
     fn finish_with_error(&mut self, mut seq: Sequence, msg: &str, contained: bool) {
         if contained {
             self.metrics.inc("contained_errors");
+            // Contained faults feed the degradation breaker: a burst of
+            // them within the window flips the engine into exact-
+            // attention degraded mode.
+            self.breaker.record(self.step_no);
         }
         if let Err(e) = seq.cache.free(&mut self.pool) {
             debug_assert!(false, "kv release after failure: {e}");
@@ -787,14 +885,41 @@ impl Engine {
             std::thread::sleep(Duration::from_millis(ms));
             self.metrics.inc("injected_slow_steps");
         }
+        // Degradation breaker: advance its step clock and surface
+        // transitions as metrics. While degraded, every Radar sequence
+        // runs exact full-context attention (`force_full`); fused
+        // policies are untouched — their selection is query-independent
+        // and was never the anomaly source.
+        match self.breaker.tick(step_no) {
+            Some(BreakerTransition::Entered) => self.metrics.inc("degraded_mode_entered"),
+            Some(BreakerTransition::Exited) => self.metrics.inc("degraded_mode_exited"),
+            None => {}
+        }
+        let degraded = self.breaker.degraded();
+        self.metrics.set_gauge("degraded_mode", if degraded { 1.0 } else { 0.0 });
+        // Watchdog readiness recovers after a quiet window.
+        if let Some(t) = self.last_watchdog_trip {
+            if step_no >= t + self.cfg.breaker_window {
+                self.health.set_watchdog_unquiet(false);
+                self.last_watchdog_trip = None;
+            }
+        }
         self.sweep_cancelled();
         self.sweep_deadlines();
         self.admit_pending();
+        // Propagate after admission so a sequence admitted this step
+        // decodes its first token under the current mode.
+        for seq in self.seqs.values_mut() {
+            if let PolicyHolder::Radar(rp) = &mut seq.policy {
+                rp.force_full = degraded;
+            }
+        }
         let ids = self.active_ids();
         if ids.is_empty() {
             // Still deliver terminal events (e.g. queue-less timeouts).
             self.reap_finished();
             self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
+            self.publish_health();
             return Ok(stats);
         }
         // Partition by pipeline.
@@ -813,6 +938,7 @@ impl Engine {
             // May have been preempted as another row's KV victim.
             let Some(mut seq) = self.seqs.remove(&id) else { continue };
             let inject_panic = self.faults.take_panic(step_no, id);
+            let t_watch = Instant::now();
             let r = catch_unwind(AssertUnwindSafe(|| {
                 if inject_panic {
                     panic!("injected step panic (seq {id})");
@@ -821,9 +947,13 @@ impl Engine {
             }));
             match r {
                 Ok(Ok(())) => {
-                    self.seqs.insert(id, seq);
-                    stats.decoded += 1;
-                    stats.dispatches += 2 * self.rt.config.n_layers;
+                    if let Some(ms) = self.watchdog_overrun(t_watch) {
+                        self.trip_watchdog(seq, "radar decode", ms);
+                    } else {
+                        self.seqs.insert(id, seq);
+                        stats.decoded += 1;
+                        stats.dispatches += 2 * self.rt.config.n_layers;
+                    }
                 }
                 Ok(Err(e)) if e.downcast_ref::<CacheExhausted>().is_some() => {
                     self.handle_kv_pressure(seq, "decode");
@@ -844,7 +974,51 @@ impl Engine {
         self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
         self.metrics
             .set_gauge("prefix_shared_blocks", self.prefix.shared_blocks(&self.pool) as f64);
+        self.publish_health();
         Ok(stats)
+    }
+
+    /// Whether the breaker currently holds the engine in exact-
+    /// attention degraded mode.
+    pub fn degraded(&self) -> bool {
+        self.breaker.degraded()
+    }
+
+    /// Publish end-of-step readiness inputs shared with `/readyz`.
+    fn publish_health(&self) {
+        let pct = self.cfg.shed_watermark_pct as usize;
+        let kv_hot = self.pool.used_blocks() * 100 >= self.pool.capacity() * pct;
+        self.health.set_overloaded(kv_hot);
+    }
+
+    /// `Some(elapsed_ms)` when the watchdog is armed and a sequence's
+    /// step body ran past its budget without yielding control.
+    fn watchdog_overrun(&self, t0: Instant) -> Option<u64> {
+        if self.cfg.watchdog_ms == 0 {
+            return None;
+        }
+        let ms = t0.elapsed().as_millis() as u64;
+        (ms >= self.cfg.watchdog_ms).then_some(ms)
+    }
+
+    /// One sequence monopolized the step loop past `watchdog_ms`:
+    /// record the trip, mark readiness unquiet, and force-finish the
+    /// offender through the containment path (frees its blocks and
+    /// feeds the degradation breaker).
+    fn trip_watchdog(&mut self, seq: Sequence, phase: &str, elapsed_ms: u64) {
+        self.note_watchdog_trip();
+        let msg = format!(
+            "watchdog: {phase} stalled for {elapsed_ms} ms (budget {} ms); sequence force-finished",
+            self.cfg.watchdog_ms
+        );
+        self.finish_with_error(seq, &msg, true);
+    }
+
+    /// Trip bookkeeping shared by both pipelines' watchdog paths.
+    fn note_watchdog_trip(&mut self) {
+        self.metrics.inc("watchdog_trips");
+        self.last_watchdog_trip = Some(self.step_no);
+        self.health.set_watchdog_unquiet(true);
     }
 
     /// Run all queued + active sequences to completion; returns the
@@ -983,13 +1157,23 @@ impl Engine {
         // valid for the others.
         for (bi, &id) in ids.iter().enumerate() {
             let inject_panic = self.faults.take_panic(step_no, id);
+            // A scripted stall is attributed to the first row staged at
+            // the armed step, so the watchdog sees one clear offender.
+            let stall_ms = self.faults.take_stall(step_no);
+            if stall_ms.is_some() {
+                self.metrics.inc("injected_stalls");
+            }
+            let t_watch = Instant::now();
             let staged = catch_unwind(AssertUnwindSafe(|| {
                 if inject_panic {
                     panic!("injected step panic (seq {id})");
                 }
+                if let Some(ms) = stall_ms {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
                 self.stage_fused_row(id, bi, meta, &selections[&id])
             }));
-            let fail = match staged {
+            let mut fail = match staged {
                 Ok(Ok((tok, p))) => {
                     tokens[bi] = tok;
                     pos[bi] = p;
@@ -998,6 +1182,16 @@ impl Engine {
                 Ok(Err(e)) => Some(format!("decode staging failed: {e}")),
                 Err(p) => Some(format!("decode staging panicked: {}", panic_msg(p))),
             };
+            if fail.is_none() {
+                if let Some(ms) = self.watchdog_overrun(t_watch) {
+                    self.note_watchdog_trip();
+                    fail = Some(format!(
+                        "watchdog: fused staging stalled for {ms} ms (budget {} ms); \
+                         sequence force-finished",
+                        self.cfg.watchdog_ms
+                    ));
+                }
+            }
             if let Some(msg) = fail {
                 alive[bi] = false;
                 self.buf_mask[bi * row_mask..(bi + 1) * row_mask].fill(NEG);
@@ -1211,6 +1405,20 @@ impl Engine {
             }
             .into());
         }
+        if let Some(ms) = self.faults.take_stall(step_no) {
+            self.metrics.inc("injected_stalls");
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        if self.faults.take_nan(step_no, seq.id) {
+            // Poison the Radar segment summaries in place: this step's
+            // selection sees NaN scores and must fall back to exact
+            // attention; a later restructure rebuilds clean summaries
+            // from the untouched per-token features.
+            if let PolicyHolder::Radar(rp) = &mut seq.policy {
+                rp.index.poison_with_nan();
+            }
+            self.metrics.inc("injected_nans");
+        }
         let t0 = Instant::now();
         let logits = self.radar_step_logits(seq, tok, pos)?;
         self.finish_token(seq, &logits);
@@ -1228,6 +1436,7 @@ impl Engine {
         let mut k_all = vec![0.0f32; l_n * h_n * dh];
         let mut v_all = vec![0.0f32; l_n * h_n * dh];
         let mut f_all = vec![0.0f32; l_n * h_n * nf];
+        let mut anom_planes = 0u32;
         for li in 0..l_n {
             let q_out = self.metrics.time("qkv_dispatch", || {
                 self.rt.qkv(&qkv_meta, li, &self.omega, &x, &[pos as i32])
@@ -1241,6 +1450,7 @@ impl Engine {
                 let planes = rp.select_layer(
                     &self.pool, &seq.cache, &self.cfg, li, &q_out.phi_q, &q_out.q,
                 );
+                anom_planes += rp.anomalous_planes;
                 let need = planes.iter().map(Vec::len).max().unwrap_or(0).max(1);
                 (planes, need)
             };
@@ -1276,6 +1486,15 @@ impl Engine {
         if let PolicyHolder::Radar(rp) = &mut seq.policy {
             rp.on_grow(&self.pool, &seq.cache); // Alg. 1 line 8
         }
+        if anom_planes > 0 {
+            // One or more (layer, head) planes saw a non-finite segment
+            // summary or score and fell back to exact full-context
+            // attention for this step. Finite output, degraded speed —
+            // and a breaker event, so a burst flips the whole engine.
+            self.metrics.inc("anomaly_fallbacks");
+            self.metrics.add("anomalous_planes", anom_planes as u64);
+            self.breaker.record(self.step_no);
+        }
         Ok(head(&self.rt, &mc, &x))
     }
 
@@ -1284,6 +1503,18 @@ impl Engine {
     // -----------------------------------------------------------------
 
     fn finish_token(&self, seq: &mut Sequence, logits: &[f32]) {
+        // Last-line defense: never let a non-finite logit reach the
+        // sampler or the log-prob bookkeeping (the bit-pattern argmax
+        // and `ln` both misbehave on NaN).
+        let mut repaired: Vec<f32>;
+        let logits = if logits.iter().all(|x| x.is_finite()) {
+            logits
+        } else {
+            repaired = logits.to_vec();
+            sanitize_logits(&mut repaired);
+            self.metrics.inc("logit_sanitizations");
+            &repaired
+        };
         let pos = seq.cache.len(); // position of the NEXT token
         let mut emitted: Option<(i32, f64)> = None;
         if let Some(teacher) = seq.teacher.clone() {

@@ -4,11 +4,15 @@
 
 mod batcher;
 mod core;
+mod overload;
 mod request;
 
 pub use batcher::{group_by_bucket, preemption_victim, BatchGroup};
 pub use core::{Engine, StepStats};
+pub use overload::{
+    sanitize_logits, shed_victim, BreakerTransition, CircuitBreaker, HealthState, TokenBucket,
+};
 pub use request::{
-    FinishReason, GenRequest, GenResult, SeqId, Sequence, SessionEvent, SessionHandle,
+    FinishReason, GenRequest, GenResult, Priority, SeqId, Sequence, SessionEvent, SessionHandle,
     SessionResult, SubmitError, Usage,
 };

@@ -1,0 +1,350 @@
+//! Overload control: admission token bucket, load-shed victim
+//! selection, the anomaly/contained-error circuit breaker, and the
+//! shared health surface behind `/healthz` + `/readyz`.
+//!
+//! Everything here is deterministic given its inputs: the bucket takes
+//! an explicit `now`, the breaker runs on the engine's step counter,
+//! and shed selection is a pure function of (priority, id) — so the
+//! whole layer is unit-testable without a runtime and chaos runs
+//! reproduce bit-for-bit.
+
+use crate::engine::request::{Priority, SeqId};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Cost-aware admission gate: a token bucket over *estimated decode
+/// cost* (uncached prefill tokens + max_new_tokens), refilled at
+/// `rate` tokens/second up to `burst`. `rate <= 0` disables the gate.
+#[derive(Debug)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Option<Instant>,
+}
+
+impl TokenBucket {
+    /// A new bucket starts full, so a burst up to `burst` tokens is
+    /// admitted immediately after startup.
+    pub fn new(rate: f64, burst: f64) -> Self {
+        let burst = burst.max(1.0);
+        Self { rate, burst, tokens: burst, last: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// Try to take `cost` tokens at time `now`. `Err(retry_after_ms)`
+    /// says how long until the deficit refills. A cost above `burst`
+    /// is clamped to it, so oversized requests are admitted eventually
+    /// instead of starving forever.
+    pub fn try_take(&mut self, cost: f64, now: Instant) -> Result<(), u64> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        if let Some(last) = self.last {
+            let dt = now.saturating_duration_since(last).as_secs_f64();
+            self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        }
+        self.last = Some(now);
+        let cost = cost.max(0.0).min(self.burst);
+        if self.tokens >= cost {
+            self.tokens -= cost;
+            return Ok(());
+        }
+        let deficit = cost - self.tokens;
+        let retry_after_ms = (deficit / self.rate * 1e3).ceil() as u64;
+        Err(retry_after_ms.max(1))
+    }
+}
+
+/// Pick the queued entry to shed so `incoming` can be admitted: only
+/// strictly lower classes are eligible, the lowest class goes first,
+/// and within a class the youngest entry (highest id — least sunk
+/// queue wait) goes first. `None` means nothing outranks the incoming
+/// request and the incoming request itself must be rejected.
+pub fn shed_victim(
+    queued: impl Iterator<Item = (SeqId, Priority)>,
+    incoming: Priority,
+) -> Option<SeqId> {
+    queued
+        .filter(|(_, p)| *p < incoming)
+        .min_by_key(|(id, p)| (*p, std::cmp::Reverse(*id)))
+        .map(|(id, _)| id)
+}
+
+/// A breaker transition the engine should surface as a metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerTransition {
+    Entered,
+    Exited,
+}
+
+/// Counter-tracked circuit breaker on the engine's step clock: once
+/// `threshold` events (Radar anomalies, contained errors, watchdog
+/// trips) land within a `window`-step span, the engine flips into
+/// exact-attention degraded mode for `cooldown` steps, then recovers.
+/// `threshold == 0` disables the breaker.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    window: u64,
+    cooldown: u64,
+    /// Step numbers of recent events, oldest first.
+    events: VecDeque<u64>,
+    degraded_until: Option<u64>,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, window: u64, cooldown: u64) -> Self {
+        Self {
+            threshold,
+            window: window.max(1),
+            cooldown: cooldown.max(1),
+            events: VecDeque::new(),
+            degraded_until: None,
+        }
+    }
+
+    /// Record one anomaly/error event at engine step `step`.
+    pub fn record(&mut self, step: u64) {
+        if self.threshold > 0 {
+            self.events.push_back(step);
+        }
+    }
+
+    pub fn degraded(&self) -> bool {
+        self.degraded_until.is_some()
+    }
+
+    /// Advance the step clock: expire old events, trip on threshold,
+    /// recover after cool-down. At most one transition per step.
+    pub fn tick(&mut self, step: u64) -> Option<BreakerTransition> {
+        if self.threshold == 0 {
+            return None;
+        }
+        if let Some(until) = self.degraded_until {
+            if step >= until {
+                self.degraded_until = None;
+                self.events.clear();
+                return Some(BreakerTransition::Exited);
+            }
+            return None;
+        }
+        while let Some(&front) = self.events.front() {
+            if front + self.window <= step {
+                self.events.pop_front();
+            } else {
+                break;
+            }
+        }
+        if self.events.len() >= self.threshold as usize {
+            self.degraded_until = Some(step + self.cooldown);
+            self.events.clear();
+            return Some(BreakerTransition::Entered);
+        }
+        None
+    }
+}
+
+/// Liveness/readiness shared between the engine loop (writer) and HTTP
+/// connection threads (readers). Plain atomics: the engine publishes
+/// after each step, `/readyz` only ever reads.
+#[derive(Debug, Default)]
+pub struct HealthState {
+    /// Set by SIGTERM or `/admin/drain`; admissions stop immediately.
+    draining: AtomicBool,
+    /// KV pool at or above the shed watermark.
+    overloaded: AtomicBool,
+    /// A watchdog trip within the recent quiet window.
+    watchdog_unquiet: AtomicBool,
+}
+
+impl HealthState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    pub fn set_overloaded(&self, v: bool) {
+        self.overloaded.store(v, Ordering::Release);
+    }
+
+    pub fn set_watchdog_unquiet(&self, v: bool) {
+        self.watchdog_unquiet.store(v, Ordering::Release);
+    }
+
+    /// Readiness = not draining, KV pool below watermark, watchdog
+    /// quiet. Liveness (`/healthz`) is the process answering at all.
+    pub fn ready(&self) -> bool {
+        !self.draining()
+            && !self.overloaded.load(Ordering::Acquire)
+            && !self.watchdog_unquiet.load(Ordering::Acquire)
+    }
+}
+
+/// Replace non-finite logits with a large negative so sampling stays
+/// well-defined even if an anomaly slipped past selection-level
+/// fallback. Returns true if anything had to be repaired.
+pub fn sanitize_logits(logits: &mut [f32]) -> bool {
+    let mut repaired = false;
+    for x in logits.iter_mut() {
+        if !x.is_finite() {
+            *x = -1e30;
+            repaired = true;
+        }
+    }
+    repaired
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_bucket_admits_everything() {
+        let mut b = TokenBucket::new(0.0, 1.0);
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            assert!(b.try_take(1e9, t0).is_ok());
+        }
+    }
+
+    #[test]
+    fn bucket_enforces_rate_and_computes_retry_after() {
+        // 1000 tokens/s, burst 100: the first 100-cost request drains
+        // the bucket; the next needs ~50ms to refill 50 tokens.
+        let mut b = TokenBucket::new(1000.0, 100.0);
+        let t0 = Instant::now();
+        assert!(b.try_take(100.0, t0).is_ok());
+        let retry = b.try_take(50.0, t0).unwrap_err();
+        assert_eq!(retry, 50, "deficit of 50 tokens at 1000/s is 50 ms");
+        // After 60ms the bucket holds 60 tokens again.
+        let t1 = t0 + Duration::from_millis(60);
+        assert!(b.try_take(50.0, t1).is_ok());
+    }
+
+    #[test]
+    fn bucket_clamps_oversized_costs_to_burst() {
+        let mut b = TokenBucket::new(100.0, 10.0);
+        let t0 = Instant::now();
+        // Cost 1e6 >> burst 10: admitted as a full-bucket take, not
+        // rejected forever.
+        assert!(b.try_take(1e6, t0).is_ok());
+        let retry = b.try_take(1e6, t0).unwrap_err();
+        assert_eq!(retry, 100, "full burst at 100/s refills in 100 ms");
+        assert!(b.try_take(1e6, t0 + Duration::from_millis(150)).is_ok());
+    }
+
+    #[test]
+    fn bucket_caps_refill_at_burst() {
+        let mut b = TokenBucket::new(1000.0, 50.0);
+        let t0 = Instant::now();
+        assert!(b.try_take(50.0, t0).is_ok());
+        // A long idle period must not bank more than `burst`.
+        let t1 = t0 + Duration::from_secs(3600);
+        assert!(b.try_take(50.0, t1).is_ok());
+        assert!(b.try_take(1.0, t1).is_err());
+    }
+
+    #[test]
+    fn shed_picks_lowest_priority_then_youngest() {
+        let q = [
+            (1, Priority::Normal),
+            (2, Priority::Batch),
+            (3, Priority::Batch),
+            (4, Priority::High),
+        ];
+        // Batch before Normal; youngest batch entry (id 3) first.
+        assert_eq!(shed_victim(q.iter().copied(), Priority::High), Some(3));
+        // A normal arrival may only displace batch work.
+        assert_eq!(shed_victim(q.iter().copied(), Priority::Normal), Some(3));
+        // A batch arrival outranks nothing.
+        assert_eq!(shed_victim(q.iter().copied(), Priority::Batch), None);
+        // Equal priority is never shed (strictly lower only).
+        let all_high = [(1, Priority::High), (2, Priority::High)];
+        assert_eq!(shed_victim(all_high.iter().copied(), Priority::High), None);
+        assert_eq!(shed_victim(std::iter::empty(), Priority::High), None);
+    }
+
+    #[test]
+    fn breaker_trips_on_threshold_within_window() {
+        let mut cb = CircuitBreaker::new(3, 10, 5);
+        cb.record(1);
+        cb.record(2);
+        assert_eq!(cb.tick(2), None, "below threshold");
+        assert!(!cb.degraded());
+        cb.record(3);
+        assert_eq!(cb.tick(3), Some(BreakerTransition::Entered));
+        assert!(cb.degraded());
+        // Stays degraded through the cool-down, no repeat transitions.
+        for s in 4..8 {
+            assert_eq!(cb.tick(s), None);
+            assert!(cb.degraded());
+        }
+        assert_eq!(cb.tick(8), Some(BreakerTransition::Exited));
+        assert!(!cb.degraded());
+        assert_eq!(cb.tick(9), None);
+    }
+
+    #[test]
+    fn breaker_window_expires_stale_events() {
+        let mut cb = CircuitBreaker::new(2, 5, 4);
+        cb.record(1);
+        assert_eq!(cb.tick(1), None);
+        // Step 10: the step-1 event left the 5-step window long ago.
+        cb.record(10);
+        assert_eq!(cb.tick(10), None, "stale events must not count");
+        cb.record(11);
+        assert_eq!(cb.tick(11), Some(BreakerTransition::Entered));
+    }
+
+    #[test]
+    fn breaker_disabled_at_zero_threshold() {
+        let mut cb = CircuitBreaker::new(0, 5, 5);
+        for s in 1..50 {
+            cb.record(s);
+            assert_eq!(cb.tick(s), None);
+            assert!(!cb.degraded());
+        }
+    }
+
+    #[test]
+    fn health_readiness_composes_all_conditions() {
+        let h = HealthState::new();
+        assert!(h.ready(), "fresh engine is ready");
+        h.set_overloaded(true);
+        assert!(!h.ready());
+        h.set_overloaded(false);
+        h.set_watchdog_unquiet(true);
+        assert!(!h.ready());
+        h.set_watchdog_unquiet(false);
+        assert!(h.ready());
+        h.begin_drain();
+        assert!(h.draining());
+        assert!(!h.ready(), "draining is terminal for readiness");
+    }
+
+    #[test]
+    fn sanitize_replaces_only_nonfinite_logits() {
+        let mut v = vec![0.5, f32::NAN, f32::INFINITY, -2.0, f32::NEG_INFINITY];
+        assert!(sanitize_logits(&mut v));
+        assert_eq!(v[0], 0.5);
+        assert_eq!(v[3], -2.0);
+        assert!(v.iter().all(|x| x.is_finite()));
+        assert_eq!(v[1], -1e30);
+        let mut clean = vec![1.0f32, 2.0];
+        assert!(!sanitize_logits(&mut clean));
+        assert_eq!(clean, vec![1.0, 2.0]);
+    }
+}

@@ -17,6 +17,39 @@ use std::time::Instant;
 
 pub type SeqId = u64;
 
+/// Admission priority class. Declaration order gives the derived `Ord`
+/// (`Batch < Normal < High`): under load-shedding, lower classes are
+/// dropped first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Best-effort background work: first to be shed under pressure.
+    Batch,
+    /// Interactive traffic (the default).
+    #[default]
+    Normal,
+    /// Latency-critical traffic: never shed for lower classes.
+    High,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "batch" => Some(Self::Batch),
+            "normal" => Some(Self::Normal),
+            "high" => Some(Self::High),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Batch => "batch",
+            Self::Normal => "normal",
+            Self::High => "high",
+        }
+    }
+}
+
 /// An inbound generation request.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
@@ -41,6 +74,9 @@ pub struct GenRequest {
     /// to the engine's `ServingConfig::timeout_ms`; `Some(0)` opts out
     /// even when the engine has a default deadline.
     pub timeout_ms: Option<u64>,
+    /// Admission priority class (load shedding drops lower classes
+    /// first when the queue or KV pool crosses its watermark).
+    pub priority: Priority,
 }
 
 impl GenRequest {
@@ -55,6 +91,7 @@ impl GenRequest {
             seed: None,
             prefix_cache: true,
             timeout_ms: None,
+            priority: Priority::default(),
         }
     }
 
@@ -236,13 +273,21 @@ impl SessionHandle {
     }
 }
 
-/// Admission failure surfaced by `Engine::submit` (maps to HTTP 429/400).
+/// Admission failure surfaced by `Engine::submit` (maps to HTTP
+/// 429/400/503; rate-limit and shed rejections carry a retry hint the
+/// server turns into a `Retry-After` header).
 #[derive(Debug, thiserror::Error)]
 pub enum SubmitError {
     #[error("pending queue full ({depth} queued); retry later")]
     QueueFull { depth: usize },
     #[error("request needs {need} tokens > max_seq_len {max}")]
     TooLong { need: usize, max: usize },
+    #[error("admission rate limited; retry in {retry_after_ms} ms")]
+    RateLimited { retry_after_ms: u64 },
+    #[error("shed under load: queue or KV pool over watermark; retry in {retry_after_ms} ms")]
+    Shed { retry_after_ms: u64 },
+    #[error("server draining; no new work accepted")]
+    Draining,
 }
 
 /// Which decode pipeline serves the sequence.
@@ -449,6 +494,18 @@ mod tests {
         assert!(!h.is_cancelled());
         h.cancel();
         assert!(cancel.load(Ordering::Acquire));
+    }
+
+    #[test]
+    fn priority_orders_batch_below_normal_below_high() {
+        assert!(Priority::Batch < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+        for p in [Priority::Batch, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(GenRequest::new(vec![1], 4).priority, Priority::Normal);
     }
 
     #[test]

@@ -3,13 +3,14 @@
 //! A `FaultPlan` is a list of scripted events keyed by the engine's
 //! 1-based step counter: allocation failures (surface as KV-cache
 //! exhaustion and exercise the preemption path), step panics (exercise
-//! per-sequence containment), and slow steps (exercise deadlines).
-//! Plans are either written out explicitly (`alloc@5:2,panic@9`) or
-//! generated from a seed (`seeded:42:100:6`) via `util::prng`, so a
-//! failing chaos run reproduces bit-for-bit from its seed.
+//! per-sequence containment), slow steps (exercise deadlines), stalls
+//! (exercise the watchdog), and NaN poisoning of Radar segment
+//! summaries (exercise the exact-attention fallback). Plans are either
+//! written out explicitly (`alloc@5:2,panic@9`) or generated from a
+//! seed (`seeded:42:100:6`) via `util::prng`, so a failing chaos run
+//! reproduces bit-for-bit from its seed.
 
 use crate::util::prng::SplitMix64;
-use anyhow::{anyhow, bail, Result};
 
 /// What to inject. `seq: None` targets whichever sequence is queried
 /// first at the scripted step (deterministic: queries follow id order).
@@ -21,6 +22,12 @@ pub enum FaultKind {
     StepPanic { seq: Option<u64> },
     /// Sleep this long before the step runs (deadline pressure).
     SlowStep { ms: u64 },
+    /// Poison the matching sequence's Radar segment summaries with
+    /// NaNs (anomaly-fallback pressure).
+    NanInject { seq: Option<u64> },
+    /// Sleep this long *inside* one sequence's step body (watchdog
+    /// pressure: the stall is attributable to that sequence).
+    Stall { ms: u64 },
 }
 
 /// One scripted event, armed at a 1-based engine step.
@@ -28,6 +35,26 @@ pub enum FaultKind {
 pub struct FaultEvent {
     pub step: u64,
     pub kind: FaultKind,
+}
+
+/// A malformed fault spec. Typed so config validation can surface the
+/// precise reason instead of a stringly-typed parse failure.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum FaultSpecError {
+    #[error("empty fault spec")]
+    Empty,
+    #[error("fault event {event:?} missing '@STEP'")]
+    MissingStep { event: String },
+    #[error("unknown fault kind {kind:?} in {event:?} (want alloc|panic|nan|slow|stall)")]
+    UnknownKind { kind: String, event: String },
+    #[error("bad step in {event:?}: {reason}")]
+    BadStep { event: String, reason: &'static str },
+    #[error("bad sequence id in {event:?}: want an unsigned integer")]
+    BadSeq { event: String },
+    #[error("bad duration in {event:?}: want {kind}@STEPxMS with unsigned integer MS")]
+    BadDuration { event: String, kind: &'static str },
+    #[error("seeded spec wants seeded:SEED:HORIZON:COUNT with unsigned integers, got {spec:?}")]
+    BadSeeded { spec: String },
 }
 
 /// A deterministic schedule of faults.
@@ -42,24 +69,29 @@ impl FaultPlan {
     /// Grammar (comma-separated events):
     ///   alloc@STEP[:SEQ]   fail a block allocation at STEP
     ///   panic@STEP[:SEQ]   panic in a sequence's step body at STEP
+    ///   nan@STEP[:SEQ]     poison Radar segment summaries at STEP
     ///   slow@STEPxMS       sleep MS milliseconds before STEP
+    ///   stall@STEPxMS      sleep MS inside one sequence's step body
     ///
     /// Or a whole-spec seeded form: `seeded:SEED:HORIZON:COUNT`.
-    pub fn parse(spec: &str) -> Result<Self> {
+    ///
+    /// Malformed specs — a missing `@STEP`, step 0, negative or
+    /// overflowing numbers, an unknown kind — are typed errors, never
+    /// silently skipped.
+    pub fn parse(spec: &str) -> Result<Self, FaultSpecError> {
         let spec = spec.trim();
         if spec.is_empty() {
-            bail!("empty fault spec");
+            return Err(FaultSpecError::Empty);
         }
         if let Some(rest) = spec.strip_prefix("seeded:") {
+            let bad = || FaultSpecError::BadSeeded { spec: spec.to_string() };
             let parts: Vec<&str> = rest.split(':').collect();
             if parts.len() != 3 {
-                bail!("seeded spec wants seeded:SEED:HORIZON:COUNT, got {spec:?}");
+                return Err(bad());
             }
-            let seed: u64 = parts[0].parse().map_err(|_| anyhow!("bad seed {:?}", parts[0]))?;
-            let horizon: u64 =
-                parts[1].parse().map_err(|_| anyhow!("bad horizon {:?}", parts[1]))?;
-            let count: usize =
-                parts[2].parse().map_err(|_| anyhow!("bad count {:?}", parts[2]))?;
+            let seed: u64 = parts[0].parse().map_err(|_| bad())?;
+            let horizon: u64 = parts[1].parse().map_err(|_| bad())?;
+            let count: usize = parts[2].parse().map_err(|_| bad())?;
             return Ok(Self::seeded(seed, horizon, count));
         }
         let mut events = Vec::new();
@@ -67,41 +99,61 @@ impl FaultPlan {
             let ev = ev.trim();
             let (kind, rest) = ev
                 .split_once('@')
-                .ok_or_else(|| anyhow!("fault event {ev:?} missing '@STEP'"))?;
-            let parse_step = |s: &str| -> Result<u64> {
-                let step: u64 = s.parse().map_err(|_| anyhow!("bad step in {ev:?}"))?;
+                .ok_or_else(|| FaultSpecError::MissingStep { event: ev.to_string() })?;
+            let parse_step = |s: &str| -> Result<u64, FaultSpecError> {
+                let step: u64 = s.parse().map_err(|_| FaultSpecError::BadStep {
+                    event: ev.to_string(),
+                    reason: "want an unsigned integer",
+                })?;
                 if step == 0 {
-                    bail!("fault steps are 1-based, got 0 in {ev:?}");
+                    return Err(FaultSpecError::BadStep {
+                        event: ev.to_string(),
+                        reason: "steps are 1-based, got 0",
+                    });
                 }
                 Ok(step)
             };
             let event = match kind {
-                "alloc" | "panic" => {
+                "alloc" | "panic" | "nan" => {
                     let (step_s, seq) = match rest.split_once(':') {
                         Some((st, sq)) => {
-                            let sq: u64 =
-                                sq.parse().map_err(|_| anyhow!("bad seq id in {ev:?}"))?;
+                            let sq: u64 = sq
+                                .parse()
+                                .map_err(|_| FaultSpecError::BadSeq { event: ev.to_string() })?;
                             (st, Some(sq))
                         }
                         None => (rest, None),
                     };
                     let step = parse_step(step_s)?;
-                    let k = if kind == "alloc" {
-                        FaultKind::AllocFail { seq }
-                    } else {
-                        FaultKind::StepPanic { seq }
+                    let k = match kind {
+                        "alloc" => FaultKind::AllocFail { seq },
+                        "panic" => FaultKind::StepPanic { seq },
+                        _ => FaultKind::NanInject { seq },
                     };
                     FaultEvent { step, kind: k }
                 }
-                "slow" => {
-                    let (step_s, ms_s) = rest
-                        .split_once('x')
-                        .ok_or_else(|| anyhow!("slow event wants slow@STEPxMS, got {ev:?}"))?;
+                "slow" | "stall" => {
+                    let dur_kind = if kind == "slow" { "slow" } else { "stall" };
+                    let bad = || FaultSpecError::BadDuration {
+                        event: ev.to_string(),
+                        kind: dur_kind,
+                    };
+                    let (step_s, ms_s) = rest.split_once('x').ok_or_else(bad)?;
                     let step = parse_step(step_s)?;
-                    let ms: u64 = ms_s.parse().map_err(|_| anyhow!("bad ms in {ev:?}"))?;
-                    FaultEvent { step, kind: FaultKind::SlowStep { ms } }
+                    let ms: u64 = ms_s.parse().map_err(|_| bad())?;
+                    let k = if kind == "slow" {
+                        FaultKind::SlowStep { ms }
+                    } else {
+                        FaultKind::Stall { ms }
+                    };
+                    FaultEvent { step, kind: k }
                 }
-                other => bail!("unknown fault kind {other:?} (want alloc|panic|slow)"),
+                other => {
+                    return Err(FaultSpecError::UnknownKind {
+                        kind: other.to_string(),
+                        event: ev.to_string(),
+                    })
+                }
             };
             events.push(event);
         }
@@ -110,7 +162,9 @@ impl FaultPlan {
     }
 
     /// Generate `count` faults uniformly over steps [1, horizon] from a
-    /// seed. Same seed, same plan — chaos runs are replayable.
+    /// seed. Same seed, same plan — chaos runs are replayable. Seeded
+    /// plans draw only the three original kinds so historical seeds
+    /// keep scripting the same faults; `nan@`/`stall@` are explicit.
     pub fn seeded(seed: u64, horizon: u64, count: usize) -> Self {
         let mut r = SplitMix64::new(seed);
         let mut events = Vec::with_capacity(count);
@@ -161,27 +215,60 @@ impl ActiveFaults {
         None
     }
 
-    /// Consume an allocation-failure event armed at `step` targeting
-    /// `seq` (untargeted events match the first sequence queried).
-    pub fn take_alloc(&mut self, step: u64, seq: u64) -> bool {
-        self.take_targeted(step, seq, true)
-    }
-
-    /// Consume a panic event armed at `step` targeting `seq`.
-    pub fn take_panic(&mut self, step: u64, seq: u64) -> bool {
-        self.take_targeted(step, seq, false)
-    }
-
-    fn take_targeted(&mut self, step: u64, seq: u64, alloc: bool) -> bool {
+    /// Consume a stall event armed at `step`, returning its delay. The
+    /// engine calls this inside each sequence's step body, so the first
+    /// sequence queried at the armed step owns the stall.
+    pub fn take_stall(&mut self, step: u64) -> Option<u64> {
         for (i, ev) in self.events.iter().enumerate() {
             if self.fired[i] || ev.step != step {
                 continue;
             }
-            let target = match ev.kind {
-                FaultKind::AllocFail { seq } if alloc => seq,
-                FaultKind::StepPanic { seq } if !alloc => seq,
-                _ => continue,
-            };
+            if let FaultKind::Stall { ms } = ev.kind {
+                self.fired[i] = true;
+                return Some(ms);
+            }
+        }
+        None
+    }
+
+    /// Consume an allocation-failure event armed at `step` targeting
+    /// `seq` (untargeted events match the first sequence queried).
+    pub fn take_alloc(&mut self, step: u64, seq: u64) -> bool {
+        self.take_targeted(step, seq, |k| match k {
+            FaultKind::AllocFail { seq } => Some(seq),
+            _ => None,
+        })
+    }
+
+    /// Consume a panic event armed at `step` targeting `seq`.
+    pub fn take_panic(&mut self, step: u64, seq: u64) -> bool {
+        self.take_targeted(step, seq, |k| match k {
+            FaultKind::StepPanic { seq } => Some(seq),
+            _ => None,
+        })
+    }
+
+    /// Consume a NaN-poisoning event armed at `step` targeting `seq`.
+    pub fn take_nan(&mut self, step: u64, seq: u64) -> bool {
+        self.take_targeted(step, seq, |k| match k {
+            FaultKind::NanInject { seq } => Some(seq),
+            _ => None,
+        })
+    }
+
+    /// `pick` extracts the target from matching kinds; `None` means
+    /// the event is of a different kind.
+    fn take_targeted(
+        &mut self,
+        step: u64,
+        seq: u64,
+        pick: impl Fn(FaultKind) -> Option<Option<u64>>,
+    ) -> bool {
+        for (i, ev) in self.events.iter().enumerate() {
+            if self.fired[i] || ev.step != step {
+                continue;
+            }
+            let Some(target) = pick(ev.kind) else { continue };
             let hit = match target {
                 Some(t) => t == seq,
                 None => true,
@@ -213,6 +300,19 @@ mod tests {
     }
 
     #[test]
+    fn parse_nan_and_stall_events() {
+        let p = FaultPlan::parse("nan@4:2,stall@7x30,nan@9").unwrap();
+        assert_eq!(
+            p.events,
+            vec![
+                FaultEvent { step: 4, kind: FaultKind::NanInject { seq: Some(2) } },
+                FaultEvent { step: 7, kind: FaultKind::Stall { ms: 30 } },
+                FaultEvent { step: 9, kind: FaultKind::NanInject { seq: None } },
+            ]
+        );
+    }
+
+    #[test]
     fn parse_sorts_by_step() {
         let p = FaultPlan::parse("panic@9,alloc@3").unwrap();
         assert_eq!(p.events[0].step, 3);
@@ -220,11 +320,62 @@ mod tests {
     }
 
     #[test]
-    fn parse_rejects_bad_specs() {
-        for bad in ["", "alloc", "alloc@0", "alloc@x", "boom@3", "slow@5", "slow@5x", "seeded:1:2"]
-        {
-            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should fail");
-        }
+    fn parse_rejects_bad_specs_with_typed_errors() {
+        use FaultSpecError as E;
+        let err = |s: &str| FaultPlan::parse(s).unwrap_err();
+        assert_eq!(err(""), E::Empty);
+        assert_eq!(err("   "), E::Empty);
+        assert_eq!(err("alloc"), E::MissingStep { event: "alloc".into() });
+        assert_eq!(
+            err("alloc@0"),
+            E::BadStep { event: "alloc@0".into(), reason: "steps are 1-based, got 0" }
+        );
+        assert_eq!(
+            err("alloc@x"),
+            E::BadStep { event: "alloc@x".into(), reason: "want an unsigned integer" }
+        );
+        assert_eq!(
+            err("alloc@-3"),
+            E::BadStep { event: "alloc@-3".into(), reason: "want an unsigned integer" }
+        );
+        assert_eq!(
+            err("panic@99999999999999999999"),
+            E::BadStep {
+                event: "panic@99999999999999999999".into(),
+                reason: "want an unsigned integer"
+            },
+            "overflowing step must be rejected, not wrapped"
+        );
+        assert_eq!(err("alloc@"), E::BadStep {
+            event: "alloc@".into(),
+            reason: "want an unsigned integer"
+        });
+        assert_eq!(err("panic@3:-1"), E::BadSeq { event: "panic@3:-1".into() });
+        assert_eq!(err("nan@2:x"), E::BadSeq { event: "nan@2:x".into() });
+        assert_eq!(
+            err("boom@3"),
+            E::UnknownKind { kind: "boom".into(), event: "boom@3".into() }
+        );
+        assert_eq!(err("slow@5"), E::BadDuration { event: "slow@5".into(), kind: "slow" });
+        assert_eq!(err("slow@5x"), E::BadDuration { event: "slow@5x".into(), kind: "slow" });
+        assert_eq!(err("stall@5"), E::BadDuration { event: "stall@5".into(), kind: "stall" });
+        assert_eq!(
+            err("stall@5x-2"),
+            E::BadDuration { event: "stall@5x-2".into(), kind: "stall" }
+        );
+        assert_eq!(err("seeded:1:2"), E::BadSeeded { spec: "seeded:1:2".into() });
+        assert_eq!(err("seeded:1:2:x"), E::BadSeeded { spec: "seeded:1:2:x".into() });
+        assert_eq!(err("seeded:-1:2:3"), E::BadSeeded { spec: "seeded:-1:2:3".into() });
+        // One bad event poisons the whole spec — nothing is skipped.
+        assert!(FaultPlan::parse("alloc@3,boom@4").is_err());
+    }
+
+    #[test]
+    fn spec_errors_render_the_offending_event() {
+        let msg = FaultPlan::parse("slow@5x").unwrap_err().to_string();
+        assert!(msg.contains("slow@5x"), "error must quote the event: {msg}");
+        let msg = FaultPlan::parse("boom@3").unwrap_err().to_string();
+        assert!(msg.contains("boom"), "error must name the unknown kind: {msg}");
     }
 
     #[test]
@@ -258,6 +409,17 @@ mod tests {
     }
 
     #[test]
+    fn nan_events_fire_once_per_target() {
+        let mut af = ActiveFaults::new(Some(FaultPlan::parse("nan@3:2,nan@5").unwrap()));
+        assert!(!af.take_nan(3, 1), "wrong seq must not fire");
+        assert!(af.take_nan(3, 2));
+        assert!(!af.take_nan(3, 2), "one-shot");
+        // Untargeted nan hits the first queried sequence.
+        assert!(af.take_nan(5, 7));
+        assert!(!af.take_nan(5, 8));
+    }
+
+    #[test]
     fn slow_steps_fire_once() {
         let mut af = ActiveFaults::new(Some(FaultPlan::parse("slow@3x7").unwrap()));
         assert_eq!(af.take_slow(2), None);
@@ -265,5 +427,13 @@ mod tests {
         assert_eq!(af.take_slow(3), None);
         assert!(!af.is_empty());
         assert!(ActiveFaults::new(None).is_empty());
+    }
+
+    #[test]
+    fn stalls_fire_once_for_the_first_caller() {
+        let mut af = ActiveFaults::new(Some(FaultPlan::parse("stall@2x9").unwrap()));
+        assert_eq!(af.take_stall(1), None);
+        assert_eq!(af.take_stall(2), Some(9), "first sequence queried owns the stall");
+        assert_eq!(af.take_stall(2), None, "one-shot");
     }
 }

@@ -65,10 +65,24 @@ pub fn robustness_summary(m: &Metrics) -> String {
     } else {
         format!(" (mean recovery {:.1} ms)", m.latency_mean_us("preempt_recovery") / 1e3)
     };
-    format!(
+    let mut s = format!(
         "robustness: {contained} contained errors, {preemptions} preemptions{recovery}, \
          {timeouts} timeouts"
-    )
+    );
+    // Overload/degradation counters only appear when something fired,
+    // so quiet runs keep the short historical line.
+    for (name, label) in [
+        ("shed_requests", "shed"),
+        ("watchdog_trips", "watchdog trips"),
+        ("anomaly_fallbacks", "anomaly fallbacks"),
+        ("degraded_mode_entered", "degraded-mode entries"),
+    ] {
+        let n = m.counter(name);
+        if n > 0 {
+            s.push_str(&format!(", {n} {label}"));
+        }
+    }
+    s
 }
 
 #[cfg(test)]
@@ -111,5 +125,22 @@ mod tests {
         assert!(s.contains("1 contained errors"), "{s}");
         assert!(s.contains("2 preemptions (mean recovery 2.0 ms)"), "{s}");
         assert!(s.contains("1 timeouts"), "{s}");
+    }
+
+    #[test]
+    fn robustness_summary_appends_overload_counters_only_when_nonzero() {
+        let m = Metrics::new();
+        let quiet = robustness_summary(&m);
+        assert!(!quiet.contains("shed"), "{quiet}");
+        assert!(!quiet.contains("watchdog"), "{quiet}");
+        m.add("shed_requests", 3);
+        m.inc("watchdog_trips");
+        m.add("anomaly_fallbacks", 2);
+        m.inc("degraded_mode_entered");
+        let s = robustness_summary(&m);
+        assert!(s.contains("3 shed"), "{s}");
+        assert!(s.contains("1 watchdog trips"), "{s}");
+        assert!(s.contains("2 anomaly fallbacks"), "{s}");
+        assert!(s.contains("1 degraded-mode entries"), "{s}");
     }
 }

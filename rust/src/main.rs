@@ -23,7 +23,20 @@ robustness (--set k=v, comma-separated):
   queue_timeout_ms=N   max queue wait before 408 (0 = none)
   max_preemptions=N    KV-pressure preempt budget per request
   faults=SPEC          deterministic fault injection, e.g.
-                       'panic@3:1,alloc@5,slow@2x10' or 'seeded:42:20:4'
+                       'panic@3:1,alloc@5,slow@2x10,nan@4:1,stall@6x50'
+                       or 'seeded:42:20:4'
+
+overload & degradation (--set k=v):
+  admit_rate=R         token-bucket refill, cost units/s (0 = admission off)
+  admit_burst=B        token-bucket capacity (cost units)
+  shed_watermark_pct=P queue/KV high-watermark that arms priority shedding
+  watchdog_ms=N        per-step stall budget; offender force-finished (0 = off)
+  drain_timeout_ms=N   graceful-drain deadline on SIGTERM / POST /admin/drain
+  breaker_threshold=N  anomalies per window that flip exact-attention fallback
+  breaker_window=N     breaker sliding window (engine steps)
+  breaker_cooldown=N   quiet steps before degraded mode exits
+  requests may set \"priority\": \"high\"|\"normal\"|\"batch\" (default normal);
+  health surface: GET /healthz, GET /readyz, GET /metrics, POST /admin/drain
 
 experiments (paper artifacts):
   fig2        PPL + time curves: vanilla vs streaming vs radar
@@ -153,7 +166,10 @@ fn generate(args: &Args, root: &str) -> Result<()> {
     }
     let faults = engine.metrics.counter("contained_errors")
         + engine.metrics.counter("preemptions")
-        + engine.metrics.counter("timeouts");
+        + engine.metrics.counter("timeouts")
+        + engine.metrics.counter("shed_requests")
+        + engine.metrics.counter("watchdog_trips")
+        + engine.metrics.counter("anomaly_fallbacks");
     if faults > 0 {
         eprintln!("[{}]", radar_serve::harness::report::robustness_summary(&engine.metrics));
     }

@@ -68,28 +68,53 @@ impl Metrics {
         self.inner.lock().unwrap().histograms.get(name).map(|s| s.len()).unwrap_or(0)
     }
 
+    /// Mean of the named histogram; an empty or missing histogram is 0,
+    /// never NaN, so dashboards and summaries render cleanly.
     pub fn histogram_mean(&self, name: &str) -> f64 {
         self.inner
             .lock()
             .unwrap()
             .histograms
             .get(name)
+            .filter(|s| !s.is_empty())
             .map(|s| s.mean())
-            .unwrap_or(f64::NAN)
+            .unwrap_or(0.0)
+    }
+
+    /// Percentile (`p` in [0, 100]) of the named histogram; an empty or
+    /// missing histogram is 0, never NaN.
+    pub fn histogram_percentile(&self, name: &str, p: f64) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .get(name)
+            .filter(|s| !s.is_empty())
+            .map(|s| s.percentile(p))
+            .unwrap_or(0.0)
     }
 
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
     }
 
+    /// All counters in deterministic (lexicographic) order — the
+    /// BTreeMap ordering, independent of insertion order.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        let g = self.inner.lock().unwrap();
+        g.counters.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Mean of the named latency series; empty/missing is 0, not NaN.
     pub fn latency_mean_us(&self, name: &str) -> f64 {
         self.inner
             .lock()
             .unwrap()
             .latencies_us
             .get(name)
+            .filter(|s| !s.is_empty())
             .map(|s| s.mean())
-            .unwrap_or(f64::NAN)
+            .unwrap_or(0.0)
     }
 
     pub fn latency_count(&self, name: &str) -> usize {
@@ -194,11 +219,42 @@ mod tests {
         assert_eq!(m.histogram_count("prefill_tokens_saved"), 3);
         assert!((m.histogram_mean("prefill_tokens_saved") - 20.0).abs() < 1e-9);
         assert_eq!(m.histogram_count("missing"), 0);
-        assert!(m.histogram_mean("missing").is_nan());
         let r = m.render();
         assert!(r.contains("histogram prefill_tokens_saved count 3"));
         m.reset();
         assert_eq!(m.histogram_count("prefill_tokens_saved"), 0);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero_not_nan() {
+        let m = Metrics::new();
+        // Missing series: queries return 0 and render stays finite.
+        assert_eq!(m.histogram_mean("missing"), 0.0);
+        assert_eq!(m.histogram_percentile("missing", 50.0), 0.0);
+        assert_eq!(m.histogram_percentile("missing", 99.0), 0.0);
+        assert_eq!(m.latency_mean_us("missing"), 0.0);
+        // Present series: percentiles come from the data.
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            m.observe("h", v);
+        }
+        assert!(m.histogram_percentile("h", 50.0) >= 1.0);
+        assert!(m.histogram_percentile("h", 100.0) <= 4.0);
+        assert!(m.histogram_mean("h").is_finite());
+    }
+
+    #[test]
+    fn counter_snapshot_order_is_deterministic() {
+        let m = Metrics::new();
+        // Insertion order deliberately scrambled; snapshot must sort.
+        m.inc("zeta");
+        m.inc("alpha");
+        m.add("midway", 3);
+        let snap = m.counters_snapshot();
+        let names: Vec<&str> = snap.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "midway", "zeta"]);
+        assert_eq!(snap[2], ("zeta".to_string(), 1));
+        let again = m.counters_snapshot();
+        assert_eq!(snap, again, "same state must snapshot identically");
     }
 
     #[test]

@@ -32,10 +32,25 @@ pub struct RadarPolicy {
     /// sequence was seeded from the prefix cache); restructures adopt
     /// matching segments instead of recomputing them.
     pub donor: Option<Arc<FrozenSegments>>,
+    /// Engine-wide degraded mode: when set, `select_layer` skips the
+    /// approximation entirely and returns exact (full-context)
+    /// attention for every plane.
+    pub force_full: bool,
+    /// Planes whose phi(q)/scores tripped the NaN/Inf/denormal detector
+    /// in the most recent `select_layer` call (those planes fell back
+    /// to full-context attention). Reset on every call.
+    pub anomalous_planes: u32,
     lh: usize,
     n_heads: usize,
     rng: SplitMix64,
     scratch: Vec<f32>,
+}
+
+/// NaN/Inf/denormal detection: any such value means the random-feature
+/// approximation (or the scores built from it) can no longer rank
+/// segments meaningfully.
+fn anomalous(xs: &[f32]) -> bool {
+    xs.iter().any(|&x| !x.is_finite() || x.is_subnormal())
 }
 
 impl RadarPolicy {
@@ -44,6 +59,8 @@ impl RadarPolicy {
             variant,
             index: RadarIndex::new(n_layers * n_heads, n_feat),
             donor: None,
+            force_full: false,
+            anomalous_planes: 0,
             lh: n_layers * n_heads,
             n_heads,
             rng: SplitMix64::new(seed ^ 0xDA7A),
@@ -66,6 +83,13 @@ impl RadarPolicy {
 
     /// Selection for layer l. `phi_q` is [H, n] (head-major), `q_raw`
     /// [H, dh] (for the exact variant). Returns per-head index lists.
+    ///
+    /// Degradation paths: with `force_full` set (engine circuit breaker
+    /// open) every plane attends the full context; otherwise a plane
+    /// whose phi(q) or segment scores contain NaN/Inf/denormals falls
+    /// back to full context for this step and is counted in
+    /// `anomalous_planes` — the approximation never silently corrupts a
+    /// generation.
     pub fn select_layer(
         &mut self,
         pool: &BlockPool,
@@ -76,6 +100,10 @@ impl RadarPolicy {
         q_raw: &[f32],
     ) -> Vec<Vec<u32>> {
         let t = seq.len();
+        self.anomalous_planes = 0;
+        if self.force_full {
+            return (0..self.n_heads).map(|_| (0..t as u32).collect()).collect();
+        }
         let n_feat = pool.n_feat();
         let dh = pool.config().d_head;
         let (c, n_segs) = (self.index.c, self.index.n_segs);
@@ -94,12 +122,16 @@ impl RadarPolicy {
             // Top-k segments.
             if n_segs > 0 && c > 0 {
                 let k = cfg.radar_k.min(n_segs);
+                // The detector must run *before* top_k_indices, whose
+                // bit-pattern ordering assumes NaN-free scores.
+                let mut anomaly = false;
                 let chosen: Vec<usize> = match self.variant {
                     RadarVariant::Approx => {
                         let qf = &phi_q[h * n_feat..(h + 1) * n_feat];
                         let mut scores = std::mem::take(&mut self.scratch);
                         self.index.scores(p, qf, &mut scores);
-                        let idx = top_k_indices(&scores, k);
+                        anomaly = anomalous(qf) || anomalous(&scores);
+                        let idx = if anomaly { Vec::new() } else { top_k_indices(&scores, k) };
                         self.scratch = scores;
                         idx
                     }
@@ -107,7 +139,8 @@ impl RadarPolicy {
                         let q = &q_raw[h * dh..(h + 1) * dh];
                         let mut scores = std::mem::take(&mut self.scratch);
                         exact_segment_scores(seq, pool, l, h, q, c, n_segs, &mut scores);
-                        let idx = top_k_indices(&scores, k);
+                        anomaly = anomalous(&scores);
+                        let idx = if anomaly { Vec::new() } else { top_k_indices(&scores, k) };
                         self.scratch = scores;
                         idx
                     }
@@ -118,12 +151,24 @@ impl RadarPolicy {
                         let qf = &phi_q[h * n_feat..(h + 1) * n_feat];
                         let mut scores = std::mem::take(&mut self.scratch);
                         self.index.scores(p, qf, &mut scores);
-                        let neg: Vec<f32> = scores.iter().map(|s| -s).collect();
-                        let idx = top_k_indices(&neg, k);
+                        anomaly = anomalous(qf) || anomalous(&scores);
+                        let idx = if anomaly {
+                            Vec::new()
+                        } else {
+                            let neg: Vec<f32> = scores.iter().map(|s| -s).collect();
+                            top_k_indices(&neg, k)
+                        };
                         self.scratch = scores;
                         idx
                     }
                 };
+                if anomaly {
+                    self.anomalous_planes += 1;
+                    sel.clear();
+                    sel.extend(0..t as u32);
+                    out.push(sel);
+                    continue;
+                }
                 let mut segs = chosen;
                 segs.sort_unstable();
                 for s in segs {

@@ -253,6 +253,16 @@ impl RadarIndex {
     pub fn seg_feat(&self, p: usize, s: usize) -> &[f32] {
         &self.seg_feats[(p * self.n_segs + s) * self.n_feat..][..self.n_feat]
     }
+
+    /// Chaos hook (`nan@` fault injection): overwrite every segment
+    /// summary with NaN so the next query trips the anomaly detector
+    /// and falls back to exact attention. A later restructure rebuilds
+    /// clean summaries from the (untouched) per-token features.
+    pub fn poison_with_nan(&mut self) {
+        for x in self.seg_feats.iter_mut() {
+            *x = f32::NAN;
+        }
+    }
 }
 
 fn pool_heads(pool: &BlockPool) -> usize {

@@ -4,7 +4,7 @@
 //! protocol says lives here, everything about sockets lives in `mod.rs`.
 
 use crate::config::ServingConfig;
-use crate::engine::{GenRequest, SubmitError, Usage};
+use crate::engine::{GenRequest, Priority, SubmitError, Usage};
 use crate::model::tokenizer;
 use crate::util::json::Json;
 
@@ -26,55 +26,73 @@ pub struct ApiError {
     pub status: u16,
     pub code: &'static str,
     pub message: String,
+    /// Retryable rejections (429/503 from admission control or load
+    /// shedding) carry a hint the server emits as a `Retry-After`
+    /// header, rounded up to whole seconds.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ApiError {
+    fn new(status: u16, code: &'static str, message: String) -> Self {
+        Self { status, code, message, retry_after_ms: None }
+    }
+
     pub fn invalid_request(message: impl Into<String>) -> Self {
-        Self { status: 400, code: "invalid_request_error", message: message.into() }
+        Self::new(400, "invalid_request_error", message.into())
     }
 
     pub fn not_found(path: &str) -> Self {
-        Self { status: 404, code: "not_found_error", message: format!("no route for {path}") }
+        Self::new(404, "not_found_error", format!("no route for {path}"))
     }
 
     pub fn method_not_allowed(method: &str) -> Self {
-        Self {
-            status: 405,
-            code: "method_not_allowed",
-            message: format!("method '{method}' not allowed"),
-        }
+        Self::new(405, "method_not_allowed", format!("method '{method}' not allowed"))
     }
 
     pub fn payload_too_large(len: usize) -> Self {
-        Self {
-            status: 413,
-            code: "payload_too_large",
-            message: format!("body of {len} bytes exceeds the {MAX_BODY_BYTES} byte limit"),
-        }
+        Self::new(
+            413,
+            "payload_too_large",
+            format!("body of {len} bytes exceeds the {MAX_BODY_BYTES} byte limit"),
+        )
     }
 
     pub fn request_timeout(message: impl Into<String>) -> Self {
-        Self { status: 408, code: "request_timeout", message: message.into() }
+        Self::new(408, "request_timeout", message.into())
     }
 
     pub fn overloaded(message: impl Into<String>) -> Self {
-        Self { status: 429, code: "overloaded_error", message: message.into() }
+        Self::new(429, "overloaded_error", message.into())
     }
 
     pub fn internal(message: impl Into<String>) -> Self {
-        Self { status: 500, code: "internal_error", message: message.into() }
+        Self::new(500, "internal_error", message.into())
     }
 
     pub fn unavailable(message: impl Into<String>) -> Self {
-        Self { status: 503, code: "service_unavailable", message: message.into() }
+        Self::new(503, "service_unavailable", message.into())
+    }
+
+    pub fn with_retry_after(mut self, ms: u64) -> Self {
+        self.retry_after_ms = Some(ms);
+        self
+    }
+
+    /// The `Retry-After` header value in whole seconds (rounded up,
+    /// minimum 1), when this error carries a retry hint.
+    pub fn retry_after_secs(&self) -> Option<u64> {
+        self.retry_after_ms.map(|ms| ms.div_ceil(1000).max(1))
     }
 
     /// Map an engine-side session failure message to an HTTP status.
     /// Capacity failures (KV pressure that outlived the preemption
-    /// budget) are retryable 503s; everything else is a 500.
+    /// budget) and load-shed displacements are retryable 503s;
+    /// everything else is a 500.
     pub fn from_session_failure(message: &str) -> Self {
         if message.starts_with("capacity:") {
             Self::unavailable(message)
+        } else if message.starts_with("shed:") {
+            Self::unavailable(message).with_retry_after(1000)
         } else {
             Self::internal(message)
         }
@@ -95,8 +113,15 @@ impl ApiError {
 impl From<SubmitError> for ApiError {
     fn from(e: SubmitError) -> Self {
         match e {
-            SubmitError::QueueFull { .. } => Self::overloaded(e.to_string()),
+            SubmitError::QueueFull { .. } => Self::overloaded(e.to_string()).with_retry_after(1000),
             SubmitError::TooLong { .. } => Self::invalid_request(e.to_string()),
+            SubmitError::RateLimited { retry_after_ms } => {
+                Self::overloaded(e.to_string()).with_retry_after(retry_after_ms)
+            }
+            SubmitError::Shed { retry_after_ms } => {
+                Self::unavailable(e.to_string()).with_retry_after(retry_after_ms)
+            }
+            SubmitError::Draining => Self::unavailable(e.to_string()).with_retry_after(1000),
         }
     }
 }
@@ -122,6 +147,9 @@ pub struct CompletionRequest {
     /// Per-request wall-clock deadline in milliseconds. `None` defers
     /// to the server-wide `timeout_ms`; `Some(0)` opts out entirely.
     pub timeout_ms: Option<u64>,
+    /// Admission priority class (`"high"` / `"normal"` / `"batch"`);
+    /// lower classes are shed first under load.
+    pub priority: Priority,
 }
 
 impl CompletionRequest {
@@ -137,8 +165,10 @@ impl CompletionRequest {
             .and_then(Json::as_str)
             .ok_or_else(|| ApiError::invalid_request("'prompt' must be a string"))?
             .to_string();
-        if prompt.is_empty() {
-            return Err(ApiError::invalid_request("'prompt' must be non-empty"));
+        if prompt.trim().is_empty() {
+            return Err(ApiError::invalid_request(
+                "'prompt' must contain at least one non-whitespace character",
+            ));
         }
         let max_tokens = match j.get("max_tokens") {
             None => 64,
@@ -238,7 +268,31 @@ impl CompletionRequest {
                 Some(t as u64)
             }
         };
-        Ok(Self { prompt, max_tokens, temperature, greedy, seed, stop, stream, cache, timeout_ms })
+        let priority = match j.get("priority") {
+            None => Priority::default(),
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    ApiError::invalid_request("'priority' must be a string")
+                })?;
+                Priority::parse(s).ok_or_else(|| {
+                    ApiError::invalid_request(
+                        "'priority' must be one of \"high\", \"normal\", \"batch\"",
+                    )
+                })?
+            }
+        };
+        Ok(Self {
+            prompt,
+            max_tokens,
+            temperature,
+            greedy,
+            seed,
+            stop,
+            stream,
+            cache,
+            timeout_ms,
+            priority,
+        })
     }
 
     /// Lower into an engine request, checking engine-level limits.
@@ -260,6 +314,7 @@ impl CompletionRequest {
         req.stop_token = self.stop;
         req.prefix_cache = self.cache;
         req.timeout_ms = self.timeout_ms;
+        req.priority = self.priority;
         Ok(req)
     }
 }
@@ -462,8 +517,52 @@ mod tests {
     fn submit_error_maps_to_http_status() {
         let e: ApiError = SubmitError::QueueFull { depth: 4 }.into();
         assert_eq!(e.status, 429);
+        assert_eq!(e.retry_after_secs(), Some(1));
         let e: ApiError = SubmitError::TooLong { need: 10, max: 5 }.into();
         assert_eq!(e.status, 400);
+        assert_eq!(e.retry_after_secs(), None);
+        let e: ApiError = SubmitError::RateLimited { retry_after_ms: 2500 }.into();
+        assert_eq!(e.status, 429);
+        assert_eq!(e.retry_after_secs(), Some(3), "2500 ms rounds up to 3 s");
+        let e: ApiError = SubmitError::Shed { retry_after_ms: 1 }.into();
+        assert_eq!(e.status, 503);
+        assert_eq!(e.retry_after_secs(), Some(1), "retry hint is at least one second");
+        let e: ApiError = SubmitError::Draining.into();
+        assert_eq!(e.status, 503);
+        assert!(e.retry_after_secs().is_some());
+    }
+
+    #[test]
+    fn whitespace_only_prompt_is_rejected() {
+        for body in [r#"{"prompt":"   "}"#, "{\"prompt\":\"\\t\\n\"}"] {
+            let e = parse(body).unwrap_err();
+            assert_eq!(e.status, 400, "whitespace-only prompt must 400: {body}");
+            assert!(e.message.contains("non-whitespace"), "got: {}", e.message);
+        }
+        assert!(parse(r#"{"prompt":" a "}"#).is_ok(), "interior whitespace is fine");
+    }
+
+    #[test]
+    fn priority_parses_and_threads_through() {
+        let cfg = ServingConfig::default();
+        let r = parse(r#"{"prompt":"a"}"#).unwrap();
+        assert_eq!(r.priority, Priority::Normal, "priority defaults to normal");
+        for (s, want) in
+            [("high", Priority::High), ("normal", Priority::Normal), ("batch", Priority::Batch)]
+        {
+            let r = parse(&format!(r#"{{"prompt":"a","priority":"{s}"}}"#)).unwrap();
+            assert_eq!(r.priority, want);
+            assert_eq!(r.to_gen_request(&cfg).unwrap().priority, want);
+        }
+        assert_eq!(parse(r#"{"prompt":"a","priority":"urgent"}"#).unwrap_err().status, 400);
+        assert_eq!(parse(r#"{"prompt":"a","priority":7}"#).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn shed_session_failure_maps_to_503_with_retry() {
+        let e = ApiError::from_session_failure("shed: displaced by a higher-priority arrival");
+        assert_eq!(e.status, 503);
+        assert_eq!(e.retry_after_secs(), Some(1));
     }
 
     #[test]

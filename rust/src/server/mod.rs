@@ -3,10 +3,19 @@
 //!
 //! Endpoints (see README "Serving API"):
 //!   GET  /health            -> {"status":"ok","model":...}
+//!   GET  /healthz           -> liveness: 200 while the process answers
+//!   GET  /readyz            -> readiness: 503 when draining, KV pool
+//!                              over watermark, or the watchdog tripped
 //!   GET  /metrics           -> text exposition (counters/gauges/latencies)
 //!   POST /v1/completions    -> OpenAI-style completions; `"stream":true`
 //!                              emits SSE chunks token-by-token
 //!   POST /generate          -> legacy one-shot JSON (kept for old clients)
+//!   POST /admin/drain       -> graceful drain: readiness off, admissions
+//!                              stop, in-flight work finishes, clean exit
+//!
+//! SIGTERM triggers the same drain path as `/admin/drain`: in-flight
+//! sequences finish (bounded by `drain_timeout_ms`), then the serve
+//! loop exits cleanly.
 //!
 //! Connections are HTTP/1.1 keep-alive: one socket serves many requests
 //! (SSE responses are close-delimited, so streams end the connection).
@@ -18,7 +27,7 @@
 
 pub mod api;
 
-use crate::engine::{Engine, FinishReason, GenRequest, SessionEvent, SessionHandle};
+use crate::engine::{Engine, FinishReason, GenRequest, HealthState, SessionEvent, SessionHandle};
 use crate::model::tokenizer;
 use crate::util::json::Json;
 use crate::util::threadpool::{Channel, ThreadPool};
@@ -139,20 +148,53 @@ pub fn write_response(
     body: &[u8],
     keep_alive: bool,
 ) -> Result<()> {
+    write_response_with_headers(stream, status, content_type, body, keep_alive, &[])
+}
+
+/// `write_response` plus extra headers (e.g. `Retry-After` on
+/// retryable rejections). With no extras the bytes are identical to
+/// `write_response`.
+pub fn write_response_with_headers(
+    stream: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra: &[(&str, &str)],
+) -> Result<()> {
     let conn = if keep_alive { "keep-alive" } else { "close" };
     write!(
         stream,
-        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n",
         status_reason(status),
         body.len()
     )?;
+    for (name, value) in extra {
+        write!(stream, "{name}: {value}\r\n")?;
+    }
+    write!(stream, "\r\n")?;
     stream.write_all(body)?;
     stream.flush()?;
     Ok(())
 }
 
 fn write_error(stream: &mut impl Write, e: &ApiError, keep_alive: bool) -> Result<()> {
-    write_response(stream, e.status, "application/json", e.body().as_bytes(), keep_alive)
+    match e.retry_after_secs() {
+        Some(secs) => {
+            let v = secs.to_string();
+            write_response_with_headers(
+                stream,
+                e.status,
+                "application/json",
+                e.body().as_bytes(),
+                keep_alive,
+                &[("Retry-After", v.as_str())],
+            )
+        }
+        None => {
+            write_response(stream, e.status, "application/json", e.body().as_bytes(), keep_alive)
+        }
+    }
 }
 
 /// What connection threads need; the engine itself stays on the
@@ -162,10 +204,40 @@ struct ServerCtx {
     metrics: Arc<crate::metrics::Metrics>,
     cfg: crate::config::ServingConfig,
     model: String,
+    /// Shared with the engine: readiness inputs + the drain flag.
+    health: Arc<HealthState>,
 }
 
 enum EngineMsg {
     Submit { req: GenRequest, reply: Channel<Result<SessionHandle, ApiError>> },
+}
+
+/// SIGTERM -> drain flag, without a libc dependency: `signal` comes
+/// from the C runtime every binary already links.
+#[cfg(unix)]
+mod sigterm {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static RECEIVED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigterm(_sig: i32) {
+        RECEIVED.store(true, Ordering::Release);
+    }
+
+    #[allow(clippy::fn_to_numeric_cast)]
+    pub fn install() {
+        const SIGTERM: i32 = 15;
+        extern "C" {
+            fn signal(sig: i32, handler: usize) -> usize;
+        }
+        unsafe {
+            signal(SIGTERM, on_sigterm as usize);
+        }
+    }
+
+    pub fn received() -> bool {
+        RECEIVED.load(Ordering::Acquire)
+    }
 }
 
 /// Serve until `stop` flips. Engine runs on the caller's thread;
@@ -179,7 +251,10 @@ pub fn serve(mut engine: Engine, addr: &str, stop: Arc<AtomicBool>) -> Result<()
         metrics: engine.metrics.clone(),
         cfg: engine.cfg.clone(),
         model: engine.rt.config.name.clone(),
+        health: engine.health.clone(),
     });
+    #[cfg(unix)]
+    sigterm::install();
     let pool = ThreadPool::new(8, "http");
     let ctx2 = ctx.clone();
     let stop2 = stop.clone();
@@ -205,7 +280,44 @@ pub fn serve(mut engine: Engine, addr: &str, stop: Arc<AtomicBool>) -> Result<()
     // Engine loop: admit new sessions, then step. Token delivery and
     // completion flow through each session's handle, so the loop has no
     // per-request bookkeeping.
+    let mut drain_started: Option<std::time::Instant> = None;
     while !stop.load(Ordering::Relaxed) {
+        #[cfg(unix)]
+        if sigterm::received() {
+            ctx.health.begin_drain();
+        }
+        if ctx.health.draining() {
+            // Graceful drain: readiness is already off and submit
+            // rejects with 503; answer queued submits (so connection
+            // threads unblock), finish in-flight work, then exit. The
+            // deadline bounds a wedged sequence's hold on shutdown.
+            let t0 = *drain_started.get_or_insert_with(|| {
+                crate::info!("draining: admissions stopped, finishing in-flight work");
+                std::time::Instant::now()
+            });
+            while let Some(msg) = ctx.queue.try_recv() {
+                answer_submit(&mut engine, msg);
+            }
+            let deadline_hit = engine.cfg.drain_timeout_ms > 0
+                && t0.elapsed()
+                    >= std::time::Duration::from_millis(engine.cfg.drain_timeout_ms);
+            if engine.idle() || deadline_hit {
+                if deadline_hit && !engine.idle() {
+                    engine.fail_all("server draining: drain deadline exceeded");
+                }
+                engine
+                    .metrics
+                    .observe("drain_duration_ms", t0.elapsed().as_secs_f64() * 1e3);
+                // Flip the shared stop flag so the accept thread (which
+                // only watches `stop`) exits and `join` below returns.
+                stop.store(true, Ordering::Relaxed);
+                break;
+            }
+            if let Err(e) = engine.step() {
+                engine.fail_all(&format!("engine error: {e}"));
+            }
+            continue;
+        }
         // Drain ALL queued admissions (bounded by max_pending via
         // submit's rejection), then advance decode by one step.
         if engine.idle() {
@@ -277,9 +389,12 @@ fn handle_request(
 ) -> Result<bool> {
     const ROUTES: &[(&str, &str)] = &[
         ("GET", "/health"),
+        ("GET", "/healthz"),
+        ("GET", "/readyz"),
         ("GET", "/metrics"),
         ("POST", "/v1/completions"),
         ("POST", "/generate"),
+        ("POST", "/admin/drain"),
     ];
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => {
@@ -287,6 +402,29 @@ fn handle_request(
                 .with("status", "ok")
                 .with("model", ctx.model.as_str())
                 .to_string();
+            write_response(stream, 200, "application/json", body.as_bytes(), true)?;
+            Ok(true)
+        }
+        ("GET", "/healthz") => {
+            // Liveness: the process is up and answering requests.
+            let body = Json::obj().with("status", "ok").to_string();
+            write_response(stream, 200, "application/json", body.as_bytes(), true)?;
+            Ok(true)
+        }
+        ("GET", "/readyz") => {
+            let ready = ctx.health.ready();
+            let body = Json::obj()
+                .with("ready", ready)
+                .with("draining", ctx.health.draining())
+                .to_string();
+            let status = if ready { 200 } else { 503 };
+            write_response(stream, status, "application/json", body.as_bytes(), true)?;
+            Ok(true)
+        }
+        ("POST", "/admin/drain") => {
+            ctx.health.begin_drain();
+            ctx.metrics.inc("drain_requests");
+            let body = Json::obj().with("draining", true).to_string();
             write_response(stream, 200, "application/json", body.as_bytes(), true)?;
             Ok(true)
         }
@@ -652,5 +790,21 @@ mod tests {
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
         assert!(s.contains("Connection: close"));
+    }
+
+    #[test]
+    fn retryable_errors_carry_retry_after_header() {
+        let mut out = Vec::new();
+        let e = ApiError::overloaded("rate limited").with_retry_after(2500);
+        write_error(&mut out, &e, true).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429"));
+        assert!(s.contains("Retry-After: 3\r\n"), "2500 ms rounds up to 3 s: {s}");
+        assert!(s.ends_with(e.body().as_str()), "header goes before the body");
+
+        let mut out = Vec::new();
+        write_error(&mut out, &ApiError::internal("boom"), true).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(!s.contains("Retry-After"), "non-retryable errors carry no hint");
     }
 }

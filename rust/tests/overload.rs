@@ -1,0 +1,374 @@
+//! Overload-control & graceful-degradation suite (ISSUE acceptance
+//! criteria):
+//!   (a) above the watermark, a high-priority arrival displaces the
+//!       lowest-priority queued entry ("shed:"), never an equal class,
+//!   (b) a draining engine finishes in-flight work byte-identically
+//!       while rejecting new submissions,
+//!   (c) a watchdog trip force-finishes the offender and frees every
+//!       KV block it held,
+//!   (d) a NaN-poisoned Radar index falls back to exact attention for
+//!       the step — the victim finishes with finite logprobs and its
+//!       co-batched survivors stay byte-identical to a fault-free run,
+//!   (e) an anomaly burst flips the circuit breaker into exact-attention
+//!       degraded mode and recovers after the cool-down.
+//!
+//! The chaos sweep reads `FAULT_SEEDS` (';'-separated entries, each a
+//! fault spec like `nan@3:2,stall@4x60` or a bare numeric seed).
+
+use radar_serve::config::{ArtifactPaths, PolicyKind, ServingConfig};
+use radar_serve::engine::{
+    shed_victim, CircuitBreaker, Engine, FinishReason, GenRequest, HealthState, Priority,
+    SessionResult, SubmitError, TokenBucket,
+};
+use radar_serve::faults::FaultPlan;
+use radar_serve::model::tokenizer;
+use radar_serve::runtime::Runtime;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let paths = ArtifactPaths::new("artifacts", "sm");
+    if !paths.manifest().exists() {
+        eprintln!("skipping overload tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Runtime::load(paths).unwrap()))
+}
+
+/// Suppress the default panic report for *injected* panics only (bare
+/// numeric FAULT_SEEDS entries script step panics); real test failures
+/// keep the standard output. Installed once per process.
+fn quiet_injected_panics() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected"))
+                .or_else(|| {
+                    info.payload().downcast_ref::<String>().map(|s| s.contains("injected"))
+                })
+                .unwrap_or(false);
+            if !injected {
+                default(info);
+            }
+        }));
+    });
+}
+
+fn engine_with(
+    rt: Arc<Runtime>,
+    policy: PolicyKind,
+    tweak: impl FnOnce(&mut ServingConfig),
+) -> Engine {
+    let mut cfg = ServingConfig::default();
+    cfg.policy = policy;
+    cfg.window = 32;
+    cfg.budget = 64;
+    tweak(&mut cfg);
+    Engine::new(rt, cfg).unwrap()
+}
+
+/// Step until idle, bounded so a scheduling bug fails loudly instead
+/// of hanging the suite.
+fn drive(e: &mut Engine, max_steps: usize) {
+    let mut n = 0;
+    while !e.idle() {
+        e.step().unwrap();
+        n += 1;
+        assert!(n < max_steps, "engine did not go idle within {max_steps} steps");
+    }
+}
+
+const PROMPTS: [&str; 3] = ["the stream carries ", "old light towards ", "quiet hills answer "];
+
+fn run_trio(e: &mut Engine, max_new: usize) -> Vec<SessionResult> {
+    let handles: Vec<_> = PROMPTS
+        .iter()
+        .map(|p| e.submit(GenRequest::new(tokenizer::encode(p), max_new)).unwrap())
+        .collect();
+    drive(e, 500);
+    handles.iter().map(|h| h.collect()).collect()
+}
+
+fn req_with_priority(prompt: &str, max_new: usize, priority: Priority) -> GenRequest {
+    let mut r = GenRequest::new(tokenizer::encode(prompt), max_new);
+    r.priority = priority;
+    r
+}
+
+// ---------------------------------------------------------------------
+// Pure tests — no artifacts required, run everywhere
+// ---------------------------------------------------------------------
+
+#[test]
+fn overload_primitives_compose_through_the_public_api() {
+    // The crate surface re-exports the whole overload layer; exercise
+    // each piece the way the engine composes them.
+    let mut bucket = TokenBucket::new(100.0, 10.0);
+    let t0 = Instant::now();
+    assert!(bucket.try_take(10.0, t0).is_ok());
+    assert!(bucket.try_take(1.0, t0).is_err(), "drained bucket must reject");
+
+    let q = [(1, Priority::Batch), (2, Priority::Normal)];
+    assert_eq!(shed_victim(q.iter().copied(), Priority::High), Some(1));
+    assert_eq!(shed_victim(q.iter().copied(), Priority::Batch), None);
+
+    let mut cb = CircuitBreaker::new(1, 4, 4);
+    cb.record(3);
+    assert!(cb.tick(4).is_some(), "threshold 1 must flip on one event");
+    assert!(cb.degraded());
+
+    let h = HealthState::new();
+    assert!(h.ready());
+    h.begin_drain();
+    assert!(!h.ready());
+}
+
+#[test]
+fn nan_and_stall_specs_parse_from_the_fault_grammar() {
+    let plan = FaultPlan::parse("nan@3:2,stall@4x60").unwrap();
+    let same = FaultPlan::parse("stall@4x60,nan@3:2").unwrap();
+    assert_eq!(plan, same, "spec order must not matter");
+    assert!(FaultPlan::parse("nan@").is_err());
+    assert!(FaultPlan::parse("stall@4").is_err(), "stall needs a duration");
+}
+
+// ---------------------------------------------------------------------
+// Engine integration — artifact-gated
+// ---------------------------------------------------------------------
+
+#[test]
+fn shed_displaces_lowest_priority_first_never_equal() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine_with(rt, PolicyKind::Radar, |c| {
+        c.prefix_cache = false;
+        c.max_pending = 2;
+        c.shed_watermark_pct = 100; // hot exactly when the queue is full
+    });
+    let batch = e.submit(req_with_priority(PROMPTS[0], 4, Priority::Batch)).unwrap();
+    let normal = e.submit(req_with_priority(PROMPTS[1], 4, Priority::Normal)).unwrap();
+    // Queue full (2/2): a high arrival displaces the batch entry.
+    let high = e.submit(req_with_priority(PROMPTS[2], 4, Priority::High)).unwrap();
+    let shed = batch.collect();
+    let msg = shed.error.as_deref().expect("batch entry must be shed");
+    assert!(msg.starts_with("shed:"), "503-style prefix expected, got: {msg}");
+    assert!(shed.tokens.is_empty(), "shed before admission, so no tokens");
+    assert_eq!(e.metrics.counter("shed_requests"), 1);
+    // Queue full again with {normal, high}: another normal arrival has
+    // no strictly-lower victim and falls through to the hard cap.
+    match e.submit(req_with_priority(PROMPTS[0], 4, Priority::Normal)) {
+        Err(SubmitError::QueueFull { depth }) => assert_eq!(depth, 2),
+        other => panic!("expected QueueFull, got {:?}", other.map(|h| h.id)),
+    }
+    assert_eq!(e.metrics.counter("shed_requests"), 1, "equal class must not shed");
+    // The survivors run to completion untouched.
+    drive(&mut e, 500);
+    for (name, h) in [("normal", normal), ("high", high)] {
+        let out = h.collect();
+        assert!(out.error.is_none(), "{name} failed: {:?}", out.error);
+        assert_eq!(out.tokens.len(), 4, "{name} did not finish");
+    }
+    assert_eq!(e.pool.used_blocks(), 0);
+}
+
+#[test]
+fn admission_bucket_rejects_with_retry_after() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine_with(rt, PolicyKind::Radar, |c| {
+        c.prefix_cache = false;
+        c.admit_rate = 1.0; // 1 cost unit/s: one request drains the bucket
+        c.admit_burst = 8.0;
+    });
+    let h = e.submit(GenRequest::new(tokenizer::encode(PROMPTS[0]), 4)).unwrap();
+    match e.submit(GenRequest::new(tokenizer::encode(PROMPTS[1]), 4)) {
+        Err(SubmitError::RateLimited { retry_after_ms }) => {
+            assert!(retry_after_ms > 0, "retry hint must be positive");
+        }
+        other => panic!("expected RateLimited, got {:?}", other.map(|h| h.id)),
+    }
+    assert_eq!(e.metrics.counter("requests_rejected"), 1);
+    // The admitted request is unaffected by the gate.
+    drive(&mut e, 500);
+    let out = h.collect();
+    assert!(out.error.is_none(), "admitted request failed: {:?}", out.error);
+    assert_eq!(out.tokens.len(), 4);
+}
+
+#[test]
+fn drain_finishes_inflight_byte_identically_and_rejects_new_work() {
+    let Some(rt) = runtime() else { return };
+    let mut base = engine_with(rt.clone(), PolicyKind::Radar, |c| c.prefix_cache = false);
+    let baseline = run_trio(&mut base, 6);
+    assert!(baseline.iter().all(|r| r.error.is_none()));
+
+    let mut e = engine_with(rt, PolicyKind::Radar, |c| c.prefix_cache = false);
+    let handles: Vec<_> = PROMPTS
+        .iter()
+        .map(|p| e.submit(GenRequest::new(tokenizer::encode(p), 6)).unwrap())
+        .collect();
+    e.step().unwrap(); // all three admitted and mid-decode
+    e.health.begin_drain();
+    assert!(!e.health.ready(), "draining must drop readiness");
+    match e.submit(GenRequest::new(tokenizer::encode(PROMPTS[0]), 4)) {
+        Err(SubmitError::Draining) => {}
+        other => panic!("expected Draining, got {:?}", other.map(|h| h.id)),
+    }
+    drive(&mut e, 500);
+    for (i, h) in handles.iter().enumerate() {
+        let out = h.collect();
+        assert!(out.error.is_none(), "in-flight seq {} failed: {:?}", i + 1, out.error);
+        assert_eq!(out.finish, Some(FinishReason::Length), "seq {}", i + 1);
+        assert_eq!(out.tokens, baseline[i].tokens, "drain changed seq {}'s output", i + 1);
+    }
+    assert_eq!(e.pool.used_blocks(), 0, "drained engine must hold no blocks");
+}
+
+#[test]
+fn watchdog_force_finishes_radar_staller_and_frees_blocks() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine_with(rt, PolicyKind::Radar, |c| {
+        c.prefix_cache = false;
+        c.watchdog_ms = 25;
+        c.faults = Some(FaultPlan::parse("stall@3x80").unwrap());
+    });
+    let a = e.submit(GenRequest::new(tokenizer::encode(PROMPTS[0]), 6)).unwrap();
+    let b = e.submit(GenRequest::new(tokenizer::encode(PROMPTS[1]), 6)).unwrap();
+    drive(&mut e, 500);
+    let (a, b) = (a.collect(), b.collect());
+    // The stall is owned by the first sequence queried at the armed
+    // step; exactly one of the two must be force-finished.
+    let (victim, survivor) = if a.error.is_some() { (&a, &b) } else { (&b, &a) };
+    let msg = victim.error.as_deref().expect("one sequence must trip the watchdog");
+    assert!(msg.contains("watchdog:"), "unexpected error: {msg}");
+    assert!(survivor.error.is_none(), "survivor failed: {:?}", survivor.error);
+    assert_eq!(survivor.tokens.len(), 6);
+    assert_eq!(e.metrics.counter("watchdog_trips"), 1);
+    assert_eq!(e.metrics.counter("injected_stalls"), 1);
+    assert_eq!(e.pool.used_blocks(), 0, "force-finish must free the victim's blocks");
+    assert!(!e.health.ready(), "readiness stays off until the quiet window passes");
+}
+
+#[test]
+fn watchdog_covers_the_fused_staging_path_too() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine_with(rt, PolicyKind::Streaming, |c| {
+        c.prefix_cache = false;
+        c.watchdog_ms = 25;
+        c.faults = Some(FaultPlan::parse("stall@2x80").unwrap());
+    });
+    let out = run_trio(&mut e, 6);
+    let trips: Vec<_> = out
+        .iter()
+        .filter(|r| r.error.as_deref().is_some_and(|m| m.contains("watchdog:")))
+        .collect();
+    assert_eq!(trips.len(), 1, "exactly one fused row must be force-finished");
+    assert_eq!(out.iter().filter(|r| r.error.is_none()).count(), 2);
+    assert_eq!(e.metrics.counter("watchdog_trips"), 1);
+    assert_eq!(e.pool.used_blocks(), 0);
+}
+
+#[test]
+fn nan_poison_falls_back_finite_while_survivors_match_baseline() {
+    let Some(rt) = runtime() else { return };
+    let mut base = engine_with(rt.clone(), PolicyKind::Radar, |c| c.prefix_cache = false);
+    let baseline = run_trio(&mut base, 6);
+    assert!(baseline.iter().all(|r| r.error.is_none()));
+
+    let mut e = engine_with(rt, PolicyKind::Radar, |c| {
+        c.prefix_cache = false;
+        c.faults = Some(FaultPlan::parse("nan@3:2").unwrap());
+    });
+    let out = run_trio(&mut e, 6);
+    // The fallback is transparent: every sequence — the poisoned one
+    // included — runs to a normal finish with finite logprobs.
+    for (i, r) in out.iter().enumerate() {
+        assert!(r.error.is_none(), "seq {} failed: {:?}", i + 1, r.error);
+        assert_eq!(r.finish, Some(FinishReason::Length), "seq {}", i + 1);
+        assert_eq!(r.tokens.len(), 6, "seq {} cut short", i + 1);
+        assert!(
+            r.logprobs.iter().all(|lp| lp.is_finite()),
+            "seq {} leaked a non-finite logprob: {:?}",
+            i + 1,
+            r.logprobs
+        );
+    }
+    // Co-batched survivors are byte-identical to the fault-free run.
+    // (The victim's step ran exact attention instead of top-k segments,
+    // so its continuation is finite but not contractually identical.)
+    for i in [0, 2] {
+        assert_eq!(out[i].tokens, baseline[i].tokens, "survivor {} diverged", i + 1);
+        assert_eq!(out[i].logprobs, baseline[i].logprobs, "survivor {} logprobs", i + 1);
+    }
+    assert_eq!(e.metrics.counter("injected_nans"), 1);
+    assert!(e.metrics.counter("anomaly_fallbacks") >= 1, "anomaly must be detected");
+    assert!(e.metrics.counter("anomalous_planes") >= 1);
+    assert_eq!(e.metrics.counter("contained_errors"), 0, "fallback is not an error");
+    assert_eq!(e.pool.used_blocks(), 0);
+}
+
+#[test]
+fn anomaly_burst_flips_breaker_then_recovers_after_cooldown() {
+    let Some(rt) = runtime() else { return };
+    let mut e = engine_with(rt, PolicyKind::Radar, |c| {
+        c.prefix_cache = false;
+        c.breaker_threshold = 1; // one anomaly flips the engine
+        c.breaker_window = 4;
+        c.breaker_cooldown = 4;
+        c.faults = Some(FaultPlan::parse("nan@3:1").unwrap());
+    });
+    // 20 decode steps: the anomaly lands at step 3, the breaker enters
+    // degraded mode on the next tick and exits after the cool-down,
+    // all well before the sequence finishes.
+    let h = e.submit(GenRequest::new(tokenizer::encode(PROMPTS[0]), 20)).unwrap();
+    drive(&mut e, 500);
+    let out = h.collect();
+    assert!(out.error.is_none(), "victim failed: {:?}", out.error);
+    assert_eq!(out.tokens.len(), 20);
+    assert!(out.logprobs.iter().all(|lp| lp.is_finite()));
+    assert_eq!(e.metrics.counter("degraded_mode_entered"), 1);
+    assert_eq!(e.metrics.counter("degraded_mode_exited"), 1);
+    assert!(!e.degraded(), "breaker must recover after the cool-down");
+    assert_eq!(e.pool.used_blocks(), 0);
+}
+
+#[test]
+fn overload_chaos_sweep_terminates_cleanly() {
+    let Some(rt) = runtime() else { return };
+    quiet_injected_panics();
+    // Entries are ';'-separated: either a fault spec (may contain ',')
+    // or a bare numeric seed for the legacy randomized plan.
+    let specs = std::env::var("FAULT_SEEDS")
+        .unwrap_or_else(|_| "nan@3:2;stall@3x60;nan@4,stall@5x60".into());
+    for entry in specs.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+        let plan = match entry.parse::<u64>() {
+            Ok(seed) => FaultPlan::seeded(seed, 12, 4),
+            Err(_) => FaultPlan::parse(entry)
+                .unwrap_or_else(|e| panic!("bad FAULT_SEEDS entry {entry:?}: {e}")),
+        };
+        let mut e = engine_with(rt.clone(), PolicyKind::Radar, |c| {
+            c.prefix_cache = false;
+            c.watchdog_ms = 30;
+            c.faults = Some(plan);
+        });
+        let out = run_trio(&mut e, 6);
+        for (j, r) in out.iter().enumerate() {
+            assert!(
+                r.finish.is_some() || r.error.is_some(),
+                "spec {entry:?} seq {} got no terminal event",
+                j + 1
+            );
+            // Whatever was delivered must be finite (sanitizer backstop).
+            assert!(
+                r.logprobs.iter().all(|lp| lp.is_finite()),
+                "spec {entry:?} seq {} delivered a non-finite logprob",
+                j + 1
+            );
+        }
+        assert!(e.idle(), "spec {entry:?}: engine stuck");
+        assert_eq!(e.pool.used_blocks(), 0, "spec {entry:?}: kv blocks leaked");
+    }
+}

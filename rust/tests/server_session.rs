@@ -226,6 +226,27 @@ fn driver() -> anyhow::Result<()> {
             j.path("error.type").and_then(Json::as_str) == Some("invalid_request_error"),
             "error shape: {body}"
         );
+        // A present-but-blank prompt is equally invalid: whitespace-only
+        // input must not reach the tokenizer.
+        post_completions(&mut writer, r#"{"prompt":"   \t\n","max_tokens":4}"#)?;
+        let (status, body) = read_response(&mut reader)?;
+        anyhow::ensure!(status == 400, "blank prompt: {status} {body}");
+        anyhow::ensure!(body.contains("non-whitespace"), "blank prompt body: {body}");
+        // Unknown priority class: structured 400, not a silent default.
+        post_completions(&mut writer, r#"{"prompt":"hi","max_tokens":4,"priority":"urgent"}"#)?;
+        let (status, body) = read_response(&mut reader)?;
+        anyhow::ensure!(status == 400, "bad priority: {status} {body}");
+        anyhow::ensure!(body.contains("priority"), "bad priority body: {body}");
+    }
+    // Health surface: liveness is unconditional, readiness reflects the
+    // engine's drain/overload/watchdog state (all healthy here).
+    {
+        let resp = http_get("/healthz")?;
+        anyhow::ensure!(resp.starts_with("HTTP/1.1 200"), "healthz: {resp}");
+        anyhow::ensure!(resp.contains(r#""status":"ok""#), "healthz body: {resp}");
+        let resp = http_get("/readyz")?;
+        anyhow::ensure!(resp.starts_with("HTTP/1.1 200"), "readyz: {resp}");
+        anyhow::ensure!(resp.contains(r#""ready":true"#), "readyz body: {resp}");
     }
 
     // Keep-alive: non-stream completion, then a second request on the
@@ -321,6 +342,27 @@ fn driver() -> anyhow::Result<()> {
             "disconnect not observed; metrics:\n{m}"
         );
         std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+
+    // Graceful drain (last: the serve loop exits once idle). The drain
+    // acknowledgement must arrive before shutdown; a follow-up readyz
+    // sees 503 or a closed socket depending on how fast the loop exits.
+    {
+        let mut s = TcpStream::connect(ADDR)?;
+        write!(
+            s,
+            "POST /admin/drain HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\nConnection: close\r\n\r\n"
+        )?;
+        let mut out = String::new();
+        s.read_to_string(&mut out)?;
+        anyhow::ensure!(out.starts_with("HTTP/1.1 200"), "drain: {out}");
+        anyhow::ensure!(out.contains(r#""draining":true"#), "drain body: {out}");
+        if let Ok(resp) = http_get("/readyz") {
+            anyhow::ensure!(
+                resp.is_empty() || resp.starts_with("HTTP/1.1 503"),
+                "readyz after drain: {resp}"
+            );
+        }
     }
     Ok(())
 }
