@@ -193,6 +193,14 @@ pub struct ServingConfig {
     pub breaker_window: u64,
     /// Circuit breaker: degraded-mode cool-down, in engine steps.
     pub breaker_cooldown: u64,
+    /// Incremental K/V staging: diff each step's selection against the
+    /// per-sequence staged arena and gather only changed rows. `false`
+    /// forces a full re-gather every step (the baseline the bench and
+    /// byte-identity tests compare against).
+    pub stage_delta: bool,
+    /// Worker threads for sharded staging and plane-parallel segment
+    /// scoring; 1 = serial on the engine thread (no pool spawned).
+    pub stage_workers: usize,
     /// Deterministic fault injection (tests / chaos harness only).
     pub faults: Option<FaultPlan>,
 }
@@ -227,6 +235,8 @@ impl Default for ServingConfig {
             breaker_threshold: 8,
             breaker_window: 32,
             breaker_cooldown: 64,
+            stage_delta: true,
+            stage_workers: 1,
             faults: None,
         }
     }
@@ -275,6 +285,20 @@ impl ServingConfig {
             "breaker_threshold" => self.breaker_threshold = val.parse()?,
             "breaker_window" => self.breaker_window = val.parse()?,
             "breaker_cooldown" => self.breaker_cooldown = val.parse()?,
+            "stage_delta" => {
+                self.stage_delta = match val {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => return Err(anyhow!("stage_delta: expected on/off, got '{other}'")),
+                }
+            }
+            "stage_workers" => {
+                let n: usize = val.parse()?;
+                if n == 0 {
+                    return Err(anyhow!("stage_workers: expected >= 1, got '{val}'"));
+                }
+                self.stage_workers = n;
+            }
             "faults" => self.faults = Some(FaultPlan::parse(val)?),
             other => return Err(anyhow!("unknown serving option '{other}'")),
         }
@@ -445,6 +469,22 @@ mod tests {
         // Malformed fault specs surface their typed reason.
         let e = s.apply_override("faults", "slow@5x").unwrap_err();
         assert!(e.to_string().contains("slow@5x"), "{e}");
+    }
+
+    #[test]
+    fn staging_overrides() {
+        let mut s = ServingConfig::default();
+        assert!(s.stage_delta, "delta staging is on by default");
+        assert_eq!(s.stage_workers, 1, "staging is serial by default");
+        s.apply_override("stage_delta", "off").unwrap();
+        assert!(!s.stage_delta);
+        s.apply_override("stage_delta", "1").unwrap();
+        assert!(s.stage_delta);
+        assert!(s.apply_override("stage_delta", "maybe").is_err());
+        s.apply_override("stage_workers", "4").unwrap();
+        assert_eq!(s.stage_workers, 4);
+        assert!(s.apply_override("stage_workers", "0").is_err());
+        assert!(s.apply_override("stage_workers", "many").is_err());
     }
 
     #[test]

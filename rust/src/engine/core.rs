@@ -29,6 +29,7 @@ use super::request::{
     FinishReason, GenRequest, GenResult, PolicyHolder, Priority, SeqId, Sequence, SessionEvent,
     SessionHandle, SubmitError, Usage,
 };
+use super::staging::{stage_planes_serial, stage_planes_sharded, StageStats};
 use crate::config::ServingConfig;
 use crate::faults::ActiveFaults;
 use crate::kvcache::{BlockPool, CacheExhausted, SeqCache, BLOCK_TOKENS};
@@ -37,7 +38,7 @@ use crate::model::{embed, head, log_prob};
 use crate::policy::{SelectCtx, Selection};
 use crate::prefix::PrefixIndex;
 use crate::runtime::Runtime;
-use crate::util::threadpool::Channel;
+use crate::util::threadpool::{Channel, ThreadPool};
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -177,6 +178,25 @@ pub struct Engine {
     buf_k: Vec<f32>,
     buf_v: Vec<f32>,
     buf_mask: Vec<f32>,
+    /// Decode S buckets for the configured `n_feat`, cached at startup:
+    /// the artifact registry is immutable after load, so there is no
+    /// reason to re-derive this every step.
+    decode_s_buckets: Vec<usize>,
+    /// Worker pool for sharded staging and plane-parallel segment
+    /// scoring (`stage_workers > 1`); `None` runs both serially on the
+    /// engine thread.
+    stage_pool: Option<ThreadPool>,
+    // Step-path scratch, reused across steps so the hot loop allocates
+    // nothing (cleared before every use; restored after).
+    scratch_fused: Vec<SeqId>,
+    scratch_radar: Vec<SeqId>,
+    scratch_needs: Vec<(SeqId, usize)>,
+    scratch_tokens: Vec<i32>,
+    scratch_pos: Vec<i32>,
+    scratch_alive: Vec<bool>,
+    scratch_k_new: Vec<f32>,
+    scratch_v_new: Vec<f32>,
+    scratch_f_new: Vec<f32>,
 }
 
 /// Telemetry for one engine step.
@@ -197,6 +217,17 @@ impl Engine {
         let bucket = TokenBucket::new(cfg.admit_rate, cfg.admit_burst);
         let breaker =
             CircuitBreaker::new(cfg.breaker_threshold, cfg.breaker_window, cfg.breaker_cooldown);
+        let mut decode_s_buckets: Vec<usize> = rt
+            .registry
+            .all()
+            .iter()
+            .filter(|a| a.kind == crate::runtime::ArtifactKind::Decode && a.n_feat == cfg.n_feat)
+            .map(|a| a.len)
+            .collect();
+        decode_s_buckets.sort_unstable();
+        decode_s_buckets.dedup();
+        let stage_pool =
+            (cfg.stage_workers > 1).then(|| ThreadPool::new(cfg.stage_workers, "stage"));
         Ok(Self {
             rt,
             cfg,
@@ -216,6 +247,17 @@ impl Engine {
             buf_k: Vec::new(),
             buf_v: Vec::new(),
             buf_mask: Vec::new(),
+            decode_s_buckets,
+            stage_pool,
+            scratch_fused: Vec::new(),
+            scratch_radar: Vec::new(),
+            scratch_needs: Vec::new(),
+            scratch_tokens: Vec::new(),
+            scratch_pos: Vec::new(),
+            scratch_alive: Vec::new(),
+            scratch_k_new: Vec::new(),
+            scratch_v_new: Vec::new(),
+            scratch_f_new: Vec::new(),
         })
     }
 
@@ -412,8 +454,8 @@ impl Engine {
                 PendingWork::Fresh(req) => {
                     self.metrics
                         .observe_us("queue_wait", p.enqueued_at.elapsed().as_secs_f64() * 1e6);
-                    let mc = self.rt.config.clone();
-                    let mut seq = Sequence::new(p.id, req, &self.cfg, mc.n_layers, mc.n_heads);
+                    let (nl, nh) = (self.rt.config.n_layers, self.rt.config.n_heads);
+                    let mut seq = Sequence::new(p.id, req, &self.cfg, nl, nh);
                     seq.emitter = p.events;
                     seq.cancel = p.cancel;
                     seq.queued_at = p.queued_at;
@@ -592,8 +634,12 @@ impl Engine {
         // The policy replays deterministically from a fresh state
         // during re-prefill; the sampler is NOT reset — it continues
         // from the last emitted token.
-        let mc = self.rt.config.clone();
-        seq.policy = PolicyHolder::fresh(seq.id, &self.cfg, mc.n_layers, mc.n_heads);
+        let (nl, nh) = (self.rt.config.n_layers, self.rt.config.n_heads);
+        seq.policy = PolicyHolder::fresh(seq.id, &self.cfg, nl, nh);
+        // The staged K/V rows referenced blocks that were just freed;
+        // the warm re-admission must restage from scratch.
+        seq.staging.invalidate();
+        seq.cur_sel = Selection::default();
         seq.cached_tokens = 0;
         seq.preempted_at = Some(Instant::now());
         let entry = PendingSession {
@@ -762,8 +808,8 @@ impl Engine {
     pub fn add(&mut self, req: GenRequest) -> Result<SeqId> {
         let id = self.next_id;
         self.next_id += 1;
-        let mc = self.rt.config.clone();
-        let mut seq = Sequence::new(id, req, &self.cfg, mc.n_layers, mc.n_heads);
+        let (nl, nh) = (self.rt.config.n_layers, self.rt.config.n_heads);
+        let mut seq = Sequence::new(id, req, &self.cfg, nl, nh);
         let t0 = Instant::now();
         if !seq.tokens.is_empty() {
             self.seed_from_prefix(&mut seq);
@@ -798,9 +844,9 @@ impl Engine {
     /// past the (possibly partial) seam chunk a warm run issues the
     /// same dispatches over the same inputs as a cold one.
     fn prefill(&mut self, seq: &mut Sequence) -> Result<()> {
-        let mc = self.rt.config.clone();
-        let chunk = self.rt.registry.prefill_chunk;
-        let (l, h, dh) = (mc.n_layers, mc.n_heads, mc.d_head);
+        let rt = Arc::clone(&self.rt);
+        let chunk = rt.registry.prefill_chunk;
+        let (l, h, dh) = (rt.config.n_layers, rt.config.n_heads, rt.config.d_head);
         let total = seq.tokens.len() - 1;
         debug_assert!(seq.cache.len() <= total, "seeded past the prefill range");
         self.metrics.add("prefill_tokens", (total - seq.cache.len()) as u64);
@@ -814,7 +860,7 @@ impl Engine {
             let t0 = seq.cache.len();
             let t1 = ((t0 / chunk + 1) * chunk).min(total);
             let real = t1 - t0;
-            let meta = self.rt.registry.resolve_prefill(t0, self.cfg.n_feat)?.clone();
+            let meta = rt.registry.resolve_prefill(t0, self.cfg.n_feat)?;
             let p = meta.len;
             let mut past_k = vec![0.0f32; l * h * p * dh];
             let mut past_v = vec![0.0f32; l * h * p * dh];
@@ -827,8 +873,8 @@ impl Engine {
             }
             let mut toks: Vec<i32> = seq.tokens[t0..t1].to_vec();
             toks.resize(chunk, 0); // pad the tail chunk
-            let out = self.rt.prefill(
-                &meta, &self.omega, &toks, t0 as i32, &past_k, &past_v, &pmask,
+            let out = rt.prefill(
+                meta, &self.omega, &toks, t0 as i32, &past_k, &past_v, &pmask,
             )?;
             seq.cache
                 .append_chunk(&mut self.pool, real, chunk, &out.k_c, &out.v_c, &out.feat_c)?;
@@ -914,27 +960,34 @@ impl Engine {
                 rp.force_full = degraded;
             }
         }
-        let ids = self.active_ids();
-        if ids.is_empty() {
+        // Partition runnable sequences by pipeline into reusable
+        // scratch vectors (the step path allocates nothing).
+        let mut fused = std::mem::take(&mut self.scratch_fused);
+        let mut radar = std::mem::take(&mut self.scratch_radar);
+        fused.clear();
+        radar.clear();
+        for (&id, s) in &self.seqs {
+            if s.done {
+                continue;
+            }
+            match s.policy {
+                PolicyHolder::Fused(_) => fused.push(id),
+                PolicyHolder::Radar(_) => radar.push(id),
+            }
+        }
+        if fused.is_empty() && radar.is_empty() {
+            self.scratch_fused = fused;
+            self.scratch_radar = radar;
             // Still deliver terminal events (e.g. queue-less timeouts).
             self.reap_finished();
             self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
             self.publish_health();
             return Ok(stats);
         }
-        // Partition by pipeline.
-        let mut fused: Vec<SeqId> = Vec::new();
-        let mut radar: Vec<SeqId> = Vec::new();
-        for id in ids {
-            match self.seqs[&id].policy {
-                PolicyHolder::Fused(_) => fused.push(id),
-                PolicyHolder::Radar(_) => radar.push(id),
-            }
-        }
         if !fused.is_empty() {
             stats.merge(self.step_fused_batch(&fused, step_no)?);
         }
-        for id in radar {
+        for &id in &radar {
             // May have been preempted as another row's KV victim.
             let Some(mut seq) = self.seqs.remove(&id) else { continue };
             let inject_panic = self.faults.take_panic(step_no, id);
@@ -970,6 +1023,8 @@ impl Engine {
                 }
             }
         }
+        self.scratch_fused = fused;
+        self.scratch_radar = radar;
         self.reap_finished();
         self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
         self.metrics
@@ -1038,15 +1093,17 @@ impl Engine {
 
     fn step_fused_batch(&mut self, ids: &[SeqId], step_no: u64) -> Result<StepStats> {
         let mut stats = StepStats::default();
-        // Compute selections + needed S per sequence.
-        let mut selections: BTreeMap<SeqId, Selection> = BTreeMap::new();
-        let mut needs: Vec<(SeqId, usize)> = Vec::new();
+        // Compute selections + needed S per sequence. The selection is
+        // stored on the sequence (`cur_sel`) so the staging and policy-
+        // feedback paths read it without a per-step map.
+        let mut needs = std::mem::take(&mut self.scratch_needs);
+        needs.clear();
         for &id in ids {
             let Some(mut seq) = self.seqs.remove(&id) else { continue };
             match catch_unwind(AssertUnwindSafe(|| self.select_fused(&mut seq))) {
                 Ok(sel) => {
                     needs.push((id, sel.max_len().max(1)));
-                    selections.insert(id, sel);
+                    seq.cur_sel = sel;
                     self.seqs.insert(id, seq);
                 }
                 Err(p) => {
@@ -1059,30 +1116,16 @@ impl Engine {
             }
         }
         if needs.is_empty() {
+            self.scratch_needs = needs;
             return Ok(stats);
         }
-        let s_buckets: Vec<usize> = {
-            let mut b: Vec<usize> = self
-                .rt
-                .registry
-                .all()
-                .iter()
-                .filter(|a| {
-                    a.kind == crate::runtime::ArtifactKind::Decode
-                        && a.n_feat == self.cfg.n_feat
-                })
-                .map(|a| a.len)
-                .collect();
-            b.sort_unstable();
-            b.dedup();
-            b
-        };
-        let groups = group_by_bucket(&needs, &s_buckets, self.cfg.max_batch);
+        let groups = group_by_bucket(&needs, &self.decode_s_buckets, self.cfg.max_batch);
+        self.scratch_needs = needs;
+        let rt = Arc::clone(&self.rt);
         for g in groups {
             let b_need = g.seq_ids.len();
-            let meta = match self.rt.registry.resolve_decode(b_need, g.bucket_s, self.cfg.n_feat)
-            {
-                Ok(m) => m.clone(),
+            let meta = match rt.registry.resolve_decode(b_need, g.bucket_s, self.cfg.n_feat) {
+                Ok(m) => m,
                 Err(e) => {
                     // No compiled artifact serves this group (e.g. a
                     // selection outgrew every S bucket): fail its
@@ -1092,7 +1135,7 @@ impl Engine {
                     continue;
                 }
             };
-            match self.dispatch_fused_group(&g.seq_ids, &meta, &selections, step_no) {
+            match self.dispatch_fused_group(&g.seq_ids, meta, step_no) {
                 Ok(decoded) => {
                     stats.decoded += decoded;
                     stats.dispatches += 1;
@@ -1138,20 +1181,26 @@ impl Engine {
         &mut self,
         ids: &[SeqId],
         meta: &crate::runtime::ArtifactMeta,
-        selections: &BTreeMap<SeqId, Selection>,
         step_no: u64,
     ) -> Result<usize> {
-        let mc = self.rt.config.clone();
-        let (l, h, dh) = (mc.n_layers, mc.n_heads, mc.d_head);
+        let (l, h, dh) =
+            (self.rt.config.n_layers, self.rt.config.n_heads, self.rt.config.d_head);
+        let vocab = self.rt.config.vocab;
         let (b, s) = (meta.batch, meta.len);
         let row_kv = l * h * s * dh;
         let row_mask = l * h * s;
         self.buf_k.resize(b * row_kv, 0.0);
         self.buf_v.resize(b * row_kv, 0.0);
         self.buf_mask.resize(b * row_mask, 0.0);
-        let mut tokens = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        let mut alive = vec![true; ids.len()];
+        let mut tokens = std::mem::take(&mut self.scratch_tokens);
+        let mut pos = std::mem::take(&mut self.scratch_pos);
+        let mut alive = std::mem::take(&mut self.scratch_alive);
+        tokens.clear();
+        tokens.resize(b, 0);
+        pos.clear();
+        pos.resize(b, 0);
+        alive.clear();
+        alive.resize(ids.len(), true);
         // Stage rows. A failed row becomes a fully masked ghost row
         // (same treatment as batch padding), so the dispatch stays
         // valid for the others.
@@ -1171,7 +1220,7 @@ impl Engine {
                 if let Some(ms) = stall_ms {
                     std::thread::sleep(Duration::from_millis(ms));
                 }
-                self.stage_fused_row(id, bi, meta, &selections[&id])
+                self.stage_fused_row(id, bi, meta)
             }));
             let mut fail = match staged {
                 Ok(Ok((tok, p))) => {
@@ -1201,6 +1250,9 @@ impl Engine {
             }
         }
         if alive.iter().all(|a| !*a) {
+            self.scratch_tokens = tokens;
+            self.scratch_pos = pos;
+            self.scratch_alive = alive;
             return Ok(0);
         }
         // Pad ghost rows (bi >= ids.len()): fully masked.
@@ -1209,8 +1261,18 @@ impl Engine {
         }
         let t_dispatch = Instant::now();
         let out = self.metrics.time("decode_dispatch", || {
-            self.rt.decode(meta, &self.omega, &tokens, &pos, &self.buf_k, &self.buf_v, &self.buf_mask)
-        })?;
+            self.rt
+                .decode(meta, &self.omega, &tokens, &pos, &self.buf_k, &self.buf_v, &self.buf_mask)
+        });
+        self.scratch_tokens = tokens;
+        self.scratch_pos = pos;
+        let out = match out {
+            Ok(o) => o,
+            Err(e) => {
+                self.scratch_alive = alive;
+                return Err(e);
+            }
+        };
         let n_alive = alive.iter().filter(|a| **a).count();
         let dispatch_share = t_dispatch.elapsed().as_secs_f64() * 1e3 / n_alive as f64;
         // Distribute outputs.
@@ -1227,7 +1289,7 @@ impl Engine {
             let t0 = Instant::now();
             let inject_alloc = self.faults.take_alloc(step_no, id);
             let row = FusedRowOut {
-                logits: &out.logits[bi * mc.vocab..(bi + 1) * mc.vocab],
+                logits: &out.logits[bi * vocab..(bi + 1) * vocab],
                 k_new: &out.k_new[bi * kv_row..(bi + 1) * kv_row],
                 v_new: &out.v_new[bi * kv_row..(bi + 1) * kv_row],
                 feat_new: &out.feat_new[bi * feat_row..(bi + 1) * feat_row],
@@ -1235,7 +1297,7 @@ impl Engine {
                 s,
             };
             let r = catch_unwind(AssertUnwindSafe(|| {
-                self.finish_fused_row(&mut seq, &row, &selections[&id], inject_alloc)
+                self.finish_fused_row(&mut seq, &row, inject_alloc)
             }));
             match r {
                 Ok(Ok(())) => {
@@ -1258,48 +1320,82 @@ impl Engine {
                 }
             }
         }
+        self.scratch_alive = alive;
         self.metrics.add("tokens_decoded", decoded as u64);
         Ok(decoded)
     }
 
     /// Stage one batch row's input token, position, gathered K/V and
     /// mask into the shared buffers; returns (token, position).
+    ///
+    /// K/V rows route through the sequence's incremental staging arena:
+    /// only slots whose selection changed since the previous step are
+    /// re-gathered from the paged cache (`stage_delta`); a cold or
+    /// invalidated arena falls back to a full coalesced gather. With a
+    /// staging pool configured, planes are sharded across workers.
     fn stage_fused_row(
         &mut self,
         id: SeqId,
         bi: usize,
         meta: &crate::runtime::ArtifactMeta,
-        sel: &Selection,
     ) -> Result<(i32, i32)> {
         let (l, h, dh) =
             (self.rt.config.n_layers, self.rt.config.n_heads, self.rt.config.d_head);
         let s = meta.len;
         let row_kv = l * h * s * dh;
         let row_mask = l * h * s;
-        let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("seq {id} not active"))?;
+        let delta = self.cfg.stage_delta;
+        let seq = self.seqs.get_mut(&id).ok_or_else(|| anyhow!("seq {id} not active"))?;
         let t = seq.cache.len();
         let tok = seq.next_input().ok_or_else(|| anyhow!("seq {id} has no input"))?;
-        for li in 0..l {
-            for hi in 0..h {
-                let p = li * h + hi;
-                let plane_sel = &sel.per_plane[p];
-                let koff = bi * row_kv + p * s * dh;
-                seq.cache.gather_plane(
-                    &self.pool,
-                    li,
-                    hi,
-                    plane_sel,
-                    &mut self.buf_k[koff..koff + s * dh],
-                    &mut self.buf_v[koff..koff + s * dh],
-                );
-                let moff = bi * row_mask + p * s;
-                let mrow = &mut self.buf_mask[moff..moff + s];
-                let n_valid = plane_sel.len();
-                mrow[..n_valid].fill(0.0);
-                mrow[n_valid..].fill(NEG);
-            }
-        }
+        let Sequence { cache, staging, cur_sel, .. } = seq;
+        let dst_k = &mut self.buf_k[bi * row_kv..(bi + 1) * row_kv];
+        let dst_v = &mut self.buf_v[bi * row_kv..(bi + 1) * row_kv];
+        let dst_m = &mut self.buf_mask[bi * row_mask..(bi + 1) * row_mask];
+        let t0 = Instant::now();
+        let st = match &self.stage_pool {
+            Some(tp) => stage_planes_sharded(
+                tp,
+                self.cfg.stage_workers,
+                &mut staging.planes,
+                0,
+                h,
+                cache,
+                &self.pool,
+                &cur_sel.per_plane,
+                s,
+                dst_k,
+                dst_v,
+                dst_m,
+                delta,
+                NEG,
+            ),
+            None => stage_planes_serial(
+                &mut staging.planes,
+                0,
+                h,
+                cache,
+                &self.pool,
+                &cur_sel.per_plane,
+                s,
+                dst_k,
+                dst_v,
+                dst_m,
+                delta,
+                NEG,
+            ),
+        };
+        self.metrics.observe("stage_ms", t0.elapsed().as_secs_f64() * 1e3);
+        self.flush_stage_stats(&st);
         Ok((tok, t as i32))
+    }
+
+    /// Fold one row/step's staging telemetry into the registry.
+    fn flush_stage_stats(&self, st: &StageStats) {
+        self.metrics.add("staged_bytes_full", st.bytes_full);
+        self.metrics.add("staged_bytes_delta", st.bytes_delta);
+        self.metrics.add("stage_delta_hits", st.delta_hits);
+        self.metrics.add("stage_full_restages", st.full_restages);
     }
 
     /// Consume one batch row's output: append KV, feed the policy,
@@ -1309,7 +1405,6 @@ impl Engine {
         &mut self,
         seq: &mut Sequence,
         row: &FusedRowOut,
-        sel: &Selection,
         inject_alloc: bool,
     ) -> Result<()> {
         if inject_alloc {
@@ -1320,14 +1415,17 @@ impl Engine {
             .into());
         }
         seq.cache.append(&mut self.pool, row.k_new, row.v_new, row.feat_new)?;
-        let ctx = SelectCtx {
-            pool: &self.pool,
-            seq: &seq.cache,
-            t: seq.cache.len(),
-            cfg: &self.cfg,
-        };
-        if let PolicyHolder::Fused(p) = &mut seq.policy {
-            p.on_decode(&ctx, sel, row.probs, row.s);
+        {
+            let Sequence { cache, policy, cur_sel, .. } = &mut *seq;
+            let ctx = SelectCtx {
+                pool: &self.pool,
+                seq: cache,
+                t: cache.len(),
+                cfg: &self.cfg,
+            };
+            if let PolicyHolder::Fused(p) = policy {
+                p.on_decode(&ctx, cur_sel, row.probs, row.s);
+            }
         }
         self.finish_token(seq, row.logits);
         Ok(())
@@ -1349,32 +1447,30 @@ impl Engine {
                 _ => unreachable!(),
             }
         };
-        let meta = self
-            .rt
-            .registry
-            .resolve_decode(1, sel.max_len().max(1), self.cfg.n_feat)?
-            .clone();
-        let mc = self.rt.config.clone();
-        let (l, h, dh, s) = (mc.n_layers, mc.n_heads, mc.d_head, meta.len);
+        let rt = Arc::clone(&self.rt);
+        let meta = rt.registry.resolve_decode(1, sel.max_len().max(1), self.cfg.n_feat)?;
+        let (l, h, dh, s) =
+            (rt.config.n_layers, rt.config.n_heads, rt.config.d_head, meta.len);
         self.buf_k.resize(l * h * s * dh, 0.0);
         self.buf_v.resize(l * h * s * dh, 0.0);
         self.buf_mask.resize(l * h * s, 0.0);
-        for li in 0..l {
-            for hi in 0..h {
-                let p = li * h + hi;
-                let koff = p * s * dh;
-                seq.cache.gather_plane(
-                    &self.pool, li, hi, &sel.per_plane[p],
-                    &mut self.buf_k[koff..koff + s * dh],
-                    &mut self.buf_v[koff..koff + s * dh],
-                );
-                let mrow = &mut self.buf_mask[p * s..(p + 1) * s];
-                mrow[..sel.per_plane[p].len()].fill(0.0);
-                mrow[sel.per_plane[p].len()..].fill(NEG);
-            }
-        }
-        let out = self.rt.decode(
-            &meta, &self.omega, &[tok], &[pos as i32],
+        let st = stage_planes_serial(
+            &mut seq.staging.planes,
+            0,
+            h,
+            &seq.cache,
+            &self.pool,
+            &sel.per_plane,
+            s,
+            &mut self.buf_k,
+            &mut self.buf_v,
+            &mut self.buf_mask,
+            self.cfg.stage_delta,
+            NEG,
+        );
+        self.flush_stage_stats(&st);
+        let out = rt.decode(
+            meta, &self.omega, &[tok], &[pos as i32],
             &self.buf_k, &self.buf_v, &self.buf_mask,
         )?;
         seq.cache.append(&mut self.pool, &out.k_new, &out.v_new, &out.feat_new)?;
@@ -1428,51 +1524,96 @@ impl Engine {
     }
 
     /// The per-layer pipeline for one token; returns final logits.
+    /// Gathers route through the sequence's incremental staging arena
+    /// (delta gathers at steady state); with a staging pool configured,
+    /// both segment scoring and plane staging shard across workers.
     fn radar_step_logits(&mut self, seq: &mut Sequence, tok: i32, pos: usize) -> Result<Vec<f32>> {
-        let mc = self.rt.config.clone();
-        let (l_n, h_n, dh, nf) = (mc.n_layers, mc.n_heads, mc.d_head, self.cfg.n_feat);
-        let qkv_meta = self.rt.registry.resolve_qkv(1, nf)?.clone();
-        let mut x = embed(&self.rt, &[tok]);
-        let mut k_all = vec![0.0f32; l_n * h_n * dh];
-        let mut v_all = vec![0.0f32; l_n * h_n * dh];
-        let mut f_all = vec![0.0f32; l_n * h_n * nf];
+        let rt = Arc::clone(&self.rt);
+        let (l_n, h_n, dh, nf) =
+            (rt.config.n_layers, rt.config.n_heads, rt.config.d_head, self.cfg.n_feat);
+        let qkv_meta = rt.registry.resolve_qkv(1, nf)?;
+        let delta = self.cfg.stage_delta;
+        let mut x = embed(&rt, &[tok]);
+        let mut k_all = std::mem::take(&mut self.scratch_k_new);
+        let mut v_all = std::mem::take(&mut self.scratch_v_new);
+        let mut f_all = std::mem::take(&mut self.scratch_f_new);
+        k_all.resize(l_n * h_n * dh, 0.0);
+        v_all.resize(l_n * h_n * dh, 0.0);
+        f_all.resize(l_n * h_n * nf, 0.0);
         let mut anom_planes = 0u32;
+        let mut stage_st = StageStats::default();
+        let mut stage_s = 0f64; // seconds spent staging this step
         for li in 0..l_n {
             let q_out = self.metrics.time("qkv_dispatch", || {
-                self.rt.qkv(&qkv_meta, li, &self.omega, &x, &[pos as i32])
+                rt.qkv(qkv_meta, li, &self.omega, &x, &[pos as i32])
             })?;
-            // Selection with this layer's phi(q).
+            // Selection with this layer's phi(q), plane-parallel when a
+            // staging pool is configured.
             let (sel_planes, s_need) = {
                 let rp = match &mut seq.policy {
                     PolicyHolder::Radar(rp) => rp,
                     _ => unreachable!(),
                 };
-                let planes = rp.select_layer(
-                    &self.pool, &seq.cache, &self.cfg, li, &q_out.phi_q, &q_out.q,
+                let planes = rp.select_layer_with(
+                    self.stage_pool.as_ref(),
+                    &self.pool,
+                    &seq.cache,
+                    &self.cfg,
+                    li,
+                    &q_out.phi_q,
+                    &q_out.q,
                 );
                 anom_planes += rp.anomalous_planes;
                 let need = planes.iter().map(Vec::len).max().unwrap_or(0).max(1);
                 (planes, need)
             };
-            let am_meta = self.rt.registry.resolve_attn_mlp(1, s_need)?.clone();
+            let am_meta = rt.registry.resolve_attn_mlp(1, s_need)?;
             let s = am_meta.len;
             self.buf_k.resize(h_n * s * dh, 0.0);
             self.buf_v.resize(h_n * s * dh, 0.0);
             self.buf_mask.resize(h_n * s, 0.0);
-            for hi in 0..h_n {
-                let koff = hi * s * dh;
-                seq.cache.gather_plane(
-                    &self.pool, li, hi, &sel_planes[hi],
-                    &mut self.buf_k[koff..koff + s * dh],
-                    &mut self.buf_v[koff..koff + s * dh],
-                );
-                let mrow = &mut self.buf_mask[hi * s..(hi + 1) * s];
-                mrow[..sel_planes[hi].len()].fill(0.0);
-                mrow[sel_planes[hi].len()..].fill(NEG);
+            let t_stage = Instant::now();
+            {
+                let Sequence { cache, staging, .. } = &mut *seq;
+                let layer_planes = &mut staging.planes[li * h_n..(li + 1) * h_n];
+                let st = match &self.stage_pool {
+                    Some(tp) => stage_planes_sharded(
+                        tp,
+                        self.cfg.stage_workers,
+                        layer_planes,
+                        li * h_n,
+                        h_n,
+                        cache,
+                        &self.pool,
+                        &sel_planes,
+                        s,
+                        &mut self.buf_k,
+                        &mut self.buf_v,
+                        &mut self.buf_mask,
+                        delta,
+                        NEG,
+                    ),
+                    None => stage_planes_serial(
+                        layer_planes,
+                        li * h_n,
+                        h_n,
+                        cache,
+                        &self.pool,
+                        &sel_planes,
+                        s,
+                        &mut self.buf_k,
+                        &mut self.buf_v,
+                        &mut self.buf_mask,
+                        delta,
+                        NEG,
+                    ),
+                };
+                stage_st.merge(&st);
             }
+            stage_s += t_stage.elapsed().as_secs_f64();
             let am_out = self.metrics.time("attnmlp_dispatch", || {
-                self.rt.attn_mlp(
-                    &am_meta, li, &x, &q_out.q, &q_out.k, &q_out.v,
+                rt.attn_mlp(
+                    am_meta, li, &x, &q_out.q, &q_out.k, &q_out.v,
                     &self.buf_k, &self.buf_v, &self.buf_mask,
                 )
             })?;
@@ -1482,7 +1623,13 @@ impl Engine {
             v_all[li * h_n * dh..(li + 1) * h_n * dh].copy_from_slice(&q_out.v);
             f_all[li * h_n * nf..(li + 1) * h_n * nf].copy_from_slice(&q_out.phi_k);
         }
-        seq.cache.append(&mut self.pool, &k_all, &v_all, &f_all)?;
+        self.metrics.observe("stage_ms", stage_s * 1e3);
+        self.flush_stage_stats(&stage_st);
+        let appended = seq.cache.append(&mut self.pool, &k_all, &v_all, &f_all);
+        self.scratch_k_new = k_all;
+        self.scratch_v_new = v_all;
+        self.scratch_f_new = f_all;
+        appended?;
         if let PolicyHolder::Radar(rp) = &mut seq.policy {
             rp.on_grow(&self.pool, &seq.cache); // Alg. 1 line 8
         }
@@ -1495,7 +1642,7 @@ impl Engine {
             self.metrics.add("anomalous_planes", anom_planes as u64);
             self.breaker.record(self.step_no);
         }
-        Ok(head(&self.rt, &mc, &x))
+        Ok(head(&rt, &rt.config, &x))
     }
 
     // -----------------------------------------------------------------

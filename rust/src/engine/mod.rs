@@ -6,6 +6,7 @@ mod batcher;
 mod core;
 mod overload;
 mod request;
+pub mod staging;
 
 pub use batcher::{group_by_bucket, preemption_victim, BatchGroup};
 pub use core::{Engine, StepStats};

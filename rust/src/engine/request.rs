@@ -7,9 +7,10 @@
 //! `GenResult`) remains for batch harnesses and tests.
 
 use crate::config::{PolicyKind, ServingConfig};
+use crate::engine::staging::StagedPlanes;
 use crate::kvcache::SeqCache;
 use crate::model::Sampler;
-use crate::policy::{RadarPolicy, RadarVariant, SelectionPolicy};
+use crate::policy::{RadarPolicy, RadarVariant, Selection, SelectionPolicy};
 use crate::util::threadpool::Channel;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -350,10 +351,22 @@ pub struct Sequence {
     pub preemptions: u32,
     /// Set while requeued after preemption (recovery-latency anchor).
     pub preempted_at: Option<Instant>,
+    /// Incremental K/V staging arena: last step's gathered rows per
+    /// (layer, head). Invalidated on preemption (the cache is freed).
+    pub staging: StagedPlanes,
+    /// Selection staged for the in-flight decode step (written by the
+    /// batch planner, read by staging and post-dispatch policy hooks).
+    pub cur_sel: Selection,
 }
 
 impl Sequence {
-    pub fn new(id: SeqId, req: GenRequest, cfg: &ServingConfig, n_layers: usize, n_heads: usize) -> Self {
+    pub fn new(
+        id: SeqId,
+        req: GenRequest,
+        cfg: &ServingConfig,
+        n_layers: usize,
+        n_heads: usize,
+    ) -> Self {
         let policy = PolicyHolder::fresh(id, cfg, n_layers, n_heads);
         let temperature = req.temperature.unwrap_or(cfg.temperature);
         let greedy = req.greedy.unwrap_or(cfg.greedy);
@@ -391,6 +404,8 @@ impl Sequence {
             deadline: None,
             preemptions: 0,
             preempted_at: None,
+            staging: StagedPlanes::new(n_layers * n_heads),
+            cur_sel: Selection::default(),
         }
     }
 

@@ -1,0 +1,585 @@
+//! Incremental K/V staging for the decode hot path.
+//!
+//! Re-gathering every (layer, head) plane's full selection from the
+//! paged cache each step is O(S·dh) of host copies per plane, yet
+//! consecutive decode steps differ only by the sliding-window tip and
+//! occasional top-k churn. `StagedPlanes` is a per-sequence arena that
+//! retains last step's gathered K/V rows per plane; each step the new
+//! selection is diffed against the staged one and only changed rows are
+//! gathered from the cache — the common case (window grows by one
+//! token, top-k unchanged) becomes an O(dh) append.
+//!
+//! Soundness: a token index in a `SeqCache` is append-only — its K/V
+//! values never change once written (copy-on-write block copies
+//! preserve contents). Staged rows therefore stay valid for the
+//! lifetime of the cache; the arena must only be invalidated when the
+//! cache itself is torn down (preemption frees the blocks and the
+//! sequence re-prefills from scratch). Everything else — restructure
+//! boundaries, anomaly fallbacks, fused-batch bucket changes,
+//! degraded-mode full-context selections — is just a bigger diff and
+//! needs no special-casing: the diff naturally degrades to a full
+//! gather, never to a wrong answer.
+
+use crate::kvcache::{BlockPool, SeqCache};
+use crate::util::threadpool::ThreadPool;
+
+/// Per-step staging telemetry; accumulated across planes, then flushed
+/// into `Metrics` by the engine.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StageStats {
+    /// Bytes a full re-gather of every staged selection would copy
+    /// (K + V) — the baseline the delta path is measured against.
+    pub bytes_full: u64,
+    /// Bytes actually gathered from the paged cache (K + V).
+    pub bytes_delta: u64,
+    /// Planes where the delta path gathered fewer rows than a full
+    /// restage would have.
+    pub delta_hits: u64,
+    /// Planes that took the full-gather path (cold start, delta
+    /// disabled, or invalidated arena).
+    pub full_restages: u64,
+}
+
+impl StageStats {
+    pub fn merge(&mut self, o: &StageStats) {
+        self.bytes_full += o.bytes_full;
+        self.bytes_delta += o.bytes_delta;
+        self.delta_hits += o.delta_hits;
+        self.full_restages += o.full_restages;
+    }
+}
+
+/// One plane's staged rows: the selection it was gathered for plus the
+/// gathered K/V rows, tightly packed (row `i` at `i * dh`). Tight
+/// packing makes the arena independent of the padded dispatch-buffer
+/// bucket, so batch-slot and S-bucket changes never force a restage.
+#[derive(Default)]
+pub struct StagedPlane {
+    sel: Vec<u32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl StagedPlane {
+    /// Number of staged rows (test/introspection hook).
+    pub fn len(&self) -> usize {
+        self.sel.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sel.is_empty()
+    }
+
+    fn clear(&mut self) {
+        self.sel.clear();
+        self.k.clear();
+        self.v.clear();
+    }
+
+    /// Stage plane (l, h)'s selection into `dst_k`/`dst_v` (each
+    /// `[S, dh]`, `S >= sel.len()`; rows past `sel.len()` untouched —
+    /// callers mask them), reusing staged rows where the selection
+    /// overlaps last step's.
+    ///
+    /// The diff is prefix + one relocation run: rows up to the longest
+    /// common prefix are reused in place; if the first divergent token
+    /// still exists further right in the staged selection (window
+    /// front slid, a segment was dropped), its run is memmoved left;
+    /// the remainder is gathered from the cache. Selections are sorted
+    /// and deduped (policy invariant), which is what makes the prefix
+    /// diff effective. With `delta == false` the arena is bypassed for
+    /// reuse (but still refreshed) and every row is gathered — the
+    /// force-full baseline used by the bench and byte-identity tests.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stage(
+        &mut self,
+        cache: &SeqCache,
+        pool: &BlockPool,
+        l: usize,
+        h: usize,
+        sel: &[u32],
+        dst_k: &mut [f32],
+        dst_v: &mut [f32],
+        delta: bool,
+        stats: &mut StageStats,
+    ) {
+        let dh = pool.config().d_head;
+        let n_new = sel.len();
+        let row_bytes = (2 * dh * std::mem::size_of::<f32>()) as u64;
+        stats.bytes_full += n_new as u64 * row_bytes;
+        if n_new == 0 {
+            // Empty-selection plane: nothing staged, dst untouched
+            // (the caller masks the whole row NEG).
+            self.clear();
+            return;
+        }
+        let gathered = if !delta || self.sel.is_empty() {
+            self.k.resize(n_new * dh, 0.0);
+            self.v.resize(n_new * dh, 0.0);
+            cache.gather_plane(pool, l, h, sel, &mut self.k, &mut self.v);
+            stats.full_restages += 1;
+            n_new
+        } else {
+            let max_lcp = self.sel.len().min(n_new);
+            let mut lcp = 0;
+            while lcp < max_lcp && self.sel[lcp] == sel[lcp] {
+                lcp += 1;
+            }
+            let mut kept = lcp;
+            if lcp < n_new {
+                if let Some(off) = self.sel[lcp..].iter().position(|&x| x == sel[lcp]) {
+                    // `off > 0` always: lcp is maximal, so the staged
+                    // row at `lcp` itself cannot match.
+                    let src = lcp + off;
+                    let mut run = 1;
+                    while lcp + run < n_new
+                        && src + run < self.sel.len()
+                        && self.sel[src + run] == sel[lcp + run]
+                    {
+                        run += 1;
+                    }
+                    // memmove (left shift): dst start < src start, both
+                    // ranges inside the pre-resize arena.
+                    self.k.copy_within(src * dh..(src + run) * dh, lcp * dh);
+                    self.v.copy_within(src * dh..(src + run) * dh, lcp * dh);
+                    kept = lcp + run;
+                }
+            }
+            self.k.resize(n_new * dh, 0.0);
+            self.v.resize(n_new * dh, 0.0);
+            if kept < n_new {
+                cache.gather_plane(
+                    pool,
+                    l,
+                    h,
+                    &sel[kept..],
+                    &mut self.k[kept * dh..],
+                    &mut self.v[kept * dh..],
+                );
+            }
+            n_new - kept
+        };
+        stats.bytes_delta += gathered as u64 * row_bytes;
+        if delta && gathered < n_new {
+            stats.delta_hits += 1;
+        }
+        self.sel.clear();
+        self.sel.extend_from_slice(sel);
+        let n = n_new * dh;
+        dst_k[..n].copy_from_slice(&self.k[..n]);
+        dst_v[..n].copy_from_slice(&self.v[..n]);
+    }
+}
+
+/// Per-sequence arena: one `StagedPlane` per (layer, head).
+pub struct StagedPlanes {
+    pub planes: Vec<StagedPlane>,
+}
+
+impl StagedPlanes {
+    pub fn new(lh: usize) -> Self {
+        let mut planes = Vec::with_capacity(lh);
+        planes.resize_with(lh, StagedPlane::default);
+        Self { planes }
+    }
+
+    /// Drop all staged rows. Must be called whenever the sequence's
+    /// cache is torn down (preemption) so the next step restages from
+    /// the rebuilt cache.
+    pub fn invalidate(&mut self) {
+        for p in &mut self.planes {
+            p.clear();
+        }
+    }
+
+    /// Stage plane index `p` (= `l * n_heads + h`). See
+    /// [`StagedPlane::stage`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn stage_plane(
+        &mut self,
+        p: usize,
+        cache: &SeqCache,
+        pool: &BlockPool,
+        l: usize,
+        h: usize,
+        sel: &[u32],
+        dst_k: &mut [f32],
+        dst_v: &mut [f32],
+        delta: bool,
+        stats: &mut StageStats,
+    ) {
+        self.planes[p].stage(cache, pool, l, h, sel, dst_k, dst_v, delta, stats);
+    }
+}
+
+/// Stage a contiguous run of planes into a dispatch buffer laid out
+/// `[planes.len(), s, dh]` (K/V) and `[planes.len(), s]` (mask).
+/// Plane-local index `i` maps to global plane `first_plane + i`
+/// (`= l * n_heads + h`). Valid mask slots become 0.0, the rest `neg`;
+/// an empty selection masks its whole row without touching K/V.
+#[allow(clippy::too_many_arguments)]
+pub fn stage_planes_serial(
+    planes: &mut [StagedPlane],
+    first_plane: usize,
+    n_heads: usize,
+    cache: &SeqCache,
+    pool: &BlockPool,
+    per_plane: &[Vec<u32>],
+    s: usize,
+    dst_k: &mut [f32],
+    dst_v: &mut [f32],
+    dst_mask: &mut [f32],
+    delta: bool,
+    neg: f32,
+) -> StageStats {
+    let dh = pool.config().d_head;
+    let mut stats = StageStats::default();
+    for (i, plane) in planes.iter_mut().enumerate() {
+        let p = first_plane + i;
+        let sel = &per_plane[i];
+        plane.stage(
+            cache,
+            pool,
+            p / n_heads,
+            p % n_heads,
+            sel,
+            &mut dst_k[i * s * dh..(i + 1) * s * dh],
+            &mut dst_v[i * s * dh..(i + 1) * s * dh],
+            delta,
+            &mut stats,
+        );
+        let m = &mut dst_mask[i * s..(i + 1) * s];
+        m[..sel.len()].fill(0.0);
+        m[sel.len()..].fill(neg);
+    }
+    stats
+}
+
+/// Sharded variant of [`stage_planes_serial`]: planes are chunked into
+/// up to `n_jobs` runs, each staged by a pool worker into disjoint
+/// buffer slices. Per-plane staging is independent, so the result is
+/// byte-identical to the serial path in every buffer and stat.
+#[allow(clippy::too_many_arguments)]
+pub fn stage_planes_sharded(
+    tp: &ThreadPool,
+    n_jobs: usize,
+    planes: &mut [StagedPlane],
+    first_plane: usize,
+    n_heads: usize,
+    cache: &SeqCache,
+    pool: &BlockPool,
+    per_plane: &[Vec<u32>],
+    s: usize,
+    dst_k: &mut [f32],
+    dst_v: &mut [f32],
+    dst_mask: &mut [f32],
+    delta: bool,
+    neg: f32,
+) -> StageStats {
+    let dh = pool.config().d_head;
+    let lh = planes.len();
+    let chunk = lh.div_ceil(n_jobs.max(1));
+    if chunk == 0 || lh <= chunk {
+        return stage_planes_serial(
+            planes, first_plane, n_heads, cache, pool, per_plane, s, dst_k, dst_v, dst_mask,
+            delta, neg,
+        );
+    }
+    let n_chunks = lh.div_ceil(chunk);
+    let mut job_stats = vec![StageStats::default(); n_chunks];
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = planes
+        .chunks_mut(chunk)
+        .zip(per_plane.chunks(chunk))
+        .zip(dst_k.chunks_mut(chunk * s * dh))
+        .zip(dst_v.chunks_mut(chunk * s * dh))
+        .zip(dst_mask.chunks_mut(chunk * s))
+        .zip(job_stats.iter_mut())
+        .enumerate()
+        .map(|(j, (((((pl, sels), kc), vc), mc), st))| {
+            Box::new(move || {
+                *st = stage_planes_serial(
+                    pl,
+                    first_plane + j * chunk,
+                    n_heads,
+                    cache,
+                    pool,
+                    sels,
+                    s,
+                    kc,
+                    vc,
+                    mc,
+                    delta,
+                    neg,
+                );
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    tp.scoped(jobs);
+    let mut stats = StageStats::default();
+    for st in &job_stats {
+        stats.merge(st);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::kvcache::BLOCK_TOKENS;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ffn: 16,
+            n_feat: 8,
+            max_train_len: 64,
+            vocab: 16,
+        }
+    }
+
+    fn grown_cache(n: usize) -> (BlockPool, SeqCache) {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 256);
+        let mut seq = SeqCache::new(8);
+        for t in 0..n {
+            let k: Vec<f32> = (0..4 * 4).map(|i| (t * 100 + i) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| x + 0.25).collect();
+            let f = vec![0.0; 4 * 8];
+            seq.append(&mut pool, &k, &v, &f).unwrap();
+        }
+        (pool, seq)
+    }
+
+    fn full_gather(pool: &BlockPool, seq: &SeqCache, sel: &[u32]) -> (Vec<f32>, Vec<f32>) {
+        let dh = pool.config().d_head;
+        let mut k = vec![0.0; sel.len() * dh];
+        let mut v = vec![0.0; sel.len() * dh];
+        seq.gather_plane(pool, 1, 1, sel, &mut k, &mut v);
+        (k, v)
+    }
+
+    fn stage_once(
+        plane: &mut StagedPlane,
+        pool: &BlockPool,
+        seq: &SeqCache,
+        sel: &[u32],
+        delta: bool,
+    ) -> (Vec<f32>, Vec<f32>, StageStats) {
+        let dh = pool.config().d_head;
+        let mut k = vec![-1.0; (sel.len() + 3) * dh];
+        let mut v = vec![-1.0; (sel.len() + 3) * dh];
+        let mut st = StageStats::default();
+        plane.stage(seq, pool, 1, 1, sel, &mut k, &mut v, delta, &mut st);
+        k.truncate(sel.len() * dh);
+        v.truncate(sel.len() * dh);
+        (k, v, st)
+    }
+
+    #[test]
+    fn cold_start_equals_full_gather() {
+        let (pool, seq) = grown_cache(40);
+        let sel: Vec<u32> = vec![0, 1, 2, 17, 18, 35, 36, 37, 38, 39];
+        let mut plane = StagedPlane::default();
+        let (k, v, st) = stage_once(&mut plane, &pool, &seq, &sel, true);
+        let (wk, wv) = full_gather(&pool, &seq, &sel);
+        assert_eq!(k, wk);
+        assert_eq!(v, wv);
+        assert_eq!(st.full_restages, 1);
+        assert_eq!(st.delta_hits, 0, "cold start is not a delta hit");
+        assert_eq!(st.bytes_delta, st.bytes_full);
+    }
+
+    #[test]
+    fn append_step_gathers_one_row() {
+        let (pool, seq) = grown_cache(40);
+        let mut sel: Vec<u32> = (30..39).collect();
+        let mut plane = StagedPlane::default();
+        stage_once(&mut plane, &pool, &seq, &sel, true);
+        sel.push(39); // window grows by one token
+        let (k, v, st) = stage_once(&mut plane, &pool, &seq, &sel, true);
+        let (wk, wv) = full_gather(&pool, &seq, &sel);
+        assert_eq!(k, wk);
+        assert_eq!(v, wv);
+        assert_eq!(st.delta_hits, 1);
+        let row = (2 * 4 * 4) as u64; // K+V * dh * sizeof(f32)
+        assert_eq!(st.bytes_delta, row, "append stages exactly one row");
+        assert_eq!(st.bytes_full, 10 * row);
+    }
+
+    #[test]
+    fn window_slide_memmoves_instead_of_regathering() {
+        let (pool, seq) = grown_cache(40);
+        let mut plane = StagedPlane::default();
+        let sel0: Vec<u32> = (20..30).collect();
+        stage_once(&mut plane, &pool, &seq, &sel0, true);
+        // Front slides by one, tip advances by one: 21..=30.
+        let sel1: Vec<u32> = (21..31).collect();
+        let (k, v, st) = stage_once(&mut plane, &pool, &seq, &sel1, true);
+        let (wk, wv) = full_gather(&pool, &seq, &sel1);
+        assert_eq!(k, wk);
+        assert_eq!(v, wv);
+        assert_eq!(st.delta_hits, 1);
+        let row = (2 * 4 * 4) as u64;
+        assert_eq!(st.bytes_delta, row, "slide relocates 9 rows, gathers 1");
+    }
+
+    #[test]
+    fn topk_churn_stays_byte_identical() {
+        let (pool, seq) = grown_cache(64);
+        let mut delta_plane = StagedPlane::default();
+        let mut full_plane = StagedPlane::default();
+        // Segment swap mid-selection + growing window, across steps.
+        let steps: Vec<Vec<u32>> = vec![
+            [0, 1, 8, 9, 10, 11, 40, 41, 42].into(),
+            [0, 1, 8, 9, 10, 11, 40, 41, 42, 43].into(),
+            [0, 1, 16, 17, 18, 19, 40, 41, 42, 43, 44].into(),
+            [0, 1, 16, 17, 18, 19, 41, 42, 43, 44, 45].into(),
+            [0, 1, 8, 9, 10, 11, 16, 17, 41, 42, 43, 44, 45, 46].into(),
+        ];
+        for sel in &steps {
+            let (dk, dv, _) = stage_once(&mut delta_plane, &pool, &seq, sel, true);
+            let (fk, fv, _) = stage_once(&mut full_plane, &pool, &seq, sel, false);
+            assert_eq!(dk, fk, "K diverged at sel {sel:?}");
+            assert_eq!(dv, fv, "V diverged at sel {sel:?}");
+        }
+    }
+
+    #[test]
+    fn force_full_never_counts_hits() {
+        let (pool, seq) = grown_cache(40);
+        let mut plane = StagedPlane::default();
+        let sel: Vec<u32> = (0..20).collect();
+        let (_, _, st0) = stage_once(&mut plane, &pool, &seq, &sel, false);
+        let (_, _, st1) = stage_once(&mut plane, &pool, &seq, &sel, false);
+        for st in [st0, st1] {
+            assert_eq!(st.delta_hits, 0);
+            assert_eq!(st.bytes_delta, st.bytes_full);
+            assert_eq!(st.full_restages, 1);
+        }
+    }
+
+    #[test]
+    fn identical_selection_gathers_nothing() {
+        let (pool, seq) = grown_cache(40);
+        let mut plane = StagedPlane::default();
+        let sel: Vec<u32> = (10..30).collect();
+        stage_once(&mut plane, &pool, &seq, &sel, true);
+        let (k, v, st) = stage_once(&mut plane, &pool, &seq, &sel, true);
+        let (wk, wv) = full_gather(&pool, &seq, &sel);
+        assert_eq!(k, wk);
+        assert_eq!(v, wv);
+        assert_eq!(st.bytes_delta, 0);
+        assert_eq!(st.delta_hits, 1);
+    }
+
+    #[test]
+    fn empty_selection_clears_and_leaves_dst_untouched() {
+        let (pool, seq) = grown_cache(20);
+        let mut plane = StagedPlane::default();
+        stage_once(&mut plane, &pool, &seq, &[5, 6, 7], true);
+        assert_eq!(plane.len(), 3);
+        let mut k = vec![3.0; 8];
+        let mut v = vec![4.0; 8];
+        let mut st = StageStats::default();
+        plane.stage(&seq, &pool, 1, 1, &[], &mut k, &mut v, true, &mut st);
+        assert!(plane.is_empty());
+        assert!(k.iter().all(|&x| x == 3.0));
+        assert!(v.iter().all(|&x| x == 4.0));
+        assert_eq!(st.bytes_full, 0);
+    }
+
+    #[test]
+    fn invalidate_forces_full_restage() {
+        let (pool, seq) = grown_cache(40);
+        let mut planes = StagedPlanes::new(4);
+        let sel: Vec<u32> = (0..16).collect();
+        let dh = 4;
+        let mut k = vec![0.0; sel.len() * dh];
+        let mut v = vec![0.0; sel.len() * dh];
+        let mut st = StageStats::default();
+        planes.stage_plane(3, &seq, &pool, 1, 1, &sel, &mut k, &mut v, true, &mut st);
+        planes.invalidate();
+        let mut st = StageStats::default();
+        planes.stage_plane(3, &seq, &pool, 1, 1, &sel, &mut k, &mut v, true, &mut st);
+        assert_eq!(st.full_restages, 1, "invalidated arena must restage");
+        assert_eq!(st.delta_hits, 0);
+    }
+
+    #[test]
+    fn prop_random_selection_walks_match_full_gather() {
+        // Deterministic pseudo-random walk over selections (sorted,
+        // deduped, drawn from a growing prefix) — delta staging must
+        // remain byte-identical to a fresh full gather at every step.
+        use crate::util::prng::SplitMix64;
+        let (pool, seq) = grown_cache(3 * BLOCK_TOKENS + 7);
+        let t_max = (3 * BLOCK_TOKENS + 7) as u64;
+        let mut rng = SplitMix64::new(0xC0FFEE);
+        let mut plane = StagedPlane::default();
+        for step in 0..50 {
+            let t = 8 + (step as u64 * 7) % (t_max - 8);
+            let n = 1 + rng.below(t.min(24)) as usize;
+            let mut sel: Vec<u32> = (0..n).map(|_| rng.below(t) as u32).collect();
+            sel.sort_unstable();
+            sel.dedup();
+            let (k, v, _) = stage_once(&mut plane, &pool, &seq, &sel, true);
+            let (wk, wv) = full_gather(&pool, &seq, &sel);
+            assert_eq!(k, wk, "step {step} sel {sel:?}");
+            assert_eq!(v, wv, "step {step} sel {sel:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_staging_matches_serial() {
+        let (pool, seq) = grown_cache(48);
+        // 4 planes (l=2, h=2) with distinct selections, one empty.
+        let sels: Vec<Vec<u32>> = vec![
+            (0..10).collect(),
+            vec![0, 1, 20, 21, 22, 40, 41],
+            (30..47).collect(),
+            vec![],
+        ];
+        let (s, dh) = (20, 4);
+        let run = |tp: Option<&ThreadPool>| {
+            let mut planes = StagedPlanes::new(4);
+            let mut k = vec![-1.0; 4 * s * dh];
+            let mut v = vec![-1.0; 4 * s * dh];
+            let mut m = vec![-1.0; 4 * s];
+            let st = match tp {
+                Some(tp) => stage_planes_sharded(
+                    tp, 3, &mut planes.planes, 0, 2, &seq, &pool, &sels, s, &mut k, &mut v,
+                    &mut m, true, -1e30,
+                ),
+                None => stage_planes_serial(
+                    &mut planes.planes, 0, 2, &seq, &pool, &sels, s, &mut k, &mut v, &mut m,
+                    true, -1e30,
+                ),
+            };
+            (k, v, m, st)
+        };
+        let tp = ThreadPool::new(3, "stage-test");
+        let (k_s, v_s, m_s, st_s) = run(None);
+        let (k_p, v_p, m_p, st_p) = run(Some(&tp));
+        assert_eq!(k_s, k_p);
+        assert_eq!(v_s, v_p);
+        assert_eq!(m_s, m_p, "mask must be identical, incl. empty plane all-NEG");
+        assert_eq!(st_s, st_p);
+        // Empty plane's mask row is fully NEG.
+        assert!(m_s[3 * s..].iter().all(|&x| x == -1e30));
+    }
+
+    #[test]
+    fn stats_merge_adds_fields() {
+        let mut a = StageStats { bytes_full: 1, bytes_delta: 2, delta_hits: 3, full_restages: 4 };
+        let b = StageStats { bytes_full: 10, bytes_delta: 20, delta_hits: 30, full_restages: 40 };
+        a.merge(&b);
+        assert_eq!(
+            a,
+            StageStats { bytes_full: 11, bytes_delta: 22, delta_hits: 33, full_restages: 44 }
+        );
+    }
+}

@@ -1,0 +1,284 @@
+//! `bench` subcommand: synthetic long-context decode staging benchmark.
+//!
+//! Purely host-side: builds a paged KV cache filled with deterministic
+//! PRNG values and drives the incremental staging arena through a
+//! realistic decode selection schedule — attention sinks + steady top-k
+//! segments + a sliding window, with periodic restructure churn — while
+//! a force-full-restage arena runs in lockstep as the baseline. Every
+//! step the two staged buffers are compared byte-for-byte, staged bytes
+//! and staging time are accumulated, and the result is written to
+//! `BENCH_decode.json`. No model artifacts are required, so the bench
+//! runs anywhere (the CI smoke job included).
+
+use crate::config::ModelConfig;
+use crate::engine::staging::{
+    stage_planes_serial, stage_planes_sharded, StageStats, StagedPlanes,
+};
+use crate::kvcache::{BlockPool, SeqCache, BLOCK_TOKENS};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::prng::SplitMix64;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{ensure, Result};
+use std::time::Instant;
+
+const NEG: f32 = -1e30;
+
+struct BenchCfg {
+    t0: usize,
+    steps: usize,
+    layers: usize,
+    heads: usize,
+    d_head: usize,
+    sinks: usize,
+    window: usize,
+    k_segs: usize,
+    seg_len: usize,
+    restructure_every: usize,
+    workers: usize,
+    seed: u64,
+}
+
+impl BenchCfg {
+    fn from_args(args: &Args) -> Self {
+        Self {
+            t0: args.usize_or("t0", 2048),
+            steps: args.usize_or("steps", 256),
+            layers: args.usize_or("layers", 4),
+            heads: args.usize_or("heads", 4),
+            d_head: args.usize_or("dh", 64),
+            sinks: args.usize_or("sinks", 4),
+            window: args.usize_or("window", 256),
+            k_segs: args.usize_or("k", 48),
+            seg_len: args.usize_or("seg", 16),
+            restructure_every: args.usize_or("restructure-every", 64),
+            workers: args.usize_or("workers", 1),
+            seed: args.usize_or("seed", 42) as u64,
+        }
+    }
+
+    fn sel_len(&self) -> usize {
+        self.sinks + self.k_segs * self.seg_len + self.window
+    }
+}
+
+/// One plane's segment picks: starts on the `seg_len` grid inside
+/// `[grid_base, grid_top)`, resampled wholesale at restructure steps
+/// (mimicking Radar's perfect-square rebuilds).
+fn sample_segments(rng: &mut SplitMix64, n_grid: usize, k: usize) -> Vec<usize> {
+    let mut starts = rng.sample_indices(n_grid, k.min(n_grid));
+    starts.sort_unstable();
+    starts
+}
+
+/// Selection = sinks ++ segment tokens ++ window; the three regions are
+/// disjoint and ordered, so the result is sorted + deduped by
+/// construction (the policy invariant delta staging relies on).
+fn build_selection(
+    cfg: &BenchCfg,
+    grid_base: usize,
+    seg_starts: &[usize],
+    t: usize,
+) -> Vec<u32> {
+    let mut sel = Vec::with_capacity(cfg.sel_len());
+    for i in 0..cfg.sinks {
+        sel.push(i as u32);
+    }
+    for &g in seg_starts {
+        let start = grid_base + g * cfg.seg_len;
+        for tok in start..start + cfg.seg_len {
+            sel.push(tok as u32);
+        }
+    }
+    for tok in t.saturating_sub(cfg.window)..t {
+        sel.push(tok as u32);
+    }
+    sel
+}
+
+/// Append one synthetic token (PRNG K/V, zero features) to the cache.
+fn append_token(
+    rng: &mut SplitMix64,
+    pool: &mut BlockPool,
+    cache: &mut SeqCache,
+    lh: usize,
+    dh: usize,
+    n_feat: usize,
+) -> Result<()> {
+    let k: Vec<f32> = (0..lh * dh).map(|_| rng.next_f32()).collect();
+    let v: Vec<f32> = (0..lh * dh).map(|_| rng.next_f32()).collect();
+    let f = vec![0.0f32; lh * n_feat];
+    cache.append(pool, &k, &v, &f)?;
+    Ok(())
+}
+
+pub fn run(args: &Args, out: &str) -> Result<()> {
+    let cfg = BenchCfg::from_args(args);
+    let lh = cfg.layers * cfg.heads;
+    let n_feat = 8usize;
+    ensure!(cfg.t0 > cfg.window + cfg.sinks, "--t0 must exceed --window + --sinks");
+    let grid_base = cfg.sinks.max(BLOCK_TOKENS);
+    let grid_top = cfg.t0.saturating_sub(cfg.window + cfg.seg_len);
+    let n_grid = grid_top.saturating_sub(grid_base) / cfg.seg_len;
+    ensure!(
+        n_grid >= cfg.k_segs,
+        "context too small for k={} segments of {} tokens (grid has {n_grid})",
+        cfg.k_segs,
+        cfg.seg_len
+    );
+
+    let mc = ModelConfig {
+        name: "bench".into(),
+        d_model: cfg.heads * cfg.d_head,
+        n_layers: cfg.layers,
+        n_heads: cfg.heads,
+        d_head: cfg.d_head,
+        d_ffn: 4 * cfg.heads * cfg.d_head,
+        n_feat,
+        max_train_len: cfg.t0 + cfg.steps,
+        vocab: 256,
+    };
+    let blocks = (cfg.t0 + cfg.steps).div_ceil(BLOCK_TOKENS) + 4;
+    let mut pool = BlockPool::new(&mc, n_feat, blocks);
+    let mut cache = SeqCache::new(n_feat);
+    let mut rng = SplitMix64::new(cfg.seed);
+    crate::info!(
+        "bench: growing synthetic cache to t0={} ({} planes, dh={})",
+        cfg.t0,
+        lh,
+        cfg.d_head
+    );
+    for _ in 0..cfg.t0 {
+        append_token(&mut rng, &mut pool, &mut cache, lh, cfg.d_head, n_feat)?;
+    }
+
+    // Per-plane steady top-k segment picks.
+    let mut seg_starts: Vec<Vec<usize>> =
+        (0..lh).map(|_| sample_segments(&mut rng, n_grid, cfg.k_segs)).collect();
+    let tp = (cfg.workers > 1).then(|| ThreadPool::new(cfg.workers, "bench-stage"));
+
+    // Dispatch buffers: a fixed S bucket holding the whole selection.
+    let s = cfg.sel_len().next_multiple_of(64);
+    let row = lh * s * cfg.d_head;
+    let mut dk_d = vec![0.0f32; row];
+    let mut dv_d = vec![0.0f32; row];
+    let mut dm_d = vec![0.0f32; lh * s];
+    let (mut dk_f, mut dv_f) = (dk_d.clone(), dv_d.clone());
+    let mut dm_f = dm_d.clone();
+
+    let mut delta_arena = StagedPlanes::new(lh);
+    let mut full_arena = StagedPlanes::new(lh);
+    let mut delta_stats = StageStats::default();
+    let mut full_stats = StageStats::default();
+    let (mut delta_secs, mut full_secs) = (0f64, 0f64);
+
+    let t_bench = Instant::now();
+    for step in 0..cfg.steps {
+        let t = cache.len();
+        if cfg.restructure_every > 0 && step > 0 && step % cfg.restructure_every == 0 {
+            // Restructure churn: every plane resamples its top-k set,
+            // the delta path degrades to (mostly) full gathers this step.
+            for sgs in &mut seg_starts {
+                *sgs = sample_segments(&mut rng, n_grid, cfg.k_segs);
+            }
+        }
+        let per_plane: Vec<Vec<u32>> =
+            seg_starts.iter().map(|sgs| build_selection(&cfg, grid_base, sgs, t)).collect();
+
+        let t0 = Instant::now();
+        let st = match &tp {
+            Some(tp) => stage_planes_sharded(
+                tp, cfg.workers, &mut delta_arena.planes, 0, cfg.heads, &cache, &pool,
+                &per_plane, s, &mut dk_d, &mut dv_d, &mut dm_d, true, NEG,
+            ),
+            None => stage_planes_serial(
+                &mut delta_arena.planes, 0, cfg.heads, &cache, &pool, &per_plane, s,
+                &mut dk_d, &mut dv_d, &mut dm_d, true, NEG,
+            ),
+        };
+        delta_secs += t0.elapsed().as_secs_f64();
+        delta_stats.merge(&st);
+
+        let t1 = Instant::now();
+        let st = stage_planes_serial(
+            &mut full_arena.planes, 0, cfg.heads, &cache, &pool, &per_plane, s,
+            &mut dk_f, &mut dv_f, &mut dm_f, false, NEG,
+        );
+        full_secs += t1.elapsed().as_secs_f64();
+        full_stats.merge(&st);
+
+        ensure!(dk_d == dk_f, "staged K diverged from full re-gather at step {step}");
+        ensure!(dv_d == dv_f, "staged V diverged from full re-gather at step {step}");
+        ensure!(dm_d == dm_f, "staged mask diverged from full re-gather at step {step}");
+
+        append_token(&mut rng, &mut pool, &mut cache, lh, cfg.d_head, n_feat)?;
+    }
+    let wall_secs = t_bench.elapsed().as_secs_f64();
+    debug_assert_eq!(full_stats.delta_hits, 0, "force-full path must never count hits");
+    debug_assert_eq!(full_stats.bytes_delta, full_stats.bytes_full);
+
+    let steps = cfg.steps as f64;
+    let hit_denom = (delta_stats.delta_hits + delta_stats.full_restages).max(1);
+    let delta_hit_ratio = delta_stats.delta_hits as f64 / hit_denom as f64;
+    let reduction = delta_stats.bytes_full as f64 / (delta_stats.bytes_delta.max(1)) as f64;
+    let stage_ms_delta = delta_secs * 1e3 / steps;
+    let stage_ms_full = full_secs * 1e3 / steps;
+    let tokens_per_sec = steps / delta_secs.max(1e-12);
+
+    let report = Json::obj()
+        .with("bench", "decode_staging")
+        .with("engine_dispatch", false)
+        .with("t0", cfg.t0)
+        .with("steps", cfg.steps)
+        .with("layers", cfg.layers)
+        .with("heads", cfg.heads)
+        .with("d_head", cfg.d_head)
+        .with("sel_per_plane", cfg.sel_len())
+        .with("s_bucket", s)
+        .with("window", cfg.window)
+        .with("k_segments", cfg.k_segs)
+        .with("seg_len", cfg.seg_len)
+        .with("restructure_every", cfg.restructure_every)
+        .with("stage_workers", cfg.workers)
+        .with("seed", cfg.seed as usize)
+        .with("tokens_per_sec", tokens_per_sec)
+        .with("stage_ms", stage_ms_delta)
+        .with("stage_ms_full", stage_ms_full)
+        .with("dispatch_ms", 0.0)
+        .with("wall_secs", wall_secs)
+        .with("staged_bytes_full", delta_stats.bytes_full as f64)
+        .with("staged_bytes_delta", delta_stats.bytes_delta as f64)
+        .with("bytes_per_step_full", delta_stats.bytes_full as f64 / steps)
+        .with("bytes_per_step_delta", delta_stats.bytes_delta as f64 / steps)
+        .with("bytes_reduction", reduction)
+        .with("stage_delta_hits", delta_stats.delta_hits as f64)
+        .with("stage_full_restages", delta_stats.full_restages as f64)
+        .with("delta_hit_ratio", delta_hit_ratio)
+        .with("byte_identical", true);
+    std::fs::create_dir_all(out)?;
+    let path = format!("{out}/BENCH_decode.json");
+    std::fs::write(&path, report.to_string())?;
+
+    println!("decode staging bench (synthetic, host-side)");
+    println!(
+        "  t0={} steps={} planes={} sel/plane={} S={} workers={}",
+        cfg.t0,
+        cfg.steps,
+        lh,
+        cfg.sel_len(),
+        s,
+        cfg.workers
+    );
+    println!(
+        "  stage: {:.3} ms/step delta vs {:.3} ms/step full ({:.1} tok/s staged)",
+        stage_ms_delta, stage_ms_full, tokens_per_sec
+    );
+    println!(
+        "  bytes/step: {:.0} delta vs {:.0} full ({reduction:.1}x reduction, hit ratio {:.3})",
+        delta_stats.bytes_delta as f64 / steps,
+        delta_stats.bytes_full as f64 / steps,
+        delta_hit_ratio
+    );
+    println!("  wrote {path}");
+    Ok(())
+}

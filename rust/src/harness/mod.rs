@@ -2,6 +2,7 @@
 //! (DESIGN.md §6). Each prints the paper-style rows and writes CSV
 //! into `results/`.
 
+pub mod bench;
 pub mod flagrate;
 pub mod longbench;
 pub mod ppl;

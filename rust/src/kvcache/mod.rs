@@ -331,6 +331,13 @@ impl SeqCache {
     /// Gather selected tokens of plane (l, h) into `dst_k`/`dst_v`
     /// (each [S, dh], S >= sel.len(); rows beyond sel.len() untouched —
     /// callers zero or mask them).
+    ///
+    /// Consecutive selected indices that live in the same block are
+    /// coalesced into a single `copy_from_slice` per K/V — selections
+    /// are dominated by contiguous runs (sinks, segment spans, the
+    /// sliding window), so the common case copies whole-run strides
+    /// instead of one `dh` row at a time. Empty selections return
+    /// without touching either dst slice.
     pub fn gather_plane(
         &self,
         pool: &BlockPool,
@@ -340,16 +347,32 @@ impl SeqCache {
         dst_k: &mut [f32],
         dst_v: &mut [f32],
     ) {
+        if sel.is_empty() {
+            return;
+        }
         let cfg = &pool.cfg;
         let dh = cfg.d_head;
         let p = l * cfg.n_heads + h;
         let base = p * BLOCK_TOKENS * dh;
-        for (row, &idx) in sel.iter().enumerate() {
-            let (bid, slot) = self.locate(idx as usize);
+        let mut row = 0;
+        while row < sel.len() {
+            let start = sel[row] as usize;
+            let slot = start % BLOCK_TOKENS;
+            // Longest run of consecutive token indices that stays
+            // inside one block (runs never cross block boundaries).
+            let max_run = (BLOCK_TOKENS - slot).min(sel.len() - row);
+            let mut run = 1;
+            while run < max_run && sel[row + run] as usize == start + run {
+                run += 1;
+            }
+            let bid = self.blocks[start / BLOCK_TOKENS];
             let off = base + slot * dh;
+            let n = run * dh;
+            let dst = row * dh;
             let blk = &pool.blocks[bid];
-            dst_k[row * dh..(row + 1) * dh].copy_from_slice(&blk.k[off..off + dh]);
-            dst_v[row * dh..(row + 1) * dh].copy_from_slice(&blk.v[off..off + dh]);
+            dst_k[dst..dst + n].copy_from_slice(&blk.k[off..off + n]);
+            dst_v[dst..dst + n].copy_from_slice(&blk.v[off..off + n]);
+            row += run;
         }
     }
 
@@ -454,6 +477,50 @@ mod tests {
         for (row, &idx) in sel.iter().enumerate() {
             assert_eq!(&dk[row * 4..row * 4 + 4], seq.key(&pool, 1, 1, idx as usize));
         }
+    }
+
+    #[test]
+    fn gather_coalesced_runs_match_pointwise_reads() {
+        // Contiguous runs spanning block boundaries (15,16,17 crosses
+        // blocks 0->1) must coalesce correctly and still equal
+        // pointwise reads, K and V both.
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut seq = SeqCache::new(8);
+        for t in 0..50 {
+            let (k, v, f) = fill_token(t, 4, 4, 8);
+            seq.append(&mut pool, &k, &v, &f).unwrap();
+        }
+        let sel: Vec<u32> = vec![0, 1, 2, 3, 15, 16, 17, 30, 31, 32, 33, 34, 48, 49];
+        let mut dk = vec![-1.0; (sel.len() + 2) * 4];
+        let mut dv = vec![-1.0; (sel.len() + 2) * 4];
+        seq.gather_plane(&pool, 1, 0, &sel, &mut dk, &mut dv);
+        for (row, &idx) in sel.iter().enumerate() {
+            assert_eq!(
+                &dk[row * 4..row * 4 + 4],
+                seq.key(&pool, 1, 0, idx as usize),
+                "K row {row} (token {idx})"
+            );
+            let (_, want_v, _) = fill_token(idx as usize, 4, 4, 8);
+            assert_eq!(&dv[row * 4..row * 4 + 4], &want_v[8..12], "V row {row}");
+        }
+        // Rows past sel.len() stay untouched.
+        assert!(dk[sel.len() * 4..].iter().all(|&x| x == -1.0));
+        assert!(dv[sel.len() * 4..].iter().all(|&x| x == -1.0));
+    }
+
+    #[test]
+    fn gather_empty_selection_leaves_dst_untouched() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 8, 100);
+        let mut seq = SeqCache::new(8);
+        let (k, v, f) = fill_token(0, 4, 4, 8);
+        seq.append(&mut pool, &k, &v, &f).unwrap();
+        let mut dk = vec![7.0; 4 * 4];
+        let mut dv = vec![9.0; 4 * 4];
+        seq.gather_plane(&pool, 0, 0, &[], &mut dk, &mut dv);
+        assert!(dk.iter().all(|&x| x == 7.0), "empty sel must not write K");
+        assert!(dv.iter().all(|&x| x == 9.0), "empty sel must not write V");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use anyhow::{anyhow, Result};
 use radar_serve::config::PolicyKind;
 use radar_serve::engine::{GenRequest, SessionEvent};
-use radar_serve::harness::{flagrate, longbench, ppl, theorem2, Ctx};
+use radar_serve::harness::{bench, flagrate, longbench, ppl, theorem2, Ctx};
 use radar_serve::model::tokenizer;
 use radar_serve::util::cli::Args;
 use radar_serve::workload::load_corpus;
@@ -38,6 +38,13 @@ overload & degradation (--set k=v):
   requests may set \"priority\": \"high\"|\"normal\"|\"batch\" (default normal);
   health surface: GET /healthz, GET /readyz, GET /metrics, POST /admin/drain
 
+performance:
+  bench       synthetic long-context decode staging benchmark; writes
+              results/BENCH_decode.json (no artifacts needed)
+              [--t0 2048] [--steps 256] [--layers 4] [--heads 4] [--dh 64]
+              [--window 256] [--k 48] [--seg 16] [--sinks 4]
+              [--restructure-every 64] [--workers 1] [--seed 42]
+
 experiments (paper artifacts):
   fig2        PPL + time curves: vanilla vs streaming vs radar
   fig3        no-prompt generation curves (adds h2o)
@@ -69,6 +76,7 @@ fn run(args: &Args) -> Result<()> {
     match cmd {
         "serve" => serve(args, root),
         "generate" => generate(args, root),
+        "bench" => bench::run(args, out),
         "fig2" => fig2(args, root, out),
         "fig3" => fig3(args, root, out),
         "fig4" => fig4(args, root, out),

@@ -11,6 +11,7 @@ use crate::config::ServingConfig;
 use crate::kvcache::{BlockPool, SeqCache};
 use crate::radar::{exact_segment_scores, top_k_indices, FrozenSegments, RadarIndex};
 use crate::util::prng::SplitMix64;
+use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +45,9 @@ pub struct RadarPolicy {
     n_heads: usize,
     rng: SplitMix64,
     scratch: Vec<f32>,
+    /// Per-head score scratch for the pooled scoring path (one arena
+    /// per head so workers never share a buffer).
+    head_scratch: Vec<Vec<f32>>,
 }
 
 /// NaN/Inf/denormal detection: any such value means the random-feature
@@ -51,6 +55,85 @@ pub struct RadarPolicy {
 /// segments meaningfully.
 fn anomalous(xs: &[f32]) -> bool {
     xs.iter().any(|&x| !x.is_finite() || x.is_subnormal())
+}
+
+/// One head's selection: sinks ∪ top-k segment tokens ∪ window. Free
+/// function (no `&mut self`) so the pooled path can run heads on
+/// worker threads, each with its own `scratch`. Returns the selection
+/// and whether the plane tripped the anomaly detector (caller counts
+/// those; anomalous planes fall back to full context).
+#[allow(clippy::too_many_arguments)]
+fn plane_select(
+    variant: RadarVariant,
+    index: &RadarIndex,
+    seq: &SeqCache,
+    pool: &BlockPool,
+    cfg: &ServingConfig,
+    l: usize,
+    h: usize,
+    n_heads: usize,
+    phi_q: &[f32],
+    q_raw: &[f32],
+    boundary: usize,
+    random_segs: Option<Vec<usize>>,
+    scratch: &mut Vec<f32>,
+) -> (Vec<u32>, bool) {
+    let t = seq.len();
+    let n_feat = pool.n_feat();
+    let dh = pool.config().d_head;
+    let (c, n_segs) = (index.c, index.n_segs);
+    let p = l * n_heads + h;
+    let mut sel: Vec<u32> = Vec::new();
+    // Sinks (clipped to boundary; window covers the rest).
+    let sink_end = cfg.sinks.min(boundary).min(t);
+    sel.extend(0..sink_end as u32);
+    // Top-k segments.
+    if n_segs > 0 && c > 0 {
+        let k = cfg.radar_k.min(n_segs);
+        // The detector must run *before* top_k_indices, whose
+        // bit-pattern ordering assumes NaN-free scores.
+        let mut anomaly = false;
+        let chosen: Vec<usize> = match variant {
+            RadarVariant::Approx => {
+                let qf = &phi_q[h * n_feat..(h + 1) * n_feat];
+                index.scores(p, qf, scratch);
+                anomaly = anomalous(qf) || anomalous(scratch);
+                if anomaly { Vec::new() } else { top_k_indices(scratch, k) }
+            }
+            RadarVariant::Exact => {
+                let q = &q_raw[h * dh..(h + 1) * dh];
+                exact_segment_scores(seq, pool, l, h, q, c, n_segs, scratch);
+                anomaly = anomalous(scratch);
+                if anomaly { Vec::new() } else { top_k_indices(scratch, k) }
+            }
+            RadarVariant::Random => random_segs.unwrap_or_default(),
+            RadarVariant::Lowest => {
+                let qf = &phi_q[h * n_feat..(h + 1) * n_feat];
+                index.scores(p, qf, scratch);
+                anomaly = anomalous(qf) || anomalous(scratch);
+                if anomaly {
+                    Vec::new()
+                } else {
+                    let neg: Vec<f32> = scratch.iter().map(|s| -s).collect();
+                    top_k_indices(&neg, k)
+                }
+            }
+        };
+        if anomaly {
+            return ((0..t as u32).collect(), true);
+        }
+        let mut segs = chosen;
+        segs.sort_unstable();
+        for s in segs {
+            let start = (s * c).max(sink_end) as u32;
+            sel.extend(start..((s + 1) * c) as u32);
+        }
+    }
+    // Window W = [boundary, t).
+    sel.extend(boundary as u32..t as u32);
+    sel.sort_unstable();
+    sel.dedup();
+    (sel, false)
 }
 
 impl RadarPolicy {
@@ -65,6 +148,7 @@ impl RadarPolicy {
             n_heads,
             rng: SplitMix64::new(seed ^ 0xDA7A),
             scratch: Vec::new(),
+            head_scratch: Vec::new(),
         }
     }
 
@@ -99,90 +183,108 @@ impl RadarPolicy {
         phi_q: &[f32],
         q_raw: &[f32],
     ) -> Vec<Vec<u32>> {
+        self.select_layer_with(None, pool, seq, cfg, l, phi_q, q_raw)
+    }
+
+    /// Like [`select_layer`](Self::select_layer), but with `Some(pool)`
+    /// the per-head scoring (the phi-feature dot products + top-k) is
+    /// sharded across the thread pool, one job per head with a private
+    /// scratch arena. Bit-identical to the serial path: every head runs
+    /// the same arithmetic on the same inputs, only on another thread;
+    /// the Random variant's rng draws stay on the caller thread in head
+    /// order, so its draw sequence is unchanged too.
+    #[allow(clippy::too_many_arguments)]
+    pub fn select_layer_with(
+        &mut self,
+        threads: Option<&ThreadPool>,
+        pool: &BlockPool,
+        seq: &SeqCache,
+        cfg: &ServingConfig,
+        l: usize,
+        phi_q: &[f32],
+        q_raw: &[f32],
+    ) -> Vec<Vec<u32>> {
         let t = seq.len();
         self.anomalous_planes = 0;
         if self.force_full {
             return (0..self.n_heads).map(|_| (0..t as u32).collect()).collect();
         }
-        let n_feat = pool.n_feat();
-        let dh = pool.config().d_head;
-        let (c, n_segs) = (self.index.c, self.index.n_segs);
         // The attended window = the unregistered buffer W (Alg. 1)
         // extended to at least cfg.window recent tokens (the paper runs
         // every method with the same sliding window; Radar's retrieved
         // segments come on top of it).
         let boundary = self.index.boundary.min(t.saturating_sub(cfg.window));
-        let mut out = Vec::with_capacity(self.n_heads);
-        for h in 0..self.n_heads {
-            let p = l * self.n_heads + h;
-            let mut sel: Vec<u32> = Vec::new();
-            // Sinks (clipped to boundary; window covers the rest).
-            let sink_end = cfg.sinks.min(boundary).min(t);
-            sel.extend(0..sink_end as u32);
-            // Top-k segments.
-            if n_segs > 0 && c > 0 {
-                let k = cfg.radar_k.min(n_segs);
-                // The detector must run *before* top_k_indices, whose
-                // bit-pattern ordering assumes NaN-free scores.
-                let mut anomaly = false;
-                let chosen: Vec<usize> = match self.variant {
-                    RadarVariant::Approx => {
-                        let qf = &phi_q[h * n_feat..(h + 1) * n_feat];
-                        let mut scores = std::mem::take(&mut self.scratch);
-                        self.index.scores(p, qf, &mut scores);
-                        anomaly = anomalous(qf) || anomalous(&scores);
-                        let idx = if anomaly { Vec::new() } else { top_k_indices(&scores, k) };
-                        self.scratch = scores;
-                        idx
+        // Random draws are sequential by construction (one rng): take
+        // them up front in head order so the pooled path consumes the
+        // stream exactly like the serial one.
+        let random_segs: Option<Vec<Vec<usize>>> = (self.variant == RadarVariant::Random
+            && self.index.n_segs > 0
+            && self.index.c > 0)
+            .then(|| {
+                let k = cfg.radar_k.min(self.index.n_segs);
+                let n_segs = self.index.n_segs;
+                (0..self.n_heads).map(|_| self.rng.sample_indices(n_segs, k)).collect()
+            });
+        let variant = self.variant;
+        let n_heads = self.n_heads;
+        match threads {
+            Some(tp) if n_heads > 1 => {
+                self.head_scratch.resize_with(n_heads, Vec::new);
+                let mut results: Vec<(Vec<u32>, bool)> = vec![(Vec::new(), false); n_heads];
+                let index = &self.index;
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = results
+                    .iter_mut()
+                    .zip(self.head_scratch.iter_mut())
+                    .enumerate()
+                    .map(|(h, (slot, scratch))| {
+                        let rand_h = random_segs.as_ref().map(|r| r[h].clone());
+                        Box::new(move || {
+                            *slot = plane_select(
+                                variant, index, seq, pool, cfg, l, h, n_heads, phi_q, q_raw,
+                                boundary, rand_h, scratch,
+                            );
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                tp.scoped(jobs);
+                let mut out = Vec::with_capacity(n_heads);
+                for (sel, anomaly) in results {
+                    if anomaly {
+                        self.anomalous_planes += 1;
                     }
-                    RadarVariant::Exact => {
-                        let q = &q_raw[h * dh..(h + 1) * dh];
-                        let mut scores = std::mem::take(&mut self.scratch);
-                        exact_segment_scores(seq, pool, l, h, q, c, n_segs, &mut scores);
-                        anomaly = anomalous(&scores);
-                        let idx = if anomaly { Vec::new() } else { top_k_indices(&scores, k) };
-                        self.scratch = scores;
-                        idx
-                    }
-                    RadarVariant::Random => {
-                        self.rng.sample_indices(n_segs, k)
-                    }
-                    RadarVariant::Lowest => {
-                        let qf = &phi_q[h * n_feat..(h + 1) * n_feat];
-                        let mut scores = std::mem::take(&mut self.scratch);
-                        self.index.scores(p, qf, &mut scores);
-                        anomaly = anomalous(qf) || anomalous(&scores);
-                        let idx = if anomaly {
-                            Vec::new()
-                        } else {
-                            let neg: Vec<f32> = scores.iter().map(|s| -s).collect();
-                            top_k_indices(&neg, k)
-                        };
-                        self.scratch = scores;
-                        idx
-                    }
-                };
-                if anomaly {
-                    self.anomalous_planes += 1;
-                    sel.clear();
-                    sel.extend(0..t as u32);
                     out.push(sel);
-                    continue;
                 }
-                let mut segs = chosen;
-                segs.sort_unstable();
-                for s in segs {
-                    let start = (s * c).max(sink_end) as u32;
-                    sel.extend(start..((s + 1) * c) as u32);
-                }
+                out
             }
-            // Window W = [boundary, t).
-            sel.extend(boundary as u32..t as u32);
-            sel.sort_unstable();
-            sel.dedup();
-            out.push(sel);
+            _ => {
+                let mut out = Vec::with_capacity(n_heads);
+                let mut scratch = std::mem::take(&mut self.scratch);
+                for h in 0..n_heads {
+                    let rand_h = random_segs.as_ref().map(|r| r[h].clone());
+                    let (sel, anomaly) = plane_select(
+                        variant,
+                        &self.index,
+                        seq,
+                        pool,
+                        cfg,
+                        l,
+                        h,
+                        n_heads,
+                        phi_q,
+                        q_raw,
+                        boundary,
+                        rand_h,
+                        &mut scratch,
+                    );
+                    if anomaly {
+                        self.anomalous_planes += 1;
+                    }
+                    out.push(sel);
+                }
+                self.scratch = scratch;
+                out
+            }
         }
-        out
     }
 
     /// Upper bound on per-plane selection length at context t (used to
@@ -327,6 +429,54 @@ mod tests {
         }
         // Approx and Lowest must differ on a non-degenerate index
         // (top-2 vs bottom-2 of the same scores) unless all scores tie.
+    }
+
+    #[test]
+    fn pooled_selection_matches_serial_for_every_variant() {
+        let (pool, seq) = build(64);
+        let cfg = scfg();
+        let tp = ThreadPool::new(3, "score");
+        let phi_q: Vec<f32> = (0..16).map(|i| (i % 7) as f32 * 0.13).collect();
+        let q_raw: Vec<f32> = (0..8).map(|i| (i % 3) as f32 * 0.21).collect();
+        for v in [
+            RadarVariant::Approx,
+            RadarVariant::Exact,
+            RadarVariant::Random,
+            RadarVariant::Lowest,
+        ] {
+            let mut serial = RadarPolicy::new(v, 2, 2, 8, 5);
+            let mut pooled = RadarPolicy::new(v, 2, 2, 8, 5);
+            serial.on_grow(&pool, &seq);
+            pooled.on_grow(&pool, &seq);
+            for l in 0..2 {
+                let a = serial.select_layer(&pool, &seq, &cfg, l, &phi_q, &q_raw);
+                let b = pooled.select_layer_with(Some(&tp), &pool, &seq, &cfg, l, &phi_q, &q_raw);
+                assert_eq!(a, b, "variant {v:?} layer {l} diverged under pooling");
+                assert_eq!(serial.anomalous_planes, pooled.anomalous_planes);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_anomaly_fallback_matches_serial() {
+        let (pool, seq) = build(64);
+        let cfg = scfg();
+        let tp = ThreadPool::new(2, "score");
+        let mut serial = RadarPolicy::new(RadarVariant::Approx, 2, 2, 8, 0);
+        let mut pooled = RadarPolicy::new(RadarVariant::Approx, 2, 2, 8, 0);
+        serial.on_grow(&pool, &seq);
+        pooled.on_grow(&pool, &seq);
+        // NaN phi(q) on head 1 only: that plane must fall back to full
+        // context on both paths, head 0 unaffected.
+        let mut phi_q = vec![0.1f32; 16];
+        phi_q[8] = f32::NAN;
+        let q_raw = vec![0.0f32; 8];
+        let a = serial.select_layer(&pool, &seq, &cfg, 0, &phi_q, &q_raw);
+        let b = pooled.select_layer_with(Some(&tp), &pool, &seq, &cfg, 0, &phi_q, &q_raw);
+        assert_eq!(a, b);
+        assert_eq!(serial.anomalous_planes, 1);
+        assert_eq!(pooled.anomalous_planes, 1);
+        assert_eq!(b[1], (0..64).collect::<Vec<u32>>(), "anomalous plane is full-context");
     }
 
     #[test]

@@ -153,6 +153,69 @@ impl ThreadPool {
         self.jobs.send(Box::new(f));
     }
 
+    /// Run `jobs` on the pool and block until every one has finished.
+    ///
+    /// Unlike `execute`, jobs may borrow from the caller's stack
+    /// (non-`'static`): soundness comes from this function not
+    /// returning until all jobs have run, so no borrow can dangle
+    /// (the same argument scoped-thread APIs make). A panicking job is
+    /// caught on the worker (keeping the pool alive) and re-raised
+    /// here after the batch completes.
+    ///
+    /// Must not be called from a pool worker itself: with every worker
+    /// blocked in `scoped` there would be nobody left to run the jobs.
+    pub fn scoped<'a>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        struct Latch {
+            remaining: Mutex<usize>,
+            done: Condvar,
+            panicked: AtomicBool,
+        }
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(jobs.len()),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        for job in jobs {
+            // SAFETY: the wait loop below blocks until this job has
+            // finished executing (the latch decrement is the last thing
+            // the wrapper does), so everything the job borrows outlives
+            // its execution even though the pool requires 'static.
+            let job = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'a>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            let l = Arc::clone(&latch);
+            let wrapper: Job = Box::new(move || {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+                    l.panicked.store(true, Ordering::Release);
+                }
+                let mut n = l.remaining.lock().unwrap();
+                *n -= 1;
+                if *n == 0 {
+                    l.done.notify_all();
+                }
+            });
+            if let Some(wrapper) = self.jobs.send_or_return(wrapper) {
+                // Pool shutting down: run inline so the latch still
+                // reaches zero and borrows still can't dangle.
+                wrapper();
+            }
+        }
+        let mut n = latch.remaining.lock().unwrap();
+        while *n > 0 {
+            n = latch.done.wait(n).unwrap();
+        }
+        drop(n);
+        if latch.panicked.load(Ordering::Acquire) {
+            panic!("scoped pool job panicked");
+        }
+    }
+
     pub fn pending(&self) -> usize {
         self.jobs.len()
     }
@@ -226,6 +289,71 @@ mod tests {
         let t = std::time::Instant::now();
         assert_eq!(ch.recv_timeout(std::time::Duration::from_millis(30)), None);
         assert!(t.elapsed().as_millis() >= 25);
+    }
+
+    #[test]
+    fn scoped_jobs_borrow_caller_data() {
+        // Jobs write disjoint chunks of a stack-local buffer — the
+        // pattern the engine's sharded staging uses.
+        let pool = ThreadPool::new(3, "scoped");
+        let mut buf = vec![0usize; 64];
+        let jobs: Vec<Box<dyn FnOnce() + Send>> = buf
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, x) in chunk.iter_mut().enumerate() {
+                        *x = i * 100 + j;
+                    }
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        pool.scoped(jobs);
+        for (i, &x) in buf.iter().enumerate() {
+            assert_eq!(x, (i / 16) * 100 + i % 16);
+        }
+    }
+
+    #[test]
+    fn scoped_blocks_until_all_jobs_finish() {
+        let pool = ThreadPool::new(2, "scoped");
+        let counter = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..20)
+            .map(|_| {
+                let c = counter.clone();
+                Box::new(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        pool.scoped(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 20, "scoped returned early");
+    }
+
+    #[test]
+    fn scoped_propagates_job_panic_and_pool_survives() {
+        let pool = ThreadPool::new(2, "scoped");
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scoped(vec![
+                Box::new(|| {}) as Box<dyn FnOnce() + Send>,
+                Box::new(|| panic!("boom")) as Box<dyn FnOnce() + Send>,
+            ]);
+        }));
+        assert!(r.is_err(), "panic must surface to the scoped caller");
+        // The pool is still usable afterwards.
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        pool.scoped(vec![Box::new(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        }) as Box<dyn FnOnce() + Send>]);
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scoped_empty_is_noop() {
+        let pool = ThreadPool::new(1, "scoped");
+        pool.scoped(Vec::new());
     }
 
     #[test]

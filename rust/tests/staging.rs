@@ -1,0 +1,323 @@
+//! Byte-identity guarantees for incremental K/V staging.
+//!
+//! Every scenario runs two arenas in lockstep over the same cache and
+//! selection schedule — one delta-staged, one forced to full restage —
+//! and asserts the staged K/V/mask buffers are byte-identical at every
+//! step: across restructure boundaries, preemption + warm re-admission,
+//! prefix-seeded starts, and fused-batch S-bucket changes.
+
+use radar_serve::config::ModelConfig;
+use radar_serve::engine::staging::{
+    stage_planes_serial, stage_planes_sharded, StageStats, StagedPlanes,
+};
+use radar_serve::kvcache::{BlockPool, SeqCache, BLOCK_TOKENS};
+use radar_serve::util::prng::SplitMix64;
+use radar_serve::util::threadpool::ThreadPool;
+
+const NEG: f32 = -1e30;
+const DH: usize = 8;
+const NF: usize = 4;
+
+fn cfg(layers: usize, heads: usize) -> ModelConfig {
+    ModelConfig {
+        name: "staging-test".into(),
+        d_model: heads * DH,
+        n_layers: layers,
+        n_heads: heads,
+        d_head: DH,
+        d_ffn: 4 * heads * DH,
+        n_feat: NF,
+        max_train_len: 4096,
+        vocab: 64,
+    }
+}
+
+/// Token t's K row for plane p starts at value t*1000 + p*10; V = K + 0.5.
+fn token_kv(lh: usize, t: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let k: Vec<f32> = (0..lh * DH)
+        .map(|i| (t * 1000 + (i / DH) * 10) as f32 + (i % DH) as f32 * 0.01)
+        .collect();
+    let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+    (k, v, vec![0.0; lh * NF])
+}
+
+fn grow(pool: &mut BlockPool, cache: &mut SeqCache, lh: usize, upto: usize) {
+    while cache.len() < upto {
+        let t = cache.len();
+        let (k, v, f) = token_kv(lh, t);
+        cache.append(pool, &k, &v, &f).unwrap();
+    }
+}
+
+/// Sinks + segment picks + sliding window, sorted + deduped.
+fn selection(sinks: usize, segs: &[usize], seg_len: usize, window: usize, t: usize) -> Vec<u32> {
+    let mut sel: Vec<u32> = (0..sinks.min(t)).map(|x| x as u32).collect();
+    for &s in segs {
+        for tok in s..(s + seg_len).min(t) {
+            sel.push(tok as u32);
+        }
+    }
+    for tok in t.saturating_sub(window)..t {
+        sel.push(tok as u32);
+    }
+    sel.sort_unstable();
+    sel.dedup();
+    sel
+}
+
+struct Staged {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    m: Vec<f32>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stage(
+    arena: &mut StagedPlanes,
+    cache: &SeqCache,
+    pool: &BlockPool,
+    heads: usize,
+    per_plane: &[Vec<u32>],
+    s: usize,
+    delta: bool,
+    stats: &mut StageStats,
+) -> Staged {
+    let lh = arena.planes.len();
+    let mut out = Staged {
+        k: vec![f32::NAN; lh * s * DH],
+        v: vec![f32::NAN; lh * s * DH],
+        m: vec![f32::NAN; lh * s],
+    };
+    let st = stage_planes_serial(
+        &mut arena.planes, 0, heads, cache, pool, per_plane, s, &mut out.k, &mut out.v,
+        &mut out.m, delta, NEG,
+    );
+    stats.merge(&st);
+    out
+}
+
+/// Only rows [0, sel.len()) are defined output; compare those (plus the
+/// full mask, which is always written).
+fn assert_identical(a: &Staged, b: &Staged, per_plane: &[Vec<u32>], s: usize, what: &str) {
+    assert_eq!(a.m, b.m, "{what}: mask diverged");
+    for (p, sel) in per_plane.iter().enumerate() {
+        let n = sel.len() * DH;
+        let (ka, kb) = (&a.k[p * s * DH..p * s * DH + n], &b.k[p * s * DH..p * s * DH + n]);
+        let (va, vb) = (&a.v[p * s * DH..p * s * DH + n], &b.v[p * s * DH..p * s * DH + n]);
+        assert_eq!(ka, kb, "{what}: K diverged on plane {p}");
+        assert_eq!(va, vb, "{what}: V diverged on plane {p}");
+        assert!(ka.iter().all(|x| x.is_finite()), "{what}: K rows unwritten on plane {p}");
+    }
+}
+
+#[test]
+fn restructure_boundaries_stay_byte_identical() {
+    let (layers, heads) = (2, 2);
+    let lh = layers * heads;
+    let c = cfg(layers, heads);
+    let mut pool = BlockPool::new(&c, NF, 256);
+    let mut cache = SeqCache::new(NF);
+    grow(&mut pool, &mut cache, lh, 200);
+    let mut delta_arena = StagedPlanes::new(lh);
+    let mut full_arena = StagedPlanes::new(lh);
+    let (mut dstats, mut fstats) = (StageStats::default(), StageStats::default());
+    let mut rng = SplitMix64::new(7);
+    let mut segs: Vec<Vec<usize>> = (0..lh).map(|_| vec![32, 64, 96]).collect();
+    let s = 96;
+    for step in 0..48 {
+        let t = cache.len();
+        if step % 12 == 0 && step > 0 {
+            // Restructure: every plane's top-k segment set is resampled.
+            for sg in &mut segs {
+                *sg = (0..3).map(|_| 16 + (rng.below(9) as usize) * 16).collect();
+                sg.sort_unstable();
+            }
+        }
+        let per_plane: Vec<Vec<u32>> =
+            segs.iter().map(|sg| selection(4, sg, 8, 32, t)).collect();
+        let a = stage(&mut delta_arena, &cache, &pool, heads, &per_plane, s, true, &mut dstats);
+        let b = stage(&mut full_arena, &cache, &pool, heads, &per_plane, s, false, &mut fstats);
+        assert_identical(&a, &b, &per_plane, s, &format!("step {step}"));
+        let (k, v, f) = token_kv(lh, t);
+        cache.append(&mut pool, &k, &v, &f).unwrap();
+    }
+    assert!(dstats.delta_hits > 0, "steady steps must hit the delta path");
+    assert!(
+        dstats.bytes_delta < dstats.bytes_full / 2,
+        "delta staging should copy far less than full re-gather \
+         ({} vs {})",
+        dstats.bytes_delta,
+        dstats.bytes_full
+    );
+    assert_eq!(fstats.delta_hits, 0, "force-full must never count delta hits");
+}
+
+#[test]
+fn preemption_invalidate_then_warm_readmission() {
+    let (layers, heads) = (2, 2);
+    let lh = layers * heads;
+    let c = cfg(layers, heads);
+    let mut pool = BlockPool::new(&c, NF, 256);
+    let mut cache = SeqCache::new(NF);
+    grow(&mut pool, &mut cache, lh, 80);
+    let mut arena = StagedPlanes::new(lh);
+    let mut full_arena = StagedPlanes::new(lh);
+    let segs: Vec<usize> = vec![16, 48];
+    let s = 64;
+    let mut st = StageStats::default();
+    for _ in 0..4 {
+        let t = cache.len();
+        let per_plane: Vec<Vec<u32>> = (0..lh).map(|_| selection(4, &segs, 8, 16, t)).collect();
+        stage(&mut arena, &cache, &pool, heads, &per_plane, s, true, &mut st);
+        let (k, v, f) = token_kv(lh, t);
+        cache.append(&mut pool, &k, &v, &f).unwrap();
+    }
+    // Preemption: blocks are freed and the arena must be invalidated;
+    // warm re-admission rebuilds the same logical tokens in (possibly
+    // different) blocks.
+    let warm_len = cache.len();
+    cache.free(&mut pool).unwrap();
+    arena.invalidate();
+    let mut cache = SeqCache::new(NF);
+    grow(&mut pool, &mut cache, lh, warm_len);
+    let mut st = StageStats::default();
+    let mut fstats = StageStats::default();
+    for step in 0..6 {
+        let t = cache.len();
+        let per_plane: Vec<Vec<u32>> = (0..lh).map(|_| selection(4, &segs, 8, 16, t)).collect();
+        let a = stage(&mut arena, &cache, &pool, heads, &per_plane, s, true, &mut st);
+        let b = stage(&mut full_arena, &cache, &pool, heads, &per_plane, s, false, &mut fstats);
+        assert_identical(&a, &b, &per_plane, s, &format!("post-preempt step {step}"));
+        if step == 0 {
+            assert_eq!(
+                st.full_restages, lh as u64,
+                "first step after invalidate must restage every plane"
+            );
+        }
+        let (k, v, f) = token_kv(lh, t);
+        cache.append(&mut pool, &k, &v, &f).unwrap();
+    }
+    assert!(st.delta_hits > 0, "steady decode after re-admission must delta-hit again");
+}
+
+#[test]
+fn prefix_seeded_start_stages_correctly() {
+    let (layers, heads) = (2, 2);
+    let lh = layers * heads;
+    let c = cfg(layers, heads);
+    let mut pool = BlockPool::new(&c, NF, 256);
+    // Donor holds the shared prompt prefix (3 full blocks).
+    let mut donor = SeqCache::new(NF);
+    grow(&mut pool, &mut donor, lh, 3 * BLOCK_TOKENS);
+    let mut cache = SeqCache::seed_from_blocks(&mut pool, NF, &donor.blocks);
+    assert_eq!(cache.len(), 3 * BLOCK_TOKENS);
+    // The seeded sequence decodes its own distinct continuation.
+    let cont_base = 1000;
+    for i in 0..10 {
+        let (k, v, f) = token_kv(lh, cont_base + i);
+        cache.append(&mut pool, &k, &v, &f).unwrap();
+    }
+    let mut arena = StagedPlanes::new(lh);
+    let mut full_arena = StagedPlanes::new(lh);
+    let (mut st, mut fstats) = (StageStats::default(), StageStats::default());
+    let segs: Vec<usize> = vec![8, 24];
+    let s = 64;
+    for step in 0..8 {
+        let t = cache.len();
+        // Window spans the seeded-prefix / continuation boundary.
+        let per_plane: Vec<Vec<u32>> = (0..lh).map(|_| selection(2, &segs, 8, 24, t)).collect();
+        let a = stage(&mut arena, &cache, &pool, heads, &per_plane, s, true, &mut st);
+        let b = stage(&mut full_arena, &cache, &pool, heads, &per_plane, s, false, &mut fstats);
+        assert_identical(&a, &b, &per_plane, s, &format!("seeded step {step}"));
+        let (k, v, f) = token_kv(lh, cont_base + 100 + step);
+        cache.append(&mut pool, &k, &v, &f).unwrap();
+    }
+    assert!(st.delta_hits > 0);
+    donor.free(&mut pool).unwrap();
+    cache.free(&mut pool).unwrap();
+}
+
+#[test]
+fn bucket_changes_do_not_force_restage() {
+    let (layers, heads) = (1, 2);
+    let lh = layers * heads;
+    let c = cfg(layers, heads);
+    let mut pool = BlockPool::new(&c, NF, 256);
+    let mut cache = SeqCache::new(NF);
+    grow(&mut pool, &mut cache, lh, 96);
+    let mut arena = StagedPlanes::new(lh);
+    let mut full_arena = StagedPlanes::new(lh);
+    let segs: Vec<usize> = vec![16, 40];
+    // Fused batching re-buckets S every step; the tightly packed arena
+    // must keep delta-hitting regardless.
+    let buckets = [48usize, 64, 96, 56, 64];
+    let mut st = StageStats::default();
+    let mut fstats = StageStats::default();
+    for (step, &s) in buckets.iter().enumerate() {
+        let t = cache.len();
+        let per_plane: Vec<Vec<u32>> = (0..lh).map(|_| selection(4, &segs, 8, 12, t)).collect();
+        assert!(per_plane.iter().all(|p| p.len() <= s));
+        let a = stage(&mut arena, &cache, &pool, heads, &per_plane, s, true, &mut st);
+        let b = stage(&mut full_arena, &cache, &pool, heads, &per_plane, s, false, &mut fstats);
+        assert_identical(&a, &b, &per_plane, s, &format!("bucket {s} (step {step})"));
+        let (k, v, f) = token_kv(lh, t);
+        cache.append(&mut pool, &k, &v, &f).unwrap();
+    }
+    // Steps after the first are all delta hits despite bucket churn.
+    assert_eq!(st.full_restages, lh as u64, "only the cold start restages");
+    assert_eq!(st.delta_hits, (buckets.len() as u64 - 1) * lh as u64);
+}
+
+#[test]
+fn sharded_staging_matches_serial_over_random_walk() {
+    let (layers, heads) = (4, 4);
+    let lh = layers * heads;
+    let c = cfg(layers, heads);
+    let mut pool = BlockPool::new(&c, NF, 512);
+    let mut cache = SeqCache::new(NF);
+    grow(&mut pool, &mut cache, lh, 160);
+    let tp = ThreadPool::new(4, "staging-test");
+    let mut serial_arena = StagedPlanes::new(lh);
+    let mut sharded_arena = StagedPlanes::new(lh);
+    let mut rng = SplitMix64::new(0xBEEF);
+    let s = 96;
+    for step in 0..24 {
+        let t = cache.len() as u64;
+        let per_plane: Vec<Vec<u32>> = (0..lh)
+            .map(|p| {
+                if (step + p) % 7 == 0 {
+                    return Vec::new(); // empty-selection plane
+                }
+                let n = 1 + rng.below(64) as usize;
+                let mut sel: Vec<u32> = (0..n).map(|_| rng.below(t) as u32).collect();
+                sel.sort_unstable();
+                sel.dedup();
+                sel
+            })
+            .collect();
+        let mut a = Staged {
+            k: vec![0.0; lh * s * DH],
+            v: vec![0.0; lh * s * DH],
+            m: vec![0.0; lh * s],
+        };
+        let mut b = Staged {
+            k: vec![0.0; lh * s * DH],
+            v: vec![0.0; lh * s * DH],
+            m: vec![0.0; lh * s],
+        };
+        let st_a = stage_planes_serial(
+            &mut serial_arena.planes, 0, heads, &cache, &pool, &per_plane, s, &mut a.k,
+            &mut a.v, &mut a.m, true, NEG,
+        );
+        let st_b = stage_planes_sharded(
+            &tp, 4, &mut sharded_arena.planes, 0, heads, &cache, &pool, &per_plane, s,
+            &mut b.k, &mut b.v, &mut b.m, true, NEG,
+        );
+        assert_eq!(a.k, b.k, "step {step}: sharded K diverged");
+        assert_eq!(a.v, b.v, "step {step}: sharded V diverged");
+        assert_eq!(a.m, b.m, "step {step}: sharded mask diverged");
+        assert_eq!(st_a, st_b, "step {step}: stats diverged");
+        let (k, v, f) = token_kv(lh, cache.len());
+        cache.append(&mut pool, &k, &v, &f).unwrap();
+    }
+}
