@@ -201,6 +201,17 @@ pub struct ServingConfig {
     /// Worker threads for sharded staging and plane-parallel segment
     /// scoring; 1 = serial on the engine thread (no pool spawned).
     pub stage_workers: usize,
+    /// Directory for the durable session journal + checkpoints; empty
+    /// disables journaling (and with it crash recovery and resume).
+    pub journal_dir: String,
+    /// Journal frames appended between `fsync`s. 1 = every record is
+    /// durable before the next step (safest, slowest); larger batches
+    /// bound what a hard abort can lose — and deterministic sampling
+    /// regenerates lost-tail tokens identically on recovery anyway.
+    pub journal_fsync_every: usize,
+    /// Engine steps between journal checkpoints (checkpoints bound
+    /// replay and rotate the journal); 0 = never checkpoint.
+    pub checkpoint_interval_steps: u64,
     /// Deterministic fault injection (tests / chaos harness only).
     pub faults: Option<FaultPlan>,
 }
@@ -237,6 +248,9 @@ impl Default for ServingConfig {
             breaker_cooldown: 64,
             stage_delta: true,
             stage_workers: 1,
+            journal_dir: String::new(),
+            journal_fsync_every: 8,
+            checkpoint_interval_steps: 256,
             faults: None,
         }
     }
@@ -299,6 +313,15 @@ impl ServingConfig {
                 }
                 self.stage_workers = n;
             }
+            "journal_dir" => self.journal_dir = val.to_string(),
+            "journal_fsync_every" => {
+                let n: usize = val.parse()?;
+                if n == 0 {
+                    return Err(anyhow!("journal_fsync_every: expected >= 1, got '{val}'"));
+                }
+                self.journal_fsync_every = n;
+            }
+            "checkpoint_interval_steps" => self.checkpoint_interval_steps = val.parse()?,
             "faults" => self.faults = Some(FaultPlan::parse(val)?),
             other => return Err(anyhow!("unknown serving option '{other}'")),
         }
@@ -485,6 +508,28 @@ mod tests {
         assert_eq!(s.stage_workers, 4);
         assert!(s.apply_override("stage_workers", "0").is_err());
         assert!(s.apply_override("stage_workers", "many").is_err());
+    }
+
+    #[test]
+    fn durability_overrides() {
+        let mut s = ServingConfig::default();
+        assert!(s.journal_dir.is_empty(), "journaling is off by default");
+        assert_eq!(s.journal_fsync_every, 8);
+        assert_eq!(s.checkpoint_interval_steps, 256);
+        s.apply_override("journal_dir", "/tmp/radar-journal").unwrap();
+        assert_eq!(s.journal_dir, "/tmp/radar-journal");
+        s.apply_override("journal_fsync_every", "1").unwrap();
+        assert_eq!(s.journal_fsync_every, 1);
+        assert!(s.apply_override("journal_fsync_every", "0").is_err());
+        assert!(s.apply_override("journal_fsync_every", "lots").is_err());
+        s.apply_override("checkpoint_interval_steps", "0").unwrap();
+        assert_eq!(s.checkpoint_interval_steps, 0, "0 disables checkpoints");
+        s.apply_override("checkpoint_interval_steps", "64").unwrap();
+        assert_eq!(s.checkpoint_interval_steps, 64);
+        assert!(s.apply_override("checkpoint_interval_steps", "-1").is_err());
+        // The crash fault kind parses through the faults override.
+        s.apply_override("faults", "crash@6:2").unwrap();
+        assert_eq!(s.faults.as_ref().unwrap().events.len(), 1);
     }
 
     #[test]

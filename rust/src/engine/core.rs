@@ -26,8 +26,8 @@ use super::overload::{
     sanitize_logits, shed_victim, BreakerTransition, CircuitBreaker, HealthState, TokenBucket,
 };
 use super::request::{
-    FinishReason, GenRequest, GenResult, PolicyHolder, Priority, SeqId, Sequence, SessionEvent,
-    SessionHandle, SubmitError, Usage,
+    resolved_sampling, FinishReason, GenRequest, GenResult, PolicyHolder, Priority, SeqId,
+    Sequence, SessionEvent, SessionHandle, SubmitError, Usage,
 };
 use super::staging::{stage_planes_serial, stage_planes_sharded, StageStats};
 use crate::config::ServingConfig;
@@ -37,6 +37,7 @@ use crate::metrics::Metrics;
 use crate::model::{embed, head, log_prob};
 use crate::policy::{SelectCtx, Selection};
 use crate::prefix::PrefixIndex;
+use crate::recovery::{AdmitRecord, Journal, SessionMirror, Terminal};
 use crate::runtime::Runtime;
 use crate::util::threadpool::{Channel, ThreadPool};
 use anyhow::{anyhow, Result};
@@ -186,6 +187,13 @@ pub struct Engine {
     /// scoring (`stage_workers > 1`); `None` runs both serially on the
     /// engine thread.
     stage_pool: Option<ThreadPool>,
+    /// Durable session journal (`None` unless `journal_dir` is set).
+    journal: Option<Journal>,
+    /// A `crash@` fault fired this step: the journal is already frozen
+    /// at its last durable byte, and the end-of-step hook fails every
+    /// live session (their on-disk ADMIT records stay unfinished, so a
+    /// restarted engine recovers them).
+    crashed: bool,
     // Step-path scratch, reused across steps so the hot loop allocates
     // nothing (cleared before every use; restored after).
     scratch_fused: Vec<SeqId>,
@@ -204,6 +212,15 @@ pub struct Engine {
 pub struct StepStats {
     pub decoded: usize,
     pub dispatches: usize,
+}
+
+/// What `Engine::recover` rebuilt from the journal: one live handle
+/// per recovered session (already-terminal ones arrive pre-closed with
+/// their `Done` synthesized) and the total token replay volume.
+#[derive(Default)]
+pub struct RecoveryReport {
+    pub sessions: Vec<SessionHandle>,
+    pub replayed_tokens: u64,
 }
 
 impl Engine {
@@ -228,11 +245,17 @@ impl Engine {
         decode_s_buckets.dedup();
         let stage_pool =
             (cfg.stage_workers > 1).then(|| ThreadPool::new(cfg.stage_workers, "stage"));
+        let metrics = Arc::new(Metrics::new());
+        let journal = if cfg.journal_dir.is_empty() {
+            None
+        } else {
+            Some(Journal::open(&cfg.journal_dir, cfg.journal_fsync_every, metrics.clone())?)
+        };
         Ok(Self {
             rt,
             cfg,
             pool,
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             prefix,
             seqs: BTreeMap::new(),
             pending: VecDeque::new(),
@@ -249,6 +272,8 @@ impl Engine {
             buf_mask: Vec::new(),
             decode_s_buckets,
             stage_pool,
+            journal,
+            crashed: false,
             scratch_fused: Vec::new(),
             scratch_radar: Vec::new(),
             scratch_needs: Vec::new(),
@@ -346,6 +371,7 @@ impl Engine {
         }
         let id = self.next_id;
         self.next_id += 1;
+        self.journal_admit(id, &req);
         let events: Channel<SessionEvent> = Channel::new();
         let cancel = Arc::new(AtomicBool::new(false));
         let handle = SessionHandle::new(id, events.clone(), cancel.clone());
@@ -381,6 +407,7 @@ impl Engine {
         }
         self.metrics.inc("shed_requests");
         self.metrics.inc("requests_failed");
+        self.journal_finish(id, Terminal::Error);
         self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
     }
 
@@ -448,6 +475,7 @@ impl Engine {
                     ev.close();
                 }
                 self.metrics.inc("requests_cancelled");
+                self.journal_finish(p.id, Terminal::Cancelled);
                 continue;
             }
             match p.work {
@@ -585,6 +613,158 @@ impl Engine {
     }
 
     // -----------------------------------------------------------------
+    // Durability: journal hooks and crash recovery
+    // -----------------------------------------------------------------
+
+    /// Append an ADMIT record for a freshly assigned id (no-op without
+    /// a journal). The record stores RESOLVED sampler values — seed,
+    /// temperature, greedy — so replay after a restart reproduces the
+    /// original stream even if the serving config changed meanwhile.
+    fn journal_admit(&self, id: SeqId, req: &GenRequest) {
+        let Some(j) = &self.journal else { return };
+        let (seed, temperature, greedy) = resolved_sampling(id, req, &self.cfg);
+        j.admit(&AdmitRecord {
+            id,
+            seed,
+            temperature,
+            greedy,
+            prompt: req.prompt.clone(),
+            max_new_tokens: req.max_new_tokens,
+            stop_token: req.stop_token,
+            timeout_ms: req.timeout_ms,
+            prefix_cache: req.prefix_cache,
+            priority: req.priority,
+            teacher: req.teacher.clone(),
+        });
+    }
+
+    /// Append a FINISH record (no-op without a journal). Every terminal
+    /// path routes through here so a restart never re-admits a session
+    /// the client already saw finish.
+    fn journal_finish(&self, id: SeqId, reason: Terminal) {
+        if let Some(j) = &self.journal {
+            j.finish(id, reason);
+        }
+    }
+
+    /// Read-only view of journaled session state, shared with the HTTP
+    /// layer for session-status and stream-resume endpoints.
+    pub fn journal_mirror(&self) -> Option<SessionMirror> {
+        self.journal.as_ref().map(|j| j.mirror())
+    }
+
+    pub fn journal(&self) -> Option<&Journal> {
+        self.journal.as_ref()
+    }
+
+    /// Snapshot engine progress + prefix-index topology and rotate the
+    /// journal epoch, bounding what a restart must replay. Called on
+    /// the `checkpoint_interval_steps` cadence and once during graceful
+    /// drain; errors degrade to a counter (durability is best-effort,
+    /// serving is not).
+    pub fn checkpoint_now(&mut self) {
+        let Some(j) = &self.journal else { return };
+        let topo = self.prefix.topology();
+        if j.checkpoint(self.next_id, &topo).is_err() {
+            self.metrics.inc("journal_checkpoint_errors");
+        }
+    }
+
+    /// A `crash@` fault fired: freeze the journal at its last durable
+    /// byte (exactly what `kill -9` would leave behind) and fail the
+    /// offending sequence. The end-of-step hook then fails every other
+    /// live session. FINISH records are suppressed by the frozen
+    /// journal, so the sessions stay unfinished on disk and a restarted
+    /// engine recovers them.
+    fn simulate_crash(&mut self, seq: Sequence) {
+        if let Some(j) = &self.journal {
+            j.simulate_crash();
+        }
+        self.crashed = true;
+        self.metrics.inc("injected_crashes");
+        self.finish_with_error(seq, "crash: simulated hard abort", false);
+    }
+
+    /// Re-admit every unfinished journaled session after a restart.
+    ///
+    /// Each session is rebuilt from its ADMIT record (resolved sampler
+    /// values pinned), journaled tokens are appended, and the
+    /// deterministic sampler is fast-forwarded past them — continued
+    /// decode therefore emits exactly the suffix an uncrashed run would
+    /// have produced. Rebuilt sequences re-prefill through the
+    /// admission queue (warm via the prefix cache), the same path
+    /// preemption resumes take. Sessions whose journaled progress is
+    /// already terminal get their `Done` synthesized here instead.
+    pub fn recover(&mut self) -> RecoveryReport {
+        let mut report = RecoveryReport::default();
+        let (unfinished, floor) = match &self.journal {
+            Some(j) => (j.unfinished_sessions(), j.next_id_floor()),
+            None => return report,
+        };
+        let t0 = Instant::now();
+        self.next_id = self.next_id.max(floor);
+        for st in unfinished {
+            let id = st.admit.id;
+            self.next_id = self.next_id.max(id + 1);
+            let (nl, nh) = (self.rt.config.n_layers, self.rt.config.n_heads);
+            let mut seq = Sequence::new(id, st.admit.to_gen_request(), &self.cfg, nl, nh);
+            seq.tokens.extend_from_slice(&st.tokens);
+            seq.generated = st.tokens.len();
+            seq.logprobs = st.logprobs.clone();
+            if seq.teacher.is_none() {
+                // One RNG draw per sampled token; teacher-forced
+                // sessions never touch the sampler.
+                seq.sampler.skip(seq.generated);
+            }
+            let events: Channel<SessionEvent> = Channel::new();
+            let cancel = Arc::new(AtomicBool::new(false));
+            let handle = SessionHandle::new(id, events.clone(), cancel.clone());
+            seq.emitter = Some(events.clone());
+            seq.cancel = cancel.clone();
+            let now = Instant::now();
+            seq.queued_at = now;
+            let deadline = effective_deadline(st.admit.timeout_ms, self.cfg.timeout_ms, now);
+            seq.deadline = deadline;
+            report.replayed_tokens += st.tokens.len() as u64;
+            // Journaled progress may already be terminal (the crash hit
+            // between the last STEP and its FINISH): synthesize Done
+            // rather than re-admitting a sequence with no work left.
+            let done = if st.tokens.len() >= st.admit.max_new_tokens {
+                Some(FinishReason::Length)
+            } else if st.admit.stop_token.is_some()
+                && st.tokens.last() == st.admit.stop_token.as_ref()
+            {
+                Some(FinishReason::Stop)
+            } else {
+                None
+            };
+            if let Some(finish) = done {
+                seq.done = true;
+                seq.finish = Some(finish);
+                events.send(SessionEvent::Done { usage: seq.usage(), finish });
+                events.close();
+                self.journal_finish(id, Terminal::from(finish));
+            } else {
+                self.pending.push_back(PendingSession {
+                    id,
+                    work: PendingWork::Resume(Box::new(seq)),
+                    events: Some(events),
+                    cancel,
+                    queued_at: now,
+                    enqueued_at: now,
+                    deadline,
+                });
+            }
+            self.metrics.inc("recovered_sessions");
+            report.sessions.push(handle);
+        }
+        self.metrics.add("replay_tokens", report.replayed_tokens);
+        self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
+        self.metrics.observe("recovery_ms", t0.elapsed().as_secs_f64() * 1e3);
+        report
+    }
+
+    // -----------------------------------------------------------------
     // Fault handling: containment, preemption, deadlines
     // -----------------------------------------------------------------
 
@@ -609,6 +789,7 @@ impl Engine {
             em.close();
         }
         self.metrics.inc("requests_failed");
+        self.journal_finish(seq.id, Terminal::Error);
     }
 
     /// Free this sequence's blocks and requeue it through admission: it
@@ -723,6 +904,7 @@ impl Engine {
                 ev.close();
             }
             self.metrics.inc("timeouts");
+            self.journal_finish(p.id, Terminal::Timeout);
         }
         self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
     }
@@ -749,6 +931,7 @@ impl Engine {
                 em.close();
             }
             self.metrics.inc("requests_cancelled");
+            self.journal_finish(id, Terminal::Cancelled);
         }
     }
 
@@ -773,6 +956,7 @@ impl Engine {
                 em.close();
             }
             self.metrics.inc("requests_completed");
+            self.journal_finish(id, Terminal::from(seq.finish.unwrap_or(FinishReason::Length)));
         }
     }
 
@@ -781,12 +965,16 @@ impl Engine {
     /// path — step faults are contained — it is reserved for true
     /// process shutdown (server stop, unrecoverable engine state).
     pub fn fail_all(&mut self, msg: &str) {
-        for p in self.pending.drain(..) {
+        let pending: Vec<PendingSession> = self.pending.drain(..).collect();
+        for p in pending {
             if let Some(ev) = &p.events {
                 ev.send(SessionEvent::Error(msg.to_string()));
                 ev.close();
             }
             self.metrics.inc("requests_failed");
+            // No-op on a crash-frozen journal: the session must stay
+            // unfinished on disk so a restart can recover it.
+            self.journal_finish(p.id, Terminal::Error);
         }
         let ids: Vec<SeqId> = self.seqs.keys().copied().collect();
         for id in ids {
@@ -797,6 +985,7 @@ impl Engine {
                 em.close();
                 self.metrics.inc("requests_failed");
             }
+            self.journal_finish(id, Terminal::Error);
         }
         self.prefix.clear(&mut self.pool).expect("kv block double-free");
         self.metrics.set_gauge("queue_depth", 0.0);
@@ -808,6 +997,7 @@ impl Engine {
     pub fn add(&mut self, req: GenRequest) -> Result<SeqId> {
         let id = self.next_id;
         self.next_id += 1;
+        self.journal_admit(id, &req);
         let (nl, nh) = (self.rt.config.n_layers, self.rt.config.n_heads);
         let mut seq = Sequence::new(id, req, &self.cfg, nl, nh);
         let t0 = Instant::now();
@@ -827,6 +1017,7 @@ impl Engine {
     pub fn remove(&mut self, id: SeqId) -> Option<GenResult> {
         let mut seq = self.seqs.remove(&id)?;
         seq.cache.free(&mut self.pool).expect("kv block double-free");
+        self.journal_finish(id, Terminal::from(seq.finish.unwrap_or(FinishReason::Length)));
         Some(seq.result())
     }
 
@@ -990,6 +1181,10 @@ impl Engine {
         for &id in &radar {
             // May have been preempted as another row's KV victim.
             let Some(mut seq) = self.seqs.remove(&id) else { continue };
+            if self.faults.take_crash(step_no, id) {
+                self.simulate_crash(seq);
+                continue;
+            }
             let inject_panic = self.faults.take_panic(step_no, id);
             let t_watch = Instant::now();
             let r = catch_unwind(AssertUnwindSafe(|| {
@@ -1026,6 +1221,18 @@ impl Engine {
         self.scratch_fused = fused;
         self.scratch_radar = radar;
         self.reap_finished();
+        if self.crashed {
+            // A `crash@` fault froze the journal mid-step; take the
+            // whole engine down the way a hard kill would. FINISH
+            // suppression keeps every live session recoverable.
+            self.crashed = false;
+            self.fail_all("crash: simulated hard abort (restart to recover)");
+        }
+        if self.cfg.checkpoint_interval_steps > 0
+            && step_no % self.cfg.checkpoint_interval_steps == 0
+        {
+            self.checkpoint_now();
+        }
         self.metrics.set_gauge("kv_blocks_used", self.pool.used_blocks() as f64);
         self.metrics
             .set_gauge("prefix_shared_blocks", self.prefix.shared_blocks(&self.pool) as f64);
@@ -1205,6 +1412,14 @@ impl Engine {
         // (same treatment as batch padding), so the dispatch stays
         // valid for the others.
         for (bi, &id) in ids.iter().enumerate() {
+            if self.faults.take_crash(step_no, id) {
+                alive[bi] = false;
+                self.buf_mask[bi * row_mask..(bi + 1) * row_mask].fill(NEG);
+                if let Some(seq) = self.seqs.remove(&id) {
+                    self.simulate_crash(seq);
+                }
+                continue;
+            }
             let inject_panic = self.faults.take_panic(step_no, id);
             // A scripted stall is attributed to the first row staged at
             // the armed step, so the watchdog sees one clear offender.
@@ -1704,6 +1919,11 @@ impl Engine {
         }
         // Per-token stream delivery + serving latency histograms.
         if let Some((token, logprob)) = emitted {
+            if let Some(j) = &self.journal {
+                // `generated` was just bumped, so the 0-based stream
+                // index of this token is generated - 1.
+                j.step(seq.id, seq.generated - 1, token, logprob);
+            }
             let now = Instant::now();
             if seq.generated == 1 {
                 self.metrics

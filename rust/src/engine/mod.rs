@@ -9,11 +9,11 @@ mod request;
 pub mod staging;
 
 pub use batcher::{group_by_bucket, preemption_victim, BatchGroup};
-pub use core::{Engine, StepStats};
+pub use core::{Engine, RecoveryReport, StepStats};
 pub use overload::{
     sanitize_logits, shed_victim, BreakerTransition, CircuitBreaker, HealthState, TokenBucket,
 };
 pub use request::{
-    FinishReason, GenRequest, GenResult, Priority, SeqId, Sequence, SessionEvent, SessionHandle,
-    SessionResult, SubmitError, Usage,
+    resolved_sampling, FinishReason, GenRequest, GenResult, Priority, SeqId, Sequence,
+    SessionEvent, SessionHandle, SessionResult, SubmitError, Usage,
 };

@@ -80,6 +80,22 @@ pub struct GenRequest {
     pub priority: Priority,
 }
 
+/// Resolve a request's sampler parameters against the engine config:
+/// `(seed, temperature, greedy)`. A request-supplied seed must be
+/// reproducible verbatim across resubmissions, so it is NOT mixed with
+/// the (monotonically increasing) session id; only the engine-wide
+/// default is, to decorrelate concurrent sequences. `Sequence::new`
+/// and the session journal's ADMIT record both use this, so a
+/// recovered sequence rebuilds the exact sampler the crashed run had
+/// even if `ServingConfig` changed across the restart.
+pub fn resolved_sampling(id: SeqId, req: &GenRequest, cfg: &ServingConfig) -> (u64, f32, bool) {
+    let seed = match req.seed {
+        Some(s) => s,
+        None => cfg.seed ^ (id << 1),
+    };
+    (seed, req.temperature.unwrap_or(cfg.temperature), req.greedy.unwrap_or(cfg.greedy))
+}
+
 impl GenRequest {
     pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> Self {
         Self {
@@ -368,16 +384,7 @@ impl Sequence {
         n_heads: usize,
     ) -> Self {
         let policy = PolicyHolder::fresh(id, cfg, n_layers, n_heads);
-        let temperature = req.temperature.unwrap_or(cfg.temperature);
-        let greedy = req.greedy.unwrap_or(cfg.greedy);
-        // A request-supplied seed must be reproducible verbatim across
-        // resubmissions, so it is NOT mixed with the (monotonically
-        // increasing) session id; only the engine-wide default is,
-        // to decorrelate concurrent sequences.
-        let sampler_seed = match req.seed {
-            Some(s) => s,
-            None => cfg.seed ^ (id << 1),
-        };
+        let (sampler_seed, temperature, greedy) = resolved_sampling(id, &req, cfg);
         let prompt_len = req.prompt.len();
         Self {
             id,

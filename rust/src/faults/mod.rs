@@ -4,8 +4,9 @@
 //! 1-based step counter: allocation failures (surface as KV-cache
 //! exhaustion and exercise the preemption path), step panics (exercise
 //! per-sequence containment), slow steps (exercise deadlines), stalls
-//! (exercise the watchdog), and NaN poisoning of Radar segment
-//! summaries (exercise the exact-attention fallback). Plans are either
+//! (exercise the watchdog), NaN poisoning of Radar segment summaries
+//! (exercise the exact-attention fallback), and simulated hard aborts
+//! (exercise journal-based crash recovery). Plans are either
 //! written out explicitly (`alloc@5:2,panic@9`) or generated from a
 //! seed (`seeded:42:100:6`) via `util::prng`, so a failing chaos run
 //! reproduces bit-for-bit from its seed.
@@ -28,6 +29,11 @@ pub enum FaultKind {
     /// Sleep this long *inside* one sequence's step body (watchdog
     /// pressure: the stall is attributable to that sequence).
     Stall { ms: u64 },
+    /// Simulated hard abort: the engine tears the journal at its last
+    /// fsync boundary (unsynced records are lost, as in a real crash),
+    /// fails all in-flight work, and goes idle. Recovery is exercised
+    /// by reopening the journal directory.
+    CrashAbort { seq: Option<u64> },
 }
 
 /// One scripted event, armed at a 1-based engine step.
@@ -45,7 +51,7 @@ pub enum FaultSpecError {
     Empty,
     #[error("fault event {event:?} missing '@STEP'")]
     MissingStep { event: String },
-    #[error("unknown fault kind {kind:?} in {event:?} (want alloc|panic|nan|slow|stall)")]
+    #[error("unknown fault kind {kind:?} in {event:?} (want alloc|panic|nan|crash|slow|stall)")]
     UnknownKind { kind: String, event: String },
     #[error("bad step in {event:?}: {reason}")]
     BadStep { event: String, reason: &'static str },
@@ -70,6 +76,8 @@ impl FaultPlan {
     ///   alloc@STEP[:SEQ]   fail a block allocation at STEP
     ///   panic@STEP[:SEQ]   panic in a sequence's step body at STEP
     ///   nan@STEP[:SEQ]     poison Radar segment summaries at STEP
+    ///   crash@STEP[:SEQ]   simulated hard abort at STEP (journal torn
+    ///                      at its last fsync boundary)
     ///   slow@STEPxMS       sleep MS milliseconds before STEP
     ///   stall@STEPxMS      sleep MS inside one sequence's step body
     ///
@@ -114,7 +122,7 @@ impl FaultPlan {
                 Ok(step)
             };
             let event = match kind {
-                "alloc" | "panic" | "nan" => {
+                "alloc" | "panic" | "nan" | "crash" => {
                     let (step_s, seq) = match rest.split_once(':') {
                         Some((st, sq)) => {
                             let sq: u64 = sq
@@ -128,6 +136,7 @@ impl FaultPlan {
                     let k = match kind {
                         "alloc" => FaultKind::AllocFail { seq },
                         "panic" => FaultKind::StepPanic { seq },
+                        "crash" => FaultKind::CrashAbort { seq },
                         _ => FaultKind::NanInject { seq },
                     };
                     FaultEvent { step, kind: k }
@@ -252,6 +261,14 @@ impl ActiveFaults {
     pub fn take_nan(&mut self, step: u64, seq: u64) -> bool {
         self.take_targeted(step, seq, |k| match k {
             FaultKind::NanInject { seq } => Some(seq),
+            _ => None,
+        })
+    }
+
+    /// Consume a crash-abort event armed at `step` targeting `seq`.
+    pub fn take_crash(&mut self, step: u64, seq: u64) -> bool {
+        self.take_targeted(step, seq, |k| match k {
+            FaultKind::CrashAbort { seq } => Some(seq),
             _ => None,
         })
     }
@@ -417,6 +434,44 @@ mod tests {
         // Untargeted nan hits the first queried sequence.
         assert!(af.take_nan(5, 7));
         assert!(!af.take_nan(5, 8));
+    }
+
+    #[test]
+    fn parse_crash_events() {
+        let p = FaultPlan::parse("crash@6,crash@9:3").unwrap();
+        assert_eq!(
+            p.events,
+            vec![
+                FaultEvent { step: 6, kind: FaultKind::CrashAbort { seq: None } },
+                FaultEvent { step: 9, kind: FaultKind::CrashAbort { seq: Some(3) } },
+            ]
+        );
+        assert_eq!(
+            FaultPlan::parse("crash@0").unwrap_err(),
+            FaultSpecError::BadStep { event: "crash@0".into(), reason: "steps are 1-based, got 0" }
+        );
+        assert_eq!(
+            FaultPlan::parse("crash@4:x").unwrap_err(),
+            FaultSpecError::BadSeq { event: "crash@4:x".into() }
+        );
+    }
+
+    #[test]
+    fn crash_events_fire_once_per_target() {
+        let mut af = ActiveFaults::new(Some(FaultPlan::parse("crash@4:2,crash@7").unwrap()));
+        assert!(!af.take_crash(3, 2), "wrong step must not fire");
+        assert!(!af.take_crash(4, 1), "wrong seq must not fire");
+        assert!(af.take_crash(4, 2));
+        assert!(!af.take_crash(4, 2), "one-shot");
+        // Untargeted crash hits the first queried sequence.
+        assert!(af.take_crash(7, 9));
+        assert!(!af.take_crash(7, 10));
+        // Crash events are invisible to the other take_* probes.
+        let mut af = ActiveFaults::new(Some(FaultPlan::parse("crash@2").unwrap()));
+        assert!(!af.take_panic(2, 1));
+        assert!(!af.take_alloc(2, 1));
+        assert!(!af.take_nan(2, 1));
+        assert!(af.take_crash(2, 1));
     }
 
     #[test]

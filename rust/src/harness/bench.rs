@@ -257,7 +257,9 @@ pub fn run(args: &Args, out: &str) -> Result<()> {
         .with("byte_identical", true);
     std::fs::create_dir_all(out)?;
     let path = format!("{out}/BENCH_decode.json");
-    std::fs::write(&path, report.to_string())?;
+    // Write-temp-then-rename: a crash mid-write can't leave a torn
+    // report behind for downstream tooling to choke on.
+    crate::util::fsio::write_atomic(&path, report.to_string().as_bytes())?;
 
     println!("decode staging bench (synthetic, host-side)");
     println!(

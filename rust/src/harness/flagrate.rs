@@ -179,7 +179,7 @@ pub fn print(out: &Fig7Out, csv_path: &str) -> Result<()> {
         csv.push('\n');
     }
     std::fs::create_dir_all(std::path::Path::new(csv_path).parent().unwrap())?;
-    std::fs::write(csv_path, csv)?;
+    crate::util::fsio::write_atomic(csv_path, csv.as_bytes())?;
     println!("(heatmap data -> {csv_path})");
     Ok(())
 }

@@ -118,7 +118,7 @@ pub fn print_table(title: &str, rows: &[LongBenchRow], csv_path: &str) -> Result
         csv.push_str(&format!(",{:.3},{:.3}\n", r.avg_score, r.avg_percentile));
     }
     std::fs::create_dir_all(std::path::Path::new(csv_path).parent().unwrap())?;
-    std::fs::write(csv_path, csv)?;
+    crate::util::fsio::write_atomic(csv_path, csv.as_bytes())?;
     println!("(table data -> {csv_path})");
     Ok(())
 }

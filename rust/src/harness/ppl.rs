@@ -137,7 +137,7 @@ pub fn print_curves(title: &str, curves: &[PplCurve], csv_path: &str) -> Result<
         }
     }
     std::fs::create_dir_all(std::path::Path::new(csv_path).parent().unwrap())?;
-    std::fs::write(csv_path, csv)?;
+    crate::util::fsio::write_atomic(csv_path, csv.as_bytes())?;
     println!("(curve data -> {csv_path})");
     Ok(())
 }

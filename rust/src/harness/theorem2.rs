@@ -126,7 +126,7 @@ pub fn print(points: &[Thm2Point], csv_path: &str) -> Result<()> {
         ));
     }
     std::fs::create_dir_all(std::path::Path::new(csv_path).parent().unwrap())?;
-    std::fs::write(csv_path, csv)?;
+    crate::util::fsio::write_atomic(csv_path, csv.as_bytes())?;
     println!("(data -> {csv_path})");
     Ok(())
 }

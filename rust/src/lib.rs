@@ -16,6 +16,7 @@ pub mod model;
 pub mod policy;
 pub mod prefix;
 pub mod radar;
+pub mod recovery;
 pub mod runtime;
 pub mod server;
 pub mod util;

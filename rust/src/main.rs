@@ -38,6 +38,14 @@ overload & degradation (--set k=v):
   requests may set \"priority\": \"high\"|\"normal\"|\"batch\" (default normal);
   health surface: GET /healthz, GET /readyz, GET /metrics, POST /admin/drain
 
+durability (--set k=v):
+  journal_dir=PATH     durable session journal + crash recovery (empty = off)
+  journal_fsync_every=N  journal records per fsync batch (default 8)
+  checkpoint_interval_steps=N  checkpoint + epoch rotation cadence (0 = never)
+  resume: GET /v1/sessions/{id} status, GET /v1/sessions/{id}/stream SSE
+          replay (honors Last-Event-ID); fault 'crash@STEP[:SEQ]' simulates
+          a hard abort mid-decode for recovery drills
+
 performance:
   bench       synthetic long-context decode staging benchmark; writes
               results/BENCH_decode.json (no artifacts needed)

@@ -111,6 +111,21 @@ impl Sampler {
         }
         (exps.len() - 1) as i32
     }
+
+    /// Fast-forward past `n` already-journaled samples so a recovered
+    /// sequence's next draw matches what the uncrashed run would have
+    /// produced. Greedy sampling consumes no randomness (`sample`
+    /// returns the argmax without touching the RNG), so skipping is a
+    /// no-op there; otherwise `sample` draws exactly one `next_f32`
+    /// per token, so burn exactly `n` draws.
+    pub fn skip(&mut self, n: usize) {
+        if self.greedy {
+            return;
+        }
+        for _ in 0..n {
+            self.rng.next_f32();
+        }
+    }
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -158,6 +173,31 @@ mod tests {
             assert_eq!(a, s2.sample(&logits));
             assert!((0..16).contains(&a));
         }
+    }
+
+    #[test]
+    fn skip_fast_forwards_to_identical_stream() {
+        // A fresh sampler that skips n draws continues exactly where a
+        // sampler that made n real draws left off (crash recovery).
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        for n in [0usize, 1, 5, 17] {
+            let mut live = Sampler::new(11, 0.8, false);
+            let mut tail: Vec<i32> = Vec::new();
+            for i in 0..n + 8 {
+                let t = live.sample(&logits);
+                if i >= n {
+                    tail.push(t);
+                }
+            }
+            let mut recovered = Sampler::new(11, 0.8, false);
+            recovered.skip(n);
+            let got: Vec<i32> = (0..8).map(|_| recovered.sample(&logits)).collect();
+            assert_eq!(got, tail, "skip({n}) diverged");
+        }
+        // Greedy consumes no randomness: skip must not perturb it.
+        let mut g = Sampler::new(3, 1.0, true);
+        g.skip(100);
+        assert_eq!(g.sample(&[0.0, 9.0, 1.0]), 1);
     }
 
     #[test]

@@ -255,6 +255,27 @@ impl PrefixIndex {
         self.n_nodes
     }
 
+    /// Snapshot of the tree's shape for journal checkpoints: one
+    /// `(block_hash, depth_in_blocks)` pair per cached node, sorted for
+    /// deterministic comparison. KV blocks themselves do not survive a
+    /// restart, so recovery rebuilds the tree by re-prefilling; the
+    /// topology records what was cached at checkpoint time for
+    /// observability and tests.
+    pub fn topology(&self) -> Vec<(u64, u32)> {
+        let mut out = Vec::with_capacity(self.n_nodes);
+        for node in self.nodes.iter().skip(1).flatten() {
+            let mut depth = 1u32;
+            let mut cur = node.parent;
+            while cur != 0 {
+                depth += 1;
+                cur = self.node(cur).parent;
+            }
+            out.push((node.hash, depth));
+        }
+        out.sort_unstable();
+        out
+    }
+
     /// Cached blocks currently also referenced by at least one live
     /// sequence (gauge).
     pub fn shared_blocks(&self, pool: &BlockPool) -> usize {
@@ -572,6 +593,32 @@ mod tests {
         // Shallow probe still sees the shallow snapshot.
         let m = idx.probe(&toks[..16], usize::MAX);
         assert_eq!(m.frozen.unwrap().boundary, 16);
+    }
+
+    #[test]
+    fn topology_reports_hash_and_depth_per_node() {
+        let mut p = pool();
+        let mut idx = PrefixIndex::new(1 << 20, p.block_bytes());
+        assert!(idx.topology().is_empty());
+        let a: Vec<i32> = (0..32).collect();
+        let mut b = a.clone();
+        b[20] = 777; // diverges in block 1
+        let seq_a = seq_of(&mut p, 32);
+        let seq_b = seq_of(&mut p, 32);
+        idx.insert(&mut p, &a, &seq_a.blocks, None);
+        idx.insert(&mut p, &b, &seq_b.blocks, None);
+        let topo = idx.topology();
+        assert_eq!(topo.len(), 3, "shared root block + two diverging children");
+        let depths: Vec<u32> = {
+            let mut d: Vec<u32> = topo.iter().map(|&(_, d)| d).collect();
+            d.sort_unstable();
+            d
+        };
+        assert_eq!(depths, vec![1, 2, 2]);
+        let shared = hash_block(&a[..16]);
+        assert!(topo.iter().any(|&(h, d)| h == shared && d == 1));
+        // Deterministic: same tree, same snapshot.
+        assert_eq!(idx.topology(), topo);
     }
 
     #[test]

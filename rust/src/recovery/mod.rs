@@ -1,0 +1,1198 @@
+//! Durable session journal + deterministic crash recovery.
+//!
+//! Long-context serving state is expensive to lose — hours of
+//! accumulated KV blocks and Radar segment summaries — but cheap to
+//! *re-derive* as long as three things survive a crash: each admitted
+//! request (prompt + resolved sampler parameters), the tokens sampled
+//! so far, and how each session ended. This module persists exactly
+//! that:
+//!
+//!   - an append-only binary **journal** of checksummed frames
+//!     (`[u32 len][u32 crc32][payload]`, little-endian). ADMIT records
+//!     carry the full `GenRequest` with the sampler seed, temperature,
+//!     and greedy flag *resolved at admission* (so recovery is immune
+//!     to `ServingConfig` drift across restarts); STEP records carry
+//!     sampled token ids; FINISH records the terminal reason. Appends
+//!     are fsync-batched (`fsync_every` frames per `sync_data`), so a
+//!     hard abort can lose the unsynced tail — but sampling is
+//!     deterministic, so lost-tail tokens are *regenerated
+//!     identically* on recovery rather than gone.
+//!   - periodic **checkpoints** (atomic write-temp-then-rename via
+//!     [`crate::util::fsio::write_atomic`]) that snapshot the session
+//!     mirror plus the prefix-index topology and rotate the journal to
+//!     a fresh epoch, bounding replay to one journal segment.
+//!
+//! On [`Journal::open`], the checkpoint (if present and valid) seeds
+//! an in-memory [`SessionMirror`]; the current epoch's journal is then
+//! scanned frame-by-frame. A torn or corrupt tail frame truncates the
+//! file at the last valid boundary — never a fatal error. The engine
+//! re-admits every unfinished session through the preemption-resume
+//! path (re-prefilling warm via the prefix cache) after
+//! fast-forwarding its sampler past the journaled tokens, so the
+//! remaining token stream is byte-identical to an uncrashed run. The
+//! server reads the same mirror to answer `GET /v1/sessions/{id}` and
+//! to replay SSE frames from a client's `Last-Event-ID`.
+
+use crate::engine::{FinishReason, GenRequest, Priority};
+use crate::metrics::Metrics;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+const CHECKPOINT_FILE: &str = "checkpoint.bin";
+/// Checkpoint payload magic ("RjC1" LE) — rejects stray files early.
+const CKPT_MAGIC: u32 = 0x3143_6a52;
+/// Finished sessions retained in the mirror for stream resume; older
+/// ones are evicted FIFO (their journal records rotate away at the
+/// next checkpoint anyway).
+const MAX_FINISHED_RETAINED: usize = 256;
+
+const TAG_ADMIT: u8 = 1;
+const TAG_STEP: u8 = 2;
+const TAG_FINISH: u8 = 3;
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE 802.3 polynomial, bitwise — no table to keep it obvious)
+// ---------------------------------------------------------------------
+
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------
+// Binary encoding helpers
+// ---------------------------------------------------------------------
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32(b: &mut Vec<u8>, v: i32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Cursor over a byte slice; every getter returns `None` on underrun so
+/// a truncated/corrupt payload decodes to `None`, never a panic.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.b.len() - self.pos < n {
+            return None;
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|s| s[0])
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Option<i32> {
+        self.take(4).map(|s| i32::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Option<f32> {
+        self.take(4).map(|s| f32::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        self.take(8).map(|s| f64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.b.len()
+    }
+}
+
+fn priority_code(p: Priority) -> u8 {
+    match p {
+        Priority::Batch => 0,
+        Priority::Normal => 1,
+        Priority::High => 2,
+    }
+}
+
+fn priority_from_code(c: u8) -> Option<Priority> {
+    match c {
+        0 => Some(Priority::Batch),
+        1 => Some(Priority::Normal),
+        2 => Some(Priority::High),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Records
+// ---------------------------------------------------------------------
+
+/// Why a journaled session reached its terminal record. Mirrors
+/// [`FinishReason`] plus `Error` (failures are terminal too — a
+/// recovered engine must not re-decode a request that already failed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Terminal {
+    Length,
+    Stop,
+    Cancelled,
+    Timeout,
+    Error,
+}
+
+impl Terminal {
+    fn code(self) -> u8 {
+        match self {
+            Terminal::Length => 0,
+            Terminal::Stop => 1,
+            Terminal::Cancelled => 2,
+            Terminal::Timeout => 3,
+            Terminal::Error => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0 => Some(Terminal::Length),
+            1 => Some(Terminal::Stop),
+            2 => Some(Terminal::Cancelled),
+            3 => Some(Terminal::Timeout),
+            4 => Some(Terminal::Error),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Terminal::Length => "length",
+            Terminal::Stop => "stop",
+            Terminal::Cancelled => "cancelled",
+            Terminal::Timeout => "timeout",
+            Terminal::Error => "error",
+        }
+    }
+}
+
+impl From<FinishReason> for Terminal {
+    fn from(f: FinishReason) -> Self {
+        match f {
+            FinishReason::Length => Terminal::Length,
+            FinishReason::Stop => Terminal::Stop,
+            FinishReason::Cancelled => Terminal::Cancelled,
+            FinishReason::Timeout => Terminal::Timeout,
+        }
+    }
+}
+
+/// A session's admission, with sampler parameters already resolved
+/// against the `ServingConfig` in force when it was admitted. Replaying
+/// `to_gen_request` under a *different* config still reproduces the
+/// original stream: the resolved values ride along as explicit
+/// per-request overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmitRecord {
+    pub id: u64,
+    pub seed: u64,
+    pub temperature: f32,
+    pub greedy: bool,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub stop_token: Option<i32>,
+    pub timeout_ms: Option<u64>,
+    pub prefix_cache: bool,
+    pub priority: Priority,
+    pub teacher: Option<Vec<i32>>,
+}
+
+impl AdmitRecord {
+    pub fn to_gen_request(&self) -> GenRequest {
+        GenRequest {
+            prompt: self.prompt.clone(),
+            max_new_tokens: self.max_new_tokens,
+            teacher: self.teacher.clone(),
+            stop_token: self.stop_token,
+            temperature: Some(self.temperature),
+            greedy: Some(self.greedy),
+            seed: Some(self.seed),
+            prefix_cache: self.prefix_cache,
+            timeout_ms: self.timeout_ms,
+            priority: self.priority,
+        }
+    }
+}
+
+fn put_admit_body(out: &mut Vec<u8>, a: &AdmitRecord) {
+    put_u64(out, a.id);
+    put_u64(out, a.seed);
+    put_f32(out, a.temperature);
+    put_u8(out, a.greedy as u8);
+    put_u64(out, a.max_new_tokens as u64);
+    match a.stop_token {
+        Some(t) => {
+            put_u8(out, 1);
+            put_i32(out, t);
+        }
+        None => put_u8(out, 0),
+    }
+    match a.timeout_ms {
+        Some(ms) => {
+            put_u8(out, 1);
+            put_u64(out, ms);
+        }
+        None => put_u8(out, 0),
+    }
+    put_u8(out, a.prefix_cache as u8);
+    put_u8(out, priority_code(a.priority));
+    put_u32(out, a.prompt.len() as u32);
+    for &t in &a.prompt {
+        put_i32(out, t);
+    }
+    match &a.teacher {
+        Some(ts) => {
+            put_u8(out, 1);
+            put_u32(out, ts.len() as u32);
+            for &t in ts {
+                put_i32(out, t);
+            }
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+fn read_admit_body(r: &mut Reader) -> Option<AdmitRecord> {
+    let id = r.u64()?;
+    let seed = r.u64()?;
+    let temperature = r.f32()?;
+    let greedy = r.u8()? != 0;
+    let max_new_tokens = r.u64()? as usize;
+    let stop_token = match r.u8()? {
+        0 => None,
+        _ => Some(r.i32()?),
+    };
+    let timeout_ms = match r.u8()? {
+        0 => None,
+        _ => Some(r.u64()?),
+    };
+    let prefix_cache = r.u8()? != 0;
+    let priority = priority_from_code(r.u8()?)?;
+    let n = r.u32()? as usize;
+    let mut prompt = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        prompt.push(r.i32()?);
+    }
+    let teacher = match r.u8()? {
+        0 => None,
+        _ => {
+            let n = r.u32()? as usize;
+            let mut ts = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                ts.push(r.i32()?);
+            }
+            Some(ts)
+        }
+    };
+    Some(AdmitRecord {
+        id,
+        seed,
+        temperature,
+        greedy,
+        prompt,
+        max_new_tokens,
+        stop_token,
+        timeout_ms,
+        prefix_cache,
+        priority,
+        teacher,
+    })
+}
+
+/// One decoded journal frame.
+#[derive(Debug, Clone, PartialEq)]
+enum Record {
+    Admit(AdmitRecord),
+    Step { id: u64, index: u32, token: i32, logprob: f64 },
+    Finish { id: u64, reason: Terminal },
+}
+
+fn encode_admit(a: &AdmitRecord) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + 4 * a.prompt.len());
+    put_u8(&mut out, TAG_ADMIT);
+    put_admit_body(&mut out, a);
+    out
+}
+
+fn encode_step(id: u64, index: u32, token: i32, logprob: f64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(25);
+    put_u8(&mut out, TAG_STEP);
+    put_u64(&mut out, id);
+    put_u32(&mut out, index);
+    put_i32(&mut out, token);
+    put_f64(&mut out, logprob);
+    out
+}
+
+fn encode_finish(id: u64, reason: Terminal) -> Vec<u8> {
+    let mut out = Vec::with_capacity(10);
+    put_u8(&mut out, TAG_FINISH);
+    put_u64(&mut out, id);
+    put_u8(&mut out, reason.code());
+    out
+}
+
+/// Decode one frame payload. `None` means corrupt (unknown tag,
+/// underrun, or trailing garbage) — the scanner treats it like a CRC
+/// failure and truncates there.
+fn decode_record(payload: &[u8]) -> Option<Record> {
+    let mut r = Reader::new(payload);
+    let rec = match r.u8()? {
+        TAG_ADMIT => Record::Admit(read_admit_body(&mut r)?),
+        TAG_STEP => Record::Step {
+            id: r.u64()?,
+            index: r.u32()?,
+            token: r.i32()?,
+            logprob: r.f64()?,
+        },
+        TAG_FINISH => Record::Finish { id: r.u64()?, reason: Terminal::from_code(r.u8()?)? },
+        _ => return None,
+    };
+    if !r.done() {
+        return None;
+    }
+    Some(rec)
+}
+
+/// Scan a journal byte buffer into records. Returns the decoded
+/// records, the byte offset of the last valid frame boundary, and
+/// whether a torn/corrupt tail was found past it.
+fn scan_frames(bytes: &[u8]) -> (Vec<Record>, u64, bool) {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while bytes.len() - pos >= 8 {
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if bytes.len() - pos - 8 < len {
+            break; // torn: frame header promises more bytes than exist
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            break;
+        }
+        let Some(rec) = decode_record(payload) else { break };
+        out.push(rec);
+        pos += 8 + len;
+    }
+    (out, pos as u64, pos < bytes.len())
+}
+
+// ---------------------------------------------------------------------
+// Session mirror
+// ---------------------------------------------------------------------
+
+/// Everything the journal knows about one session.
+#[derive(Debug, Clone)]
+pub struct SessionState {
+    pub admit: AdmitRecord,
+    /// Generated tokens in order (index i == the i-th STEP record).
+    pub tokens: Vec<i32>,
+    pub logprobs: Vec<f64>,
+    pub finish: Option<Terminal>,
+}
+
+#[derive(Default)]
+struct MirrorInner {
+    sessions: BTreeMap<u64, SessionState>,
+    /// Finished ids in completion order, for FIFO retention eviction.
+    finished_order: VecDeque<u64>,
+}
+
+/// Shared in-memory view of the journal: the engine writes through it,
+/// server threads read it to answer session-status and stream-resume
+/// requests without touching disk.
+#[derive(Clone, Default)]
+pub struct SessionMirror(Arc<Mutex<MirrorInner>>);
+
+impl SessionMirror {
+    fn apply(&self, rec: Record) {
+        match rec {
+            Record::Admit(a) => self.apply_admit(a),
+            Record::Step { id, index, token, logprob } => {
+                self.apply_step(id, index, token, logprob)
+            }
+            Record::Finish { id, reason } => self.apply_finish(id, reason),
+        }
+    }
+
+    fn apply_admit(&self, a: AdmitRecord) {
+        let mut g = self.0.lock().unwrap();
+        let id = a.id;
+        g.sessions
+            .entry(id)
+            .or_insert_with(|| SessionState {
+                admit: a,
+                tokens: Vec::new(),
+                logprobs: Vec::new(),
+                finish: None,
+            });
+    }
+
+    fn apply_step(&self, id: u64, index: u32, token: i32, logprob: f64) {
+        let mut g = self.0.lock().unwrap();
+        if let Some(s) = g.sessions.get_mut(&id) {
+            // Only the next-in-order index extends the stream; a replay
+            // of an already-mirrored index (checkpoint overlap) is a
+            // no-op, and a gap (impossible from a correct engine) is
+            // dropped rather than recorded out of place.
+            if index as usize == s.tokens.len() {
+                s.tokens.push(token);
+                s.logprobs.push(logprob);
+            }
+        }
+    }
+
+    fn apply_finish(&self, id: u64, reason: Terminal) {
+        let mut g = self.0.lock().unwrap();
+        let Some(s) = g.sessions.get_mut(&id) else { return };
+        if s.finish.is_some() {
+            return;
+        }
+        s.finish = Some(reason);
+        g.finished_order.push_back(id);
+        while g.finished_order.len() > MAX_FINISHED_RETAINED {
+            if let Some(old) = g.finished_order.pop_front() {
+                g.sessions.remove(&old);
+            }
+        }
+    }
+
+    /// Replace the mirror's contents with a checkpoint snapshot.
+    fn install(&self, states: Vec<SessionState>) {
+        let mut g = self.0.lock().unwrap();
+        g.sessions.clear();
+        g.finished_order.clear();
+        for s in states {
+            let id = s.admit.id;
+            if s.finish.is_some() {
+                g.finished_order.push_back(id);
+            }
+            g.sessions.insert(id, s);
+        }
+    }
+
+    pub fn get(&self, id: u64) -> Option<SessionState> {
+        self.0.lock().unwrap().sessions.get(&id).cloned()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.0.lock().unwrap().sessions.contains_key(&id)
+    }
+
+    /// Sessions with no terminal record, ascending by id (admission
+    /// order — ids are monotonic).
+    pub fn unfinished(&self) -> Vec<SessionState> {
+        let g = self.0.lock().unwrap();
+        g.sessions.values().filter(|s| s.finish.is_none()).cloned().collect()
+    }
+
+    pub fn max_id(&self) -> u64 {
+        let g = self.0.lock().unwrap();
+        g.sessions.keys().next_back().copied().unwrap_or(0)
+    }
+
+    fn snapshot(&self) -> Vec<SessionState> {
+        self.0.lock().unwrap().sessions.values().cloned().collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint
+// ---------------------------------------------------------------------
+
+struct Checkpoint {
+    epoch: u64,
+    next_id: u64,
+    sessions: Vec<SessionState>,
+    /// Prefix-index topology at checkpoint time: (block hash, depth in
+    /// blocks) per node. Informational — KV blocks do not survive a
+    /// restart, so recovery rebuilds the tree by re-prefilling; the
+    /// topology records what was cached for observability and tests.
+    topology: Vec<(u64, u32)>,
+}
+
+fn encode_checkpoint_file(ck: &Checkpoint) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u32(&mut p, CKPT_MAGIC);
+    put_u64(&mut p, ck.epoch);
+    put_u64(&mut p, ck.next_id);
+    put_u32(&mut p, ck.sessions.len() as u32);
+    for s in &ck.sessions {
+        put_admit_body(&mut p, &s.admit);
+        put_u32(&mut p, s.tokens.len() as u32);
+        for &t in &s.tokens {
+            put_i32(&mut p, t);
+        }
+        for &lp in &s.logprobs {
+            put_f64(&mut p, lp);
+        }
+        put_u8(&mut p, s.finish.map(Terminal::code).unwrap_or(255));
+    }
+    put_u32(&mut p, ck.topology.len() as u32);
+    for &(hash, depth) in &ck.topology {
+        put_u64(&mut p, hash);
+        put_u32(&mut p, depth);
+    }
+    let mut out = Vec::with_capacity(p.len() + 8);
+    put_u32(&mut out, p.len() as u32);
+    put_u32(&mut out, crc32(&p));
+    out.extend_from_slice(&p);
+    out
+}
+
+fn decode_checkpoint_file(bytes: &[u8]) -> Option<Checkpoint> {
+    if bytes.len() < 8 {
+        return None;
+    }
+    let len = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if bytes.len() - 8 < len {
+        return None;
+    }
+    let payload = &bytes[8..8 + len];
+    if crc32(payload) != crc {
+        return None;
+    }
+    let mut r = Reader::new(payload);
+    if r.u32()? != CKPT_MAGIC {
+        return None;
+    }
+    let epoch = r.u64()?;
+    let next_id = r.u64()?;
+    let n_sessions = r.u32()? as usize;
+    let mut sessions = Vec::with_capacity(n_sessions.min(1 << 16));
+    for _ in 0..n_sessions {
+        let admit = read_admit_body(&mut r)?;
+        let n = r.u32()? as usize;
+        let mut tokens = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            tokens.push(r.i32()?);
+        }
+        let mut logprobs = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            logprobs.push(r.f64()?);
+        }
+        let finish = match r.u8()? {
+            255 => None,
+            c => Some(Terminal::from_code(c)?),
+        };
+        sessions.push(SessionState { admit, tokens, logprobs, finish });
+    }
+    let n_topo = r.u32()? as usize;
+    let mut topology = Vec::with_capacity(n_topo.min(1 << 20));
+    for _ in 0..n_topo {
+        let hash = r.u64()?;
+        let depth = r.u32()?;
+        topology.push((hash, depth));
+    }
+    if !r.done() {
+        return None;
+    }
+    Some(Checkpoint { epoch, next_id, sessions, topology })
+}
+
+// ---------------------------------------------------------------------
+// Journal
+// ---------------------------------------------------------------------
+
+struct Inner {
+    file: File,
+    epoch: u64,
+    /// Bytes appended this epoch (valid frames only).
+    len: u64,
+    /// Bytes covered by the last successful `sync_data` — everything a
+    /// hard abort is guaranteed to preserve.
+    durable_len: u64,
+    /// Frames appended since the last fsync.
+    unsynced: usize,
+    /// Set by `simulate_crash`: all further appends (and mirror
+    /// updates) are dropped, modeling a dead process.
+    poisoned: bool,
+    /// Topology snapshot from the last checkpoint (loaded or written).
+    ckpt_topology: Vec<(u64, u32)>,
+}
+
+/// Append-only, checksummed, fsync-batched session journal with
+/// checkpoint rotation. All methods take `&self` (the engine journals
+/// from `&self` contexts); appends never fail the caller — I/O errors
+/// are swallowed into `journal_append_errors` so a sick disk degrades
+/// durability, not serving.
+pub struct Journal {
+    dir: PathBuf,
+    fsync_every: usize,
+    metrics: Arc<Metrics>,
+    mirror: SessionMirror,
+    next_id_floor: u64,
+    inner: Mutex<Inner>,
+}
+
+fn journal_path(dir: &Path, epoch: u64) -> PathBuf {
+    dir.join(format!("journal.{epoch}.bin"))
+}
+
+impl Journal {
+    /// Open (or create) the journal in `dir`, recovering state from the
+    /// checkpoint + current-epoch journal tail. An invalid checkpoint
+    /// is ignored (counted in `journal_checkpoint_invalid`); a torn
+    /// journal tail is truncated (counted in `journal_torn_tail`).
+    pub fn open(dir: &str, fsync_every: usize, metrics: Arc<Metrics>) -> Result<Self> {
+        let dir = PathBuf::from(dir);
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating journal dir {}", dir.display()))?;
+        let mirror = SessionMirror::default();
+        let mut epoch = 0u64;
+        let mut next_floor = 1u64;
+        let mut ckpt_topology = Vec::new();
+        let ckpt_path = dir.join(CHECKPOINT_FILE);
+        if ckpt_path.exists() {
+            match fs::read(&ckpt_path).ok().and_then(|b| decode_checkpoint_file(&b)) {
+                Some(ck) => {
+                    epoch = ck.epoch;
+                    next_floor = ck.next_id;
+                    ckpt_topology = ck.topology;
+                    mirror.install(ck.sessions);
+                }
+                None => metrics.inc("journal_checkpoint_invalid"),
+            }
+        }
+        let path = journal_path(&dir, epoch);
+        let mut valid_len = 0u64;
+        if path.exists() {
+            let bytes =
+                fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+            let (records, vlen, torn) = scan_frames(&bytes);
+            valid_len = vlen;
+            if torn {
+                metrics.inc("journal_torn_tail");
+            }
+            for rec in records {
+                mirror.apply(rec);
+            }
+        }
+        // Journals from other epochs are stale (their state is covered
+        // by the checkpoint) or half-rotated garbage: remove them.
+        if let Ok(rd) = fs::read_dir(&dir) {
+            for e in rd.flatten() {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                let stale = name
+                    .strip_prefix("journal.")
+                    .and_then(|r| r.strip_suffix(".bin"))
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .is_some_and(|ep| ep != epoch);
+                if stale {
+                    let _ = fs::remove_file(e.path());
+                }
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        // Drop the torn tail on disk so the next append starts at a
+        // clean frame boundary.
+        file.set_len(valid_len)
+            .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+        let next_id_floor = next_floor.max(mirror.max_id() + 1);
+        Ok(Self {
+            dir,
+            fsync_every: fsync_every.max(1),
+            metrics,
+            mirror,
+            next_id_floor,
+            inner: Mutex::new(Inner {
+                file,
+                epoch,
+                len: valid_len,
+                durable_len: valid_len,
+                unsynced: 0,
+                poisoned: false,
+                ckpt_topology,
+            }),
+        })
+    }
+
+    /// Lowest session id a recovered engine may assign: above every id
+    /// the journal has ever seen, so recovered and fresh sessions never
+    /// collide.
+    pub fn next_id_floor(&self) -> u64 {
+        self.next_id_floor
+    }
+
+    /// Shared read view for the server's resume endpoints.
+    pub fn mirror(&self) -> SessionMirror {
+        self.mirror.clone()
+    }
+
+    pub fn unfinished_sessions(&self) -> Vec<SessionState> {
+        self.mirror.unfinished()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
+    }
+
+    /// Bytes a hard abort is guaranteed to preserve (<= bytes written).
+    pub fn durable_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().durable_len
+    }
+
+    pub fn bytes_written(&self) -> u64 {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.inner.lock().unwrap().poisoned
+    }
+
+    /// Topology snapshot from the most recent checkpoint.
+    pub fn checkpoint_topology(&self) -> Vec<(u64, u32)> {
+        self.inner.lock().unwrap().ckpt_topology.clone()
+    }
+
+    fn append_locked(&self, g: &mut Inner, payload: &[u8]) {
+        let mut frame = Vec::with_capacity(payload.len() + 8);
+        put_u32(&mut frame, payload.len() as u32);
+        put_u32(&mut frame, crc32(payload));
+        frame.extend_from_slice(payload);
+        if g.file.write_all(&frame).is_err() {
+            self.metrics.inc("journal_append_errors");
+            return;
+        }
+        g.len += frame.len() as u64;
+        g.unsynced += 1;
+        self.metrics.add("journal_bytes", frame.len() as u64);
+        if g.unsynced >= self.fsync_every && g.file.sync_data().is_ok() {
+            self.metrics.inc("journal_fsyncs");
+            g.durable_len = g.len;
+            g.unsynced = 0;
+        }
+    }
+
+    /// Journal a session admission (resolved sampler parameters).
+    pub fn admit(&self, rec: &AdmitRecord) {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return;
+        }
+        self.mirror.apply_admit(rec.clone());
+        self.append_locked(&mut g, &encode_admit(rec));
+    }
+
+    /// Journal one sampled/teacher-forced token.
+    pub fn step(&self, id: u64, index: usize, token: i32, logprob: f64) {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return;
+        }
+        self.mirror.apply_step(id, index as u32, token, logprob);
+        self.append_locked(&mut g, &encode_step(id, index as u32, token, logprob));
+    }
+
+    /// Journal a session's terminal record.
+    pub fn finish(&self, id: u64, reason: Terminal) {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return;
+        }
+        self.mirror.apply_finish(id, reason);
+        self.append_locked(&mut g, &encode_finish(id, reason));
+    }
+
+    /// Write a checkpoint (atomic replace) and rotate the journal to a
+    /// fresh epoch, deleting the superseded segment. A crash at any
+    /// point is safe: either the old checkpoint + old journal or the
+    /// new checkpoint (whose snapshot covers the old journal) wins, and
+    /// `open` discards journals from non-checkpoint epochs.
+    pub fn checkpoint(&self, next_id: u64, topology: &[(u64, u32)]) -> Result<()> {
+        let sessions = self.mirror.snapshot();
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return Ok(());
+        }
+        let new_epoch = g.epoch + 1;
+        let ck = Checkpoint {
+            epoch: new_epoch,
+            next_id: next_id.max(self.next_id_floor),
+            sessions,
+            topology: topology.to_vec(),
+        };
+        let bytes = encode_checkpoint_file(&ck);
+        crate::util::fsio::write_atomic(self.dir.join(CHECKPOINT_FILE), &bytes)
+            .context("writing checkpoint")?;
+        let new_path = journal_path(&self.dir, new_epoch);
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&new_path)
+            .with_context(|| format!("opening {}", new_path.display()))?;
+        file.set_len(0)?;
+        let old_path = journal_path(&self.dir, g.epoch);
+        g.file = file;
+        g.epoch = new_epoch;
+        g.len = 0;
+        g.durable_len = 0;
+        g.unsynced = 0;
+        g.ckpt_topology = topology.to_vec();
+        let _ = fs::remove_file(old_path);
+        self.metrics.inc("journal_checkpoints");
+        Ok(())
+    }
+
+    /// Model a hard abort (`crash@STEP` fault): everything past the
+    /// last fsync is torn off the disk image and the journal stops
+    /// accepting writes, as if the process died mid-append. A fresh
+    /// `open` on the same directory sees exactly what a real crash
+    /// would have left behind.
+    pub fn simulate_crash(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return;
+        }
+        let _ = g.file.set_len(g.durable_len);
+        g.poisoned = true;
+        self.metrics.inc("journal_simulated_crashes");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("radar-journal-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn dir_str(p: &Path) -> String {
+        p.to_string_lossy().into_owned()
+    }
+
+    fn admit(id: u64) -> AdmitRecord {
+        AdmitRecord {
+            id,
+            seed: 42 ^ id,
+            temperature: 0.7,
+            greedy: false,
+            prompt: (0..20).map(|t| (t % 7) as i32).collect(),
+            max_new_tokens: 16,
+            stop_token: Some(10),
+            timeout_ms: None,
+            prefix_cache: true,
+            priority: Priority::Normal,
+            teacher: None,
+        }
+    }
+
+    fn metrics() -> Arc<Metrics> {
+        Arc::new(Metrics::new())
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn admit_record_roundtrips_all_fields() {
+        let mut a = admit(3);
+        a.teacher = Some(vec![1, -2, 3]);
+        a.timeout_ms = Some(1234);
+        a.priority = Priority::High;
+        a.greedy = true;
+        let enc = encode_admit(&a);
+        match decode_record(&enc) {
+            Some(Record::Admit(back)) => assert_eq!(back, a),
+            other => panic!("bad decode: {other:?}"),
+        }
+        // Trailing garbage makes the payload corrupt, not misparsed.
+        let mut longer = enc.clone();
+        longer.push(0);
+        assert!(decode_record(&longer).is_none());
+        // Truncation is corrupt, never a panic.
+        for cut in 0..enc.len() {
+            let _ = decode_record(&enc[..cut]);
+        }
+    }
+
+    #[test]
+    fn terminal_and_priority_codes_roundtrip() {
+        for t in [
+            Terminal::Length,
+            Terminal::Stop,
+            Terminal::Cancelled,
+            Terminal::Timeout,
+            Terminal::Error,
+        ] {
+            assert_eq!(Terminal::from_code(t.code()), Some(t));
+        }
+        assert_eq!(Terminal::from_code(9), None);
+        for p in [Priority::Batch, Priority::Normal, Priority::High] {
+            assert_eq!(priority_from_code(priority_code(p)), Some(p));
+        }
+        assert_eq!(priority_from_code(7), None);
+        assert_eq!(Terminal::from(FinishReason::Stop), Terminal::Stop);
+        assert_eq!(Terminal::from(FinishReason::Timeout).as_str(), "timeout");
+    }
+
+    #[test]
+    fn to_gen_request_pins_resolved_sampler_values() {
+        let a = admit(5);
+        let req = a.to_gen_request();
+        assert_eq!(req.seed, Some(a.seed));
+        assert_eq!(req.temperature, Some(a.temperature));
+        assert_eq!(req.greedy, Some(a.greedy));
+        assert_eq!(req.prompt, a.prompt);
+        assert_eq!(req.max_new_tokens, a.max_new_tokens);
+        assert_eq!(req.stop_token, a.stop_token);
+    }
+
+    #[test]
+    fn journal_reopen_recovers_unfinished_sessions() {
+        let d = tmp_dir("reopen");
+        {
+            let j = Journal::open(&dir_str(&d), 1, metrics()).unwrap();
+            j.admit(&admit(1));
+            j.step(1, 0, 65, -0.5);
+            j.step(1, 1, 66, -0.25);
+            j.finish(1, Terminal::Stop);
+            j.admit(&admit(2));
+            j.step(2, 0, 70, -1.0);
+        }
+        let j = Journal::open(&dir_str(&d), 1, metrics()).unwrap();
+        let open = j.unfinished_sessions();
+        assert_eq!(open.len(), 1);
+        assert_eq!(open[0].admit.id, 2);
+        assert_eq!(open[0].tokens, vec![70]);
+        assert_eq!(open[0].logprobs, vec![-1.0]);
+        let done = j.mirror().get(1).unwrap();
+        assert_eq!(done.finish, Some(Terminal::Stop));
+        assert_eq!(done.tokens, vec![65, 66]);
+        assert_eq!(j.next_id_floor(), 3);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let d = tmp_dir("torn");
+        let clean_len;
+        {
+            let j = Journal::open(&dir_str(&d), 1, metrics()).unwrap();
+            j.admit(&admit(1));
+            j.step(1, 0, 65, -0.5);
+            clean_len = j.bytes_written();
+        }
+        // A crash mid-append leaves half a frame on disk.
+        let path = journal_path(&d, 0);
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0x19, 0x00, 0x00, 0x00, 0xde, 0xad]).unwrap();
+        drop(f);
+        let m = metrics();
+        let j = Journal::open(&dir_str(&d), 1, m.clone()).unwrap();
+        assert_eq!(m.counter("journal_torn_tail"), 1);
+        let open = j.unfinished_sessions();
+        assert_eq!(open.len(), 1);
+        assert_eq!(open[0].tokens, vec![65]);
+        // The tail was physically removed: appends restart at the
+        // clean boundary.
+        assert_eq!(fs::metadata(&path).unwrap().len(), clean_len);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_crc_drops_record_and_tail() {
+        let d = tmp_dir("crc");
+        let len_after_two;
+        {
+            let j = Journal::open(&dir_str(&d), 1, metrics()).unwrap();
+            j.admit(&admit(1));
+            j.step(1, 0, 65, -0.5);
+            len_after_two = j.bytes_written();
+            j.step(1, 1, 66, -0.25);
+        }
+        // Flip a byte inside the last frame's payload.
+        let path = journal_path(&d, 0);
+        let mut bytes = fs::read(&path).unwrap();
+        let idx = len_after_two as usize + 12;
+        bytes[idx] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        let m = metrics();
+        let j = Journal::open(&dir_str(&d), 1, m.clone()).unwrap();
+        assert_eq!(m.counter("journal_torn_tail"), 1);
+        let open = j.unfinished_sessions();
+        assert_eq!(open[0].tokens, vec![65], "corrupt step dropped, prefix kept");
+        assert_eq!(fs::metadata(&path).unwrap().len(), len_after_two);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn fsync_batching_bounds_what_a_crash_loses() {
+        let d = tmp_dir("fsync");
+        {
+            // Large batch: nothing fsynced yet, so a hard abort tears
+            // off everything after the last sync point (here: all).
+            let m = metrics();
+            let j = Journal::open(&dir_str(&d), 1000, m.clone()).unwrap();
+            j.admit(&admit(1));
+            j.step(1, 0, 65, -0.5);
+            assert_eq!(j.durable_bytes(), 0);
+            assert_eq!(m.counter("journal_fsyncs"), 0);
+            j.simulate_crash();
+            assert!(j.is_poisoned());
+            // Poisoned journal drops everything, like a dead process.
+            j.step(1, 1, 66, -0.25);
+            j.finish(1, Terminal::Length);
+        }
+        let j = Journal::open(&dir_str(&d), 1, metrics()).unwrap();
+        assert!(j.unfinished_sessions().is_empty(), "unsynced records are gone");
+        drop(j);
+
+        // fsync_every=1: every record is durable before the crash.
+        let d2 = tmp_dir("fsync1");
+        {
+            let m = metrics();
+            let j = Journal::open(&dir_str(&d2), 1, m.clone()).unwrap();
+            j.admit(&admit(1));
+            j.step(1, 0, 65, -0.5);
+            assert_eq!(j.durable_bytes(), j.bytes_written());
+            assert_eq!(m.counter("journal_fsyncs"), 2);
+            j.simulate_crash();
+        }
+        let j = Journal::open(&dir_str(&d2), 1, metrics()).unwrap();
+        let open = j.unfinished_sessions();
+        assert_eq!(open.len(), 1);
+        assert_eq!(open[0].tokens, vec![65]);
+        let _ = fs::remove_dir_all(&d);
+        let _ = fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn checkpoint_rotates_epoch_and_bounds_replay() {
+        let d = tmp_dir("ckpt");
+        {
+            let j = Journal::open(&dir_str(&d), 1, metrics()).unwrap();
+            j.admit(&admit(1));
+            j.step(1, 0, 65, -0.5);
+            j.checkpoint(9, &[(0xabcd, 1), (0x1234, 2)]).unwrap();
+            assert_eq!(j.epoch(), 1);
+            assert!(!journal_path(&d, 0).exists(), "old epoch removed");
+            assert!(journal_path(&d, 1).exists());
+            // Post-checkpoint records land in the new epoch.
+            j.step(1, 1, 66, -0.25);
+        }
+        let j = Journal::open(&dir_str(&d), 1, metrics()).unwrap();
+        assert_eq!(j.epoch(), 1);
+        let open = j.unfinished_sessions();
+        assert_eq!(open.len(), 1);
+        assert_eq!(open[0].tokens, vec![65, 66], "checkpoint state + journal tail merge");
+        assert_eq!(j.next_id_floor(), 9);
+        assert_eq!(j.checkpoint_topology(), vec![(0xabcd, 1), (0x1234, 2)]);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn invalid_checkpoint_is_ignored_not_fatal() {
+        let d = tmp_dir("badckpt");
+        {
+            let j = Journal::open(&dir_str(&d), 1, metrics()).unwrap();
+            j.admit(&admit(1));
+        }
+        fs::write(d.join(CHECKPOINT_FILE), b"not a checkpoint").unwrap();
+        let m = metrics();
+        let j = Journal::open(&dir_str(&d), 1, m.clone()).unwrap();
+        assert_eq!(m.counter("journal_checkpoint_invalid"), 1);
+        // Epoch falls back to 0, whose journal still has the session.
+        assert_eq!(j.unfinished_sessions().len(), 1);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn finished_retention_evicts_fifo() {
+        let mirror = SessionMirror::default();
+        for id in 1..=(MAX_FINISHED_RETAINED as u64 + 10) {
+            mirror.apply_admit(admit(id));
+            mirror.apply_finish(id, Terminal::Length);
+        }
+        assert!(!mirror.contains(1), "oldest finished session evicted");
+        assert!(mirror.contains(MAX_FINISHED_RETAINED as u64 + 10));
+        // Unfinished sessions are never evicted by retention.
+        let mirror = SessionMirror::default();
+        mirror.apply_admit(admit(1));
+        for id in 2..=(MAX_FINISHED_RETAINED as u64 + 10) {
+            mirror.apply_admit(admit(id));
+            mirror.apply_finish(id, Terminal::Length);
+        }
+        assert!(mirror.contains(1));
+        assert_eq!(mirror.unfinished().len(), 1);
+    }
+
+    #[test]
+    fn mirror_step_ignores_duplicates_and_gaps() {
+        let mirror = SessionMirror::default();
+        mirror.apply_admit(admit(1));
+        mirror.apply_step(1, 0, 65, -0.5);
+        mirror.apply_step(1, 0, 99, -9.9); // duplicate index: no-op
+        mirror.apply_step(1, 5, 99, -9.9); // gap: dropped
+        mirror.apply_step(1, 1, 66, -0.25);
+        let s = mirror.get(1).unwrap();
+        assert_eq!(s.tokens, vec![65, 66]);
+        // Finish is idempotent.
+        mirror.apply_finish(1, Terminal::Stop);
+        mirror.apply_finish(1, Terminal::Error);
+        assert_eq!(mirror.get(1).unwrap().finish, Some(Terminal::Stop));
+    }
+}

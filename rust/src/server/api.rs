@@ -390,6 +390,13 @@ pub fn sse_event(j: &Json) -> String {
     format!("data: {j}\n\n")
 }
 
+/// Frame a JSON payload as one SSE event carrying an event id (the
+/// 0-based token stream index). Clients echo the last id they saw via
+/// `Last-Event-ID` to resume a stream without gaps or duplicates.
+pub fn sse_event_id(id: u64, j: &Json) -> String {
+    format!("id: {id}\ndata: {j}\n\n")
+}
+
 /// Stream terminator, after the final chunk.
 pub const SSE_DONE: &str = "data: [DONE]\n\n";
 
@@ -608,6 +615,7 @@ mod tests {
     fn sse_framing() {
         let j = Json::obj().with("a", 1usize);
         assert_eq!(sse_event(&j), "data: {\"a\":1}\n\n");
+        assert_eq!(sse_event_id(7, &j), "id: 7\ndata: {\"a\":1}\n\n");
         assert!(SSE_DONE.starts_with("data: [DONE]"));
     }
 }

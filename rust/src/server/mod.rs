@@ -29,6 +29,7 @@ pub mod api;
 
 use crate::engine::{Engine, FinishReason, GenRequest, HealthState, SessionEvent, SessionHandle};
 use crate::model::tokenizer;
+use crate::recovery::SessionMirror;
 use crate::util::json::Json;
 use crate::util::threadpool::{Channel, ThreadPool};
 use anyhow::Result;
@@ -45,6 +46,9 @@ pub struct HttpRequest {
     pub body: Vec<u8>,
     /// Client asked to reuse the socket (HTTP/1.1 default).
     pub keep_alive: bool,
+    /// SSE resume cursor: the last event id the client saw on a
+    /// previous stream of this resource (`Last-Event-ID` header).
+    pub last_event_id: Option<u64>,
 }
 
 const KNOWN_METHODS: &[&str] = &["GET", "POST", "HEAD", "PUT", "DELETE", "OPTIONS", "PATCH"];
@@ -85,6 +89,7 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<Option<HttpRequest>, A
     }
     let mut keep_alive = version != "HTTP/1.0";
     let mut content_length = 0usize;
+    let mut last_event_id: Option<u64> = None;
     loop {
         let mut h = String::new();
         match reader.read_line(&mut h) {
@@ -112,6 +117,10 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<Option<HttpRequest>, A
                     keep_alive = true;
                 }
             }
+            // Unparsable ids are ignored (the stream restarts from 0,
+            // which is correct if duplicates are acceptable — and they
+            // are, since event ids make replay idempotent client-side).
+            "last-event-id" => last_event_id = value.parse().ok(),
             _ => {}
         }
     }
@@ -124,7 +133,7 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<Option<HttpRequest>, A
             .read_exact(&mut body)
             .map_err(|e| ApiError::invalid_request(format!("short body: {e}")))?;
     }
-    Ok(Some(HttpRequest { method, path, body, keep_alive }))
+    Ok(Some(HttpRequest { method, path, body, keep_alive, last_event_id }))
 }
 
 fn status_reason(status: u16) -> &'static str {
@@ -206,6 +215,9 @@ struct ServerCtx {
     model: String,
     /// Shared with the engine: readiness inputs + the drain flag.
     health: Arc<HealthState>,
+    /// Journal-backed session mirror (`None` when `journal_dir` is
+    /// unset): serves `/v1/sessions/{id}` and SSE stream resume.
+    sessions: Option<SessionMirror>,
 }
 
 enum EngineMsg {
@@ -246,12 +258,26 @@ pub fn serve(mut engine: Engine, addr: &str, stop: Arc<AtomicBool>) -> Result<()
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     crate::info!("serving on http://{addr}");
+    // Re-admit unfinished journaled sessions before opening the accept
+    // loop: recovered decode continues exactly where the previous
+    // process stopped, and clients re-attach via the resume API. The
+    // report's handles stay alive for the life of the serve loop so
+    // terminal events are never sent into a closed channel.
+    let recovered = engine.recover();
+    if !recovered.sessions.is_empty() {
+        crate::info!(
+            "recovered {} session(s) from the journal ({} tokens replayed)",
+            recovered.sessions.len(),
+            recovered.replayed_tokens
+        );
+    }
     let ctx = Arc::new(ServerCtx {
         queue: Channel::new(),
         metrics: engine.metrics.clone(),
         cfg: engine.cfg.clone(),
         model: engine.rt.config.name.clone(),
         health: engine.health.clone(),
+        sessions: engine.journal_mirror(),
     });
     #[cfg(unix)]
     sigterm::install();
@@ -305,6 +331,9 @@ pub fn serve(mut engine: Engine, addr: &str, stop: Arc<AtomicBool>) -> Result<()
                 if deadline_hit && !engine.idle() {
                     engine.fail_all("server draining: drain deadline exceeded");
                 }
+                // Final checkpoint: a planned restart recovers with
+                // zero journal replay.
+                engine.checkpoint_now();
                 engine
                     .metrics
                     .observe("drain_duration_ms", t0.elapsed().as_secs_f64() * 1e3);
@@ -346,7 +375,9 @@ pub fn serve(mut engine: Engine, addr: &str, stop: Arc<AtomicBool>) -> Result<()
         reply.send(Err(ApiError::unavailable("server shutting down")));
     }
     engine.fail_all("server shutting down");
+    engine.checkpoint_now();
     let _ = accept_thread.join();
+    drop(recovered);
     Ok(())
 }
 
@@ -435,6 +466,9 @@ fn handle_request(
         }
         ("POST", "/v1/completions") => handle_completions(stream, &req.body, ctx),
         ("POST", "/generate") => handle_generate_legacy(stream, &req.body, ctx),
+        (m, p) if p.starts_with("/v1/sessions/") => {
+            handle_session_route(stream, m, p, req.last_event_id, ctx)
+        }
         (m, p) if ROUTES.iter().any(|&(_, rp)| rp == p) => {
             write_error(stream, &ApiError::method_not_allowed(m), true)?;
             Ok(true)
@@ -444,6 +478,133 @@ fn handle_request(
             Ok(true)
         }
     }
+}
+
+/// `GET /v1/sessions/{id}` (journaled status) and
+/// `GET /v1/sessions/{id}/stream` (SSE replay with `Last-Event-ID`
+/// resume). Both are served from the journal's in-memory mirror, so
+/// they work for live sessions, finished-but-retained sessions, and
+/// sessions recovered after a crash. 404 when journaling is disabled.
+fn handle_session_route(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    last_event_id: Option<u64>,
+    ctx: &ServerCtx,
+) -> Result<bool> {
+    if method != "GET" {
+        write_error(stream, &ApiError::method_not_allowed(method), true)?;
+        return Ok(true);
+    }
+    let Some(sessions) = &ctx.sessions else {
+        write_error(stream, &ApiError::not_found(path), true)?;
+        return Ok(true);
+    };
+    let rest = &path["/v1/sessions/".len()..];
+    let (id_str, want_stream) = match rest.strip_suffix("/stream") {
+        Some(s) => (s, true),
+        None => (rest, false),
+    };
+    let Ok(id) = id_str.parse::<u64>() else {
+        write_error(stream, &ApiError::not_found(path), true)?;
+        return Ok(true);
+    };
+    let Some(st) = sessions.get(id) else {
+        write_error(stream, &ApiError::not_found(path), true)?;
+        return Ok(true);
+    };
+    if want_stream {
+        return stream_session_replay(stream, ctx, sessions, id, last_event_id);
+    }
+    let status = st.finish.map(|t| t.as_str()).unwrap_or("active");
+    let body = Json::obj()
+        .with("id", id as i64)
+        .with("status", status)
+        .with("prompt_tokens", st.admit.prompt.len())
+        .with("tokens", st.tokens.len())
+        .with("text", tokenizer::decode(&st.tokens).as_str())
+        .to_string();
+    write_response(stream, 200, "application/json", body.as_bytes(), true)?;
+    Ok(true)
+}
+
+/// SSE replay of a journaled session: frames every token past the
+/// client's `Last-Event-ID` cursor immediately, then follows the live
+/// mirror until the session reaches a terminal state (or no progress
+/// happens for ~30 s). Event ids are 0-based token indices, so a
+/// client reconnecting with `Last-Event-ID: n` receives token n+1
+/// onward — no gaps, no duplicates.
+fn stream_session_replay(
+    stream: &mut TcpStream,
+    ctx: &ServerCtx,
+    sessions: &SessionMirror,
+    id: u64,
+    last_event_id: Option<u64>,
+) -> Result<bool> {
+    if stream
+        .write_all(
+            b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+        )
+        .and_then(|_| stream.flush())
+        .is_err()
+    {
+        ctx.metrics.inc("stream_disconnects");
+        return Ok(false);
+    }
+    let rid = format!("cmpl-{id}");
+    let created = api::unix_now();
+    // Index of the next token to send.
+    let mut cursor = last_event_id.map(|n| n as usize + 1).unwrap_or(0);
+    let mut pending_bytes: Vec<u8> = Vec::new();
+    let idle_cap = std::time::Duration::from_secs(30);
+    let mut last_progress = std::time::Instant::now();
+    loop {
+        let Some(st) = sessions.get(id) else { break };
+        let mut wrote = false;
+        while cursor < st.tokens.len() {
+            pending_bytes.push(st.tokens[cursor].clamp(0, 255) as u8); // byte-level vocab
+            let text = take_utf8_prefix(&mut pending_bytes);
+            let frame = api::sse_event_id(
+                cursor as u64,
+                &api::chunk_json(&rid, &ctx.model, created, &text, None, None),
+            );
+            if stream.write_all(frame.as_bytes()).is_err() {
+                ctx.metrics.inc("stream_disconnects");
+                return Ok(false);
+            }
+            cursor += 1;
+            wrote = true;
+        }
+        if wrote {
+            let _ = stream.flush();
+            last_progress = std::time::Instant::now();
+        }
+        if let Some(fin) = st.finish {
+            let tail = if pending_bytes.is_empty() {
+                String::new()
+            } else {
+                String::from_utf8_lossy(&pending_bytes).into_owned()
+            };
+            let frame = api::sse_event(&api::chunk_json(
+                &rid,
+                &ctx.model,
+                created,
+                &tail,
+                Some(fin.as_str()),
+                None,
+            ));
+            let _ = stream
+                .write_all(frame.as_bytes())
+                .and_then(|_| stream.write_all(api::SSE_DONE.as_bytes()))
+                .and_then(|_| stream.flush());
+            break;
+        }
+        if last_progress.elapsed() >= idle_cap {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    Ok(false)
 }
 
 /// Run one submit on the engine and deliver the handle. If the
@@ -598,10 +759,15 @@ fn stream_completion(
     loop {
         let Some(ev) = handle.recv() else { break };
         let frame = match ev {
-            SessionEvent::Token { token, .. } => {
+            SessionEvent::Token { token, index, .. } => {
                 pending_bytes.push(token.clamp(0, 255) as u8); // byte-level vocab
                 let text = take_utf8_prefix(&mut pending_bytes);
-                api::sse_event(&api::chunk_json(id, &ctx.model, created, &text, None, None))
+                // Id-carrying frames make `Last-Event-ID` resume
+                // meaningful after a dropped live stream.
+                api::sse_event_id(
+                    index as u64,
+                    &api::chunk_json(id, &ctx.model, created, &text, None, None),
+                )
             }
             SessionEvent::Done { usage, finish } => {
                 // Flush any buffered partial character into the
@@ -762,6 +928,22 @@ mod tests {
             .unwrap()
             .unwrap();
         assert!(r.keep_alive);
+    }
+
+    #[test]
+    fn last_event_id_header_parses() {
+        let r = parse(b"GET /v1/sessions/3/stream HTTP/1.1\r\nLast-Event-ID: 41\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.last_event_id, Some(41));
+        // Case-insensitive, like every other header.
+        let r = parse(b"GET /x HTTP/1.1\r\nlast-event-id: 7\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.last_event_id, Some(7));
+        // Garbage ids are ignored, not fatal: replay restarts from 0.
+        let r = parse(b"GET /x HTTP/1.1\r\nLast-Event-ID: nope\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.last_event_id, None);
+        let r = parse(b"GET /x HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.last_event_id, None);
     }
 
     #[test]

@@ -1,0 +1,95 @@
+//! Crash-safe filesystem helpers.
+//!
+//! Report artifacts and checkpoints must never be observable
+//! half-written: a crash between `create` and the final `write` would
+//! otherwise leave truncated JSON/CSV that downstream tooling parses
+//! as corrupt (or worse, as valid-but-wrong). `write_atomic` stages
+//! the bytes in a hidden temp file in the same directory, fsyncs, then
+//! renames over the target — readers see either the old file or the
+//! complete new one, never a prefix.
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::Path;
+
+fn stage_and_rename(tmp: &Path, path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let mut f = File::create(tmp)?;
+    f.write_all(bytes)?;
+    f.sync_data()?;
+    fs::rename(tmp, path)?;
+    Ok(())
+}
+
+/// Write `bytes` to `path` atomically (write temp + fsync + rename).
+/// The temp file lives in the target's directory so the rename never
+/// crosses a filesystem boundary; it is cleaned up on failure. The
+/// directory entry is fsynced best-effort so the rename itself is
+/// durable, not just the data.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> io::Result<()> {
+    let path = path.as_ref();
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("out");
+    let tmp = path.with_file_name(format!(".{name}.{}.tmp", std::process::id()));
+    if let Err(e) = stage_and_rename(&tmp, path, bytes) {
+        let _ = fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Some(dir) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("radar-fsio-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_fresh_file() {
+        let d = tmp_dir("fresh");
+        let target = d.join("report.json");
+        write_atomic(&target, b"{\"ok\":true}").unwrap();
+        assert_eq!(fs::read(&target).unwrap(), b"{\"ok\":true}");
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn replaces_existing_file_completely() {
+        let d = tmp_dir("replace");
+        let target = d.join("report.json");
+        fs::write(&target, b"old contents that are much longer than the new ones").unwrap();
+        write_atomic(&target, b"new").unwrap();
+        assert_eq!(fs::read(&target).unwrap(), b"new", "no stale tail from the old file");
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn leaves_no_temp_files_behind() {
+        let d = tmp_dir("tmpclean");
+        write_atomic(d.join("a.json"), b"x").unwrap();
+        let leftovers: Vec<_> = fs::read_dir(&d)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp file survived the rename");
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn failure_on_missing_dir_cleans_up() {
+        let d = tmp_dir("nodir");
+        let target = d.join("missing").join("report.json");
+        assert!(write_atomic(&target, b"x").is_err());
+        let _ = fs::remove_dir_all(&d);
+    }
+}

@@ -114,7 +114,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; emitting one
+                    // would produce unparsable output. Null is the
+                    // conventional lossy stand-in.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{}", n));
@@ -529,6 +534,52 @@ mod tests {
         // Depth is tracked, not just counted: siblings don't accumulate.
         let wide = format!("[{}1]", "[1],".repeat(1000));
         assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn control_characters_roundtrip() {
+        // Every C0 control character escapes on write and parses back
+        // to the identical string (torn report files aside, this is
+        // what keeps journal/report text safe to re-ingest).
+        let src: String = (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let j = Json::Str(src.clone());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.as_str(), Some(src.as_str()));
+        // Spot-check the named escapes take their short forms.
+        assert_eq!(Json::Str("\n\t\r".into()).to_string(), r#""\n\t\r""#);
+        assert_eq!(Json::Str("\u{1}".into()).to_string(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn long_strings_roundtrip() {
+        // 1 MiB of mixed ASCII/multibyte text, with embedded quotes
+        // and backslashes every 1000 chars.
+        let mut src = String::with_capacity(1 << 20);
+        let mut i = 0usize;
+        while src.len() < (1 << 20) {
+            src.push_str("abcé中");
+            if i % 1000 == 0 {
+                src.push('"');
+                src.push('\\');
+            }
+            i += 1;
+        }
+        let j = Json::Str(src.clone());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.as_str(), Some(src.as_str()));
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = Json::obj().with("x", bad);
+            assert_eq!(j.to_string(), r#"{"x":null}"#);
+            // The output stays parsable (a bare NaN literal would not).
+            let back = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(back.get("x"), Some(&Json::Null));
+        }
+        // Finite values are untouched.
+        assert_eq!(Json::obj().with("x", 1.5f64).to_string(), r#"{"x":1.5}"#);
     }
 
     #[test]

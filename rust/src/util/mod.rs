@@ -2,6 +2,7 @@
 //! serde, clap, criterion, proptest — are unavailable offline).
 
 pub mod cli;
+pub mod fsio;
 pub mod json;
 pub mod minitest;
 pub mod prng;
